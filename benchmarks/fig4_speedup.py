@@ -1,0 +1,35 @@
+"""Fig. 4: theoretical speedup of MPF nets vs input size & batch size —
+reproduces the paper's finding that S=1 wins for >=2-pool networks while
+larger batches can win with a single pool layer."""
+
+from __future__ import annotations
+
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import planner
+from repro.core.hw import TPU_V5E
+
+from .common import emit
+
+ONE_POOL = ConvNetConfig(
+    "one-pool", 1,
+    (L("conv", 5, 80), L("pool", 2), L("conv", 5, 80), L("conv", 5, 80)),
+)
+TWO_POOL = ConvNetConfig(
+    "two-pool", 1,
+    (L("conv", 5, 80), L("pool", 2), L("conv", 5, 80), L("pool", 2), L("conv", 5, 80)),
+)
+
+
+def main() -> None:
+    for net in (ONE_POOL, TWO_POOL):
+        rows = []
+        for S in (1, 2, 4, 8):
+            p = planner.plan_single(net, TPU_V5E, batches=(S,))
+            rows.append((S, p.throughput if p else 0.0, p.peak_bytes if p else 0))
+        best = max(rows, key=lambda r: r[1])[0]
+        detail = ";".join(f"S{S}={t:.3e}@{b / 2**30:.2f}GiB" for S, t, b in rows)
+        emit(f"fig4.{net.name}", 0.0, f"best_S={best};{detail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Fig. 5: throughput vs input image size (single-worker search)."""
+
+from __future__ import annotations
+
+from repro.configs import ZNNI_NETS
+from repro.core import planner
+from repro.core.hw import TPU_V5E
+
+from .common import emit
+
+
+def main() -> None:
+    for name, net in ZNNI_NETS.items():
+        pts = []
+        for m in (1, 2, 4, 8, 16, 24, 32):
+            best = None
+            p = planner.plan_single(net, TPU_V5E, batches=(1,), max_m=m)
+            if p:
+                pts.append(f"n{p.n_in}={p.throughput:.3e}")
+        emit(f"fig5.{name}", 0.0, ";".join(pts))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 7: throughput vs memory consumed, for the four strategies —
+single-chip ("GPU-only"), streamed ("GPU + host RAM"), pipeline2
+("CPU-GPU"), spatial (beyond-paper halo sharding)."""
+
+from __future__ import annotations
+
+from repro.configs import ZNNI_NETS
+from repro.core import planner
+from repro.core.hw import TPU_V5E
+
+from .common import emit
+
+
+def main() -> None:
+    for name, net in ZNNI_NETS.items():
+        plans = planner.plan_all_strategies(net, TPU_V5E, chips=256)
+        parts = []
+        for strat in ("single", "streamed", "pipeline2", "spatial"):
+            p = plans[strat]
+            if p:
+                parts.append(f"{strat}:mem={p.peak_bytes / 2**30:.2f}GiB,thr={p.throughput:.3e}")
+        emit(f"fig7.{name}", 0.0, ";".join(parts))
+
+
+if __name__ == "__main__":
+    main()

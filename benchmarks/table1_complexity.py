@@ -1,0 +1,41 @@
+"""Table I: layer computational complexity — measured time of each
+primitive on a small layer vs the analytic FLOP model (the constant-free
+ratios are what the paper's table encodes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, direct_conv, fft_conv, mpf
+
+from .common import emit, time_call
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    S, f, fp, n, k = 1, 8, 8, 24, 5
+    x = jnp.asarray(rng.normal(size=(S, f, n, n, n)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(fp, f, k, k, k)).astype(np.float32))
+
+    prims = {
+        "direct": lambda: direct_conv.direct_conv(x, w),
+        "fft_data": lambda: fft_conv.fft_conv_data_parallel(x, w),
+        "fft_task": lambda: fft_conv.fft_conv_task_parallel(x, w),
+    }
+    for name, fn in prims.items():
+        t = time_call(fn)
+        flops = cost_model.conv_cost(name, S, f, fp, (n, n, n), k).flops
+        emit(f"table1.conv.{name}", t, f"analytic_flops={flops:.3e}")
+
+    xp = jnp.asarray(rng.normal(size=(S, f, 23, 23, 23)).astype(np.float32))
+    t = time_call(lambda: mpf.mpf(xp, 2))
+    emit("table1.mpf.p2", t, f"analytic_flops={cost_model.mpf_cost(S, f, (23,)*3, 2).flops:.3e}")
+    xq = jnp.asarray(rng.normal(size=(S, f, 24, 24, 24)).astype(np.float32))
+    t = time_call(lambda: mpf.max_pool3d(xq, 2))
+    emit("table1.pool.p2", t, f"analytic_flops={cost_model.pool_cost(S, f, (24,)*3, 2).flops:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table II: memory required by each conv primitive (peak live bytes of our
+implementations' stages, the TPU translation of the paper's formulas)."""
+
+from __future__ import annotations
+
+from repro.core import cost_model
+
+from .common import emit
+
+
+def main() -> None:
+    S, f, fp, n, k = 1, 80, 80, 128, 5
+    for prim in cost_model.CONV_PRIMS:
+        c = cost_model.conv_cost(prim, S, f, fp, (n, n, n), k)
+        emit(
+            f"table2.mem.{prim}", 0.0,
+            f"peak_GiB={c.peak_bytes / 2**30:.3f};hbm_GiB={c.hbm_bytes / 2**30:.3f}",
+        )
+    # the paper's qualitative orderings
+    d = cost_model.conv_cost("direct", S, f, fp, (n,) * 3, k)
+    a1 = cost_model.conv_cost("fft_data", S, f, fp, (n,) * 3, k)
+    a2 = cost_model.conv_cost("fft_task", S, f, fp, (n,) * 3, k)
+    assert d.peak_bytes < a1.peak_bytes < a2.peak_bytes, "Table II ordering"
+    emit("table2.ordering", 0.0, "direct<fft_data<fft_task=OK")
+
+
+if __name__ == "__main__":
+    main()

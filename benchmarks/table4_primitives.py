@@ -1,0 +1,25 @@
+"""Table IV: optimal per-layer primitive choice + optimal input size, per
+benchmark net — the planner's answer on TPU v5e (the paper's Table IV is
+the same search on a Titan X)."""
+
+from __future__ import annotations
+
+from repro.configs import ZNNI_NETS
+from repro.core import planner
+from repro.core.hw import TPU_V5E
+
+from .common import emit
+
+
+def main() -> None:
+    for name, net in ZNNI_NETS.items():
+        p = planner.plan_single(net, TPU_V5E)
+        prims = "|".join(c.prim for c in p.choices)
+        emit(
+            f"table4.{name}", 0.0,
+            f"n_in={p.n_in};S={p.batch};layers={prims}",
+        )
+
+
+if __name__ == "__main__":
+    main()

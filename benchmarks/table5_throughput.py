@@ -1,0 +1,75 @@
+"""Table V: throughput of the four execution strategies vs the naive
+baseline, per net.
+
+Two layers of evidence:
+  * analytic (TPU v5e model): voxels/s of single / streamed / pipeline2 /
+    spatial / baseline_naive — the Table V columns.
+  * measured (this CPU): a reduced-channel n337 run with MPF vs the naive
+    all-subsamplings execution, confirming the MPF win on real wall-clock.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ZNNI_NETS
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet, planner
+from repro.core.hw import TPU_V5E
+
+from .common import emit, time_call
+
+
+def analytic() -> None:
+    for name, net in ZNNI_NETS.items():
+        plans = planner.plan_all_strategies(net, TPU_V5E, chips=256)
+        parts = []
+        for strat in ("baseline_naive", "single", "streamed", "pipeline2", "spatial"):
+            p = plans[strat]
+            parts.append(f"{strat}={p.throughput:.3e}" if p else f"{strat}=inf")
+        emit(f"table5.analytic.{name}", 0.0, ";".join(parts))
+
+
+def measured() -> None:
+    net = ConvNetConfig(
+        "n337-small", 1,
+        (L("conv", 2, 4), L("pool", 2), L("conv", 3, 4), L("pool", 2),
+         L("conv", 3, 4), L("pool", 2), L("conv", 3, 2)),
+    )
+    rng = np.random.default_rng(0)
+    params = convnet.init_params(jax.random.PRNGKey(0), net)
+    m = 2
+    n_mpf = net.valid_input_size(m)
+    x = jnp.asarray(rng.normal(size=(1, 1, n_mpf, n_mpf, n_mpf)).astype(np.float32))
+    prims_mpf = ["fft_task" if l.kind == "conv" else "mpf" for l in net.layers]
+    run_mpf = jax.jit(lambda a: convnet.apply_plan(params, net, a, prims_mpf))
+    t_mpf = time_call(run_mpf, x)
+    vox_mpf = (m * net.total_pooling()) ** 3
+
+    # naive: one subsampling per run; dense output needs P^3 runs
+    n_pl = m
+    for layer in reversed(net.layers):
+        n_pl = n_pl + layer.size - 1 if layer.kind == "conv" else n_pl * layer.size
+    xp = jnp.asarray(rng.normal(size=(1, 1, n_pl, n_pl, n_pl)).astype(np.float32))
+    prims_pool = ["fft_task" if l.kind == "conv" else "pool" for l in net.layers]
+    run_naive = jax.jit(lambda a: convnet.apply_plan(params, net, a, prims_pool))
+    t_naive = time_call(run_naive, xp)
+    vox_naive = float(m**3)  # per run
+
+    thr_mpf = vox_mpf / (t_mpf * 1e-6)
+    thr_naive = vox_naive / (t_naive * 1e-6)
+    emit(
+        "table5.measured.n337_small", t_mpf,
+        f"mpf_vox_s={thr_mpf:.3e};naive_vox_s={thr_naive:.3e};speedup={thr_mpf / thr_naive:.1f}",
+    )
+
+
+def main() -> None:
+    analytic()
+    measured()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Train a 3D boundary-segmentation ConvNet (the paper's workload family)
+for a few hundred steps on synthetic EM-like volumes.
+
+The target is a synthetic "membrane" indicator (thresholded smoothed
+noise); loss is voxelwise sigmoid BCE on the dense sliding-window output.
+Loss decreasing over ~200 steps demonstrates the training substrate
+(optimizer, data pipeline, checkpointing) end-to-end.
+
+Run:  PYTHONPATH=src python examples/train_segmentation.py --steps 200
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet
+from repro.data import SyntheticVolumePipeline, VolumePipelineConfig
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    net = ConvNetConfig(
+        "seg-net", 1, (L("conv", 3, 8), L("conv", 3, 8), L("conv", 3, 1))
+    )
+    fov = net.field_of_view()
+    n_in = 16
+    n_out = n_in - fov + 1
+    params = convnet.init_params(jax.random.PRNGKey(0), net)
+    ocfg = AdamWConfig(lr=args.lr)
+    opt = init_state(params, ocfg)
+    pipe = SyntheticVolumePipeline(VolumePipelineConfig(patch=n_in, batch=2))
+
+    def labels_of(x):
+        # membrane-ish target: |smoothed voxel| above threshold
+        core = x[:, :, fov // 2 : fov // 2 + n_out,
+                 fov // 2 : fov // 2 + n_out, fov // 2 : fov // 2 + n_out]
+        return (jnp.abs(core) > 0.4).astype(jnp.float32)
+
+    def loss_fn(p, x, y):
+        logits = convnet.apply_plan(p, net, x, ["direct"] * 3)
+        z = logits.astype(jnp.float32)
+        return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o = apply_updates(p, g, o, ocfg)
+        return p, o, l
+
+    losses = []
+    for s in range(args.steps):
+        x = jnp.asarray(pipe.batch_at(s))
+        y = labels_of(x)
+        params, opt, l = step(params, opt, x, y)
+        losses.append(float(l))
+        if s % 25 == 0:
+            print(f"step {s:4d}  bce {losses[-1]:.4f}")
+    print(f"first-10 mean {np.mean(losses[:10]):.4f} -> last-10 mean {np.mean(losses[-10:]):.4f}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

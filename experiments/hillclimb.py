@@ -1,0 +1,64 @@
+"""Hillclimb driver: run a dry-run probe cell with named override sets and
+record tagged JSONs for EXPERIMENTS.md §Perf.
+
+Usage (requires the probe env flag):
+  REPRO_UNROLL_INNER=1 PYTHONPATH=src python experiments/hillclimb.py \
+      --arch qwen2-vl-7b --shape prefill_32k --mesh single \
+      --tag h1_padheads --set pad_q_groups=8
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    " --xla_cpu_strict_dot_conv_math=true"
+    " --xla_allow_excess_precision=false"
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.launch.dryrun import probe_cell, run_cell  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun")
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[], dest="sets")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the full-depth compile (memory numbers)")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.sets)
+    rec = probe_cell(args.arch, args.shape, args.mesh, overrides=overrides)
+    fname = os.path.join(OUT, f"{args.tag}__{args.arch}__{args.shape}__{args.mesh}.json")
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    if args.full:
+        recf = run_cell(args.arch, args.shape, args.mesh, overrides=overrides)
+        with open(fname.replace(".json", "__full.json"), "w") as f:
+            json.dump(recf, f, indent=2, default=str)
+    print(f"wrote {fname}")
+
+
+if __name__ == "__main__":
+    main()

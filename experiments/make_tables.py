@@ -1,0 +1,95 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun")
+
+
+def load(tag="baseline"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DIR, f"{tag}__*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs, mesh="single", probes=None):
+    """Roofline per cell.  When `probes` (trip-count-corrected records) are
+    given, terms come from the probe and memory columns from the baseline."""
+    by_cell = {}
+    if probes:
+        by_cell = {(p["arch"], p["shape"], p["mesh"]): p for p in probes}
+    rows = []
+    header = (
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+        "args/chip (GiB) | temp/chip (GiB) | useful FLOPs ratio |"
+    )
+    rows.append(header)
+    rows.append("|" + "---|" * 9)
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        cell = f"| {r['arch']} | {r['shape']} "
+        if "skipped" in r:
+            rows.append(cell + "| — | — | — | skipped (full attention @500k) | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(cell + f"| ERROR {r['error'][:40]} |")
+            continue
+        p = by_cell.get((r["arch"], r["shape"], r["mesh"]))
+        t = (p or r)["roofline"]
+        m = r["mem"]
+        rows.append(
+            cell
+            + f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} | {t['collective_s']:.2e} "
+            f"| **{t['dominant']}** | {fmt_bytes(m['argument_bytes'])} "
+            f"| {fmt_bytes(m['temp_bytes'])} | {t['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = [
+        "| arch | shape | mesh | chips | compiles | fits HBM (resident) | "
+        "FLOPs/chip | bytes/chip | coll bytes/chip | compile (s) |",
+        "|" + "---|" * 10,
+    ]
+    for r in recs:
+        base = f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('chips', '—')} "
+        if "skipped" in r:
+            rows.append(base + "| skip | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(base + f"| **FAIL** | — | — | — | — | — |")
+            continue
+        m = r["mem"]
+        resident = m["argument_bytes"]
+        fits = "yes" if resident < 16 * 2**30 else "NO"
+        c = r["cost"]
+        rows.append(
+            base + f"| yes | {fits} ({fmt_bytes(resident)} GiB) "
+            f"| {c.get('flops', 0):.2e} | {c.get('bytes accessed', 0):.2e} "
+            f"| {r['collectives'].get('total', 0):.2e} | {r.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    recs = load(tag)
+    probes = load("probe")
+    print("## Roofline (single-pod, 256 chips; trip-count-corrected probes)\n")
+    print(roofline_table(recs, "single", probes=probes))
+    print("\n## Roofline (multi-pod, 512 chips)\n")
+    print(roofline_table(recs, "multi", probes=probes))
+    print("\n## Dry-run (all cells)\n")
+    print(dryrun_table(recs))

@@ -1,0 +1,3 @@
+"""Sharded atomic checkpointing."""
+
+from .ckpt import latest_step, prune_old, restore, save  # noqa: F401

@@ -1,0 +1,121 @@
+"""Sharded, atomic, async checkpointing (msgpack + raw shard payloads).
+
+Layout:  <dir>/step_<N>/          (atomic: written as .tmp then renamed)
+             manifest.msgpack     tree structure, shapes, dtypes
+             arrays.npz           leaf payloads (host-gathered)
+
+For multi-host fleets each host would write only its addressable shards;
+in this single-process container the full array is written.  Restore takes
+target NamedShardings so the same checkpoint restores onto ANY mesh
+(elastic remesh — distributed/fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import uuid
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any, *, async_: bool = False) -> threading.Thread | None:
+    """Write checkpoint for `step`.  async_=True returns the writer thread."""
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(l) for l in leaves]
+
+    def write():
+        final = os.path.join(path, f"step_{step:08d}")
+        # unique tmp dir: concurrent writers of the same step (async + final
+        # sync save) must not collide; first rename wins, the rest discard.
+        tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(host),
+            "dtypes": [str(h.dtype) for h in host],
+            "shapes": [list(h.shape) for h in host],
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        # store raw bytes: numpy's npz cannot round-trip ml_dtypes (bf16
+        # degrades to void); the manifest carries dtype/shape for restore.
+        payload = [
+            np.ascontiguousarray(h).reshape(-1).view(np.uint8) for h in host
+        ]
+        np.savez(os.path.join(tmp, "arrays.npz"), *payload)
+        try:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except OSError:
+            if os.path.isdir(final):  # another writer won the race
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                raise
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(path)
+        if d.startswith("step_") and ".tmp" not in d
+    ]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, tree_like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of `tree_like`; device_put onto
+    `shardings` when given (any mesh — elastic)."""
+    final = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with np.load(os.path.join(final, "arrays.npz")) as z:
+        raw = [z[k] for k in z.files]
+    host = [
+        r.view(np.dtype(jnp.dtype(dt))).reshape(shape)
+        for r, dt, shape in zip(raw, manifest["dtypes"], manifest["shapes"])
+    ]
+    leaves, treedef = _flatten(tree_like)
+    if len(host) != len(leaves):
+        raise ValueError(f"checkpoint has {len(host)} leaves, expected {len(leaves)}")
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh")
+        )
+        host = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
+    else:
+        host = [jnp.asarray(h) for h in host]
+    return jax.tree_util.tree_unflatten(treedef, host)
+
+
+def prune_old(path: str, keep: int = 3) -> None:
+    if not os.path.isdir(path):
+        return
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(path)
+        if d.startswith("step_") and ".tmp" not in d
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"))

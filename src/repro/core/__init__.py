@@ -1,0 +1,28 @@
+"""The paper's primary contribution (ZNNi) as composable JAX modules.
+
+pruned_fft   — C1: pruned forward/inverse FFTs
+fft_conv     — C2: FFT-based conv layer (data- & task-parallel variants)
+direct_conv  — C3: direct conv layer
+mpf          — C4: max-pooling fragments + recombination + naive baseline
+planner      — C5: memory-constrained throughput maximization (+ strategies)
+cost_model   — Tables I/II analytics feeding the planner & benchmarks
+sublayer     — C6: GPU+host-RAM analogue (chunked / mesh-gathered conv)
+pipeline     — C7: two-stage producer-consumer pipeline (pod axis)
+convnet      — net assembly, plan execution, dense sliding-window oracle
+distributed_inference — §II patch distribution + beyond-paper halo sharding
+hw           — hardware model constants (TPU v5e target)
+"""
+
+from . import (  # noqa: F401
+    convnet,
+    cost_model,
+    direct_conv,
+    distributed_inference,
+    fft_conv,
+    hw,
+    mpf,
+    pipeline,
+    planner,
+    pruned_fft,
+    sublayer,
+)

@@ -1,0 +1,144 @@
+"""ConvNet assembly: run a ZNNi net under a planner Plan (ZNNi §VI).
+
+Three executors:
+
+* ``apply_plan``           — run the net with the per-layer primitives a
+                             Plan chose (MPF fragments multiply the batch).
+* ``apply_dense_reference``— the dense sliding-window oracle: dilated convs
+                             + dilated max filters ("max filtering" /
+                             "strided kernels" — the semantics MPF must
+                             reproduce).  Only feasible for tiny inputs.
+* ``init_params``          — He-initialized weights/biases.
+
+ReLU after every conv except the last (paper §VI-B: "rectified linear
+transfer function applied after each convolutional layer"; the final layer
+feeds the loss/decision and is kept linear here).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ConvNetConfig
+from .direct_conv import direct_conv
+from .fft_conv import fft_conv_data_parallel, fft_conv_task_parallel
+from .mpf import max_pool3d, mpf, recombine_fragments
+from .planner import Plan
+
+
+def init_params(key, net: ConvNetConfig, dtype=jnp.float32) -> List:
+    params = []
+    f = net.in_channels
+    for layer in net.layers:
+        if layer.kind == "conv":
+            key, kw = jax.random.split(key)
+            fan_in = f * layer.size**3
+            w = jax.random.normal(
+                kw, (layer.out_channels, f, layer.size, layer.size, layer.size), dtype
+            ) * np.sqrt(2.0 / fan_in)
+            b = jnp.zeros((layer.out_channels,), dtype)
+            params.append((w, b))
+            f = layer.out_channels
+        else:
+            params.append(None)
+    return params
+
+
+def _conv_prim(prim: str, x, w, b, use_pallas: bool):
+    if prim == "direct":
+        return direct_conv(x, w, b, use_pallas=use_pallas)
+    if prim == "fft_data":
+        return fft_conv_data_parallel(x, w, b, use_pallas=use_pallas)
+    if prim in ("fft_task", "fft_cached"):
+        return fft_conv_task_parallel(x, w, b, use_pallas=use_pallas)
+    raise ValueError(prim)
+
+
+def apply_plan(
+    params,
+    net: ConvNetConfig,
+    x: jnp.ndarray,
+    plan_prims: Sequence[str],
+    *,
+    use_pallas: bool = False,
+    recombine: bool = True,
+) -> jnp.ndarray:
+    """Run the net; plan_prims[i] is the primitive name for layer i.
+
+    x (S, in_ch, n³).  With MPF layers the batch grows by p³ each pool; if
+    ``recombine``, fragments are folded back into the dense sliding-window
+    output (S, out_ch, dense³).
+    """
+    S = x.shape[0]
+    n_layers = len(net.layers)
+    pools: List[int] = []
+    last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    for i, layer in enumerate(net.layers):
+        prim = plan_prims[i]
+        if layer.kind == "conv":
+            w, b = params[i]
+            x = _conv_prim(prim, x, w, b, use_pallas)
+            if i != last_conv:
+                x = jax.nn.relu(x)
+        else:
+            if prim == "mpf":
+                x = mpf(x, layer.size, use_pallas=use_pallas)
+                pools.append(layer.size)
+            elif prim == "pool":
+                x = max_pool3d(x, layer.size)
+            else:
+                raise ValueError(prim)
+    if recombine and pools:
+        x = recombine_fragments(x, pools, S)
+    return x
+
+
+def apply_with_plan(params, net: ConvNetConfig, x, plan: Plan, **kw):
+    return apply_plan(params, net, x, [c.prim for c in plan.choices], **kw)
+
+
+# ---------------------------------------------------------------------------
+# Dense sliding-window oracle (dilated convolution semantics)
+# ---------------------------------------------------------------------------
+
+
+def _dilated_max_filter(x: jnp.ndarray, p: int, d: int) -> jnp.ndarray:
+    """max over window of p taps spaced d apart, stride 1, per axis."""
+    n = x.shape[-3:]
+    out = tuple(ni - (p - 1) * d for ni in n)
+    y = jnp.full(x.shape[:-3] + out, -jnp.inf, x.dtype)
+    for ox, oy, oz in itertools.product(range(p), repeat=3):
+        y = jnp.maximum(
+            y,
+            x[..., ox * d : ox * d + out[0], oy * d : oy * d + out[1], oz * d : oz * d + out[2]],
+        )
+    return y
+
+
+def apply_dense_reference(params, net: ConvNetConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense sliding-window output via dilated convs/max filters (oracle)."""
+    d = 1
+    last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    for i, layer in enumerate(net.layers):
+        if layer.kind == "conv":
+            w, b = params[i]
+            x = lax.conv_general_dilated(
+                x.astype(jnp.float32),
+                w.astype(jnp.float32),
+                window_strides=(1, 1, 1),
+                padding="VALID",
+                rhs_dilation=(d, d, d),
+                dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+            ) + b.reshape(1, -1, 1, 1, 1)
+            if i != last_conv:
+                x = jax.nn.relu(x)
+        else:
+            x = _dilated_max_filter(x, layer.size, d)
+            d *= layer.size
+    return x

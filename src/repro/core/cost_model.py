@@ -1,0 +1,190 @@
+"""Analytic layer cost model (ZNNi Tables I & II, adapted to the TPU model).
+
+Units: FLOPs, bytes.  All formulas are per *layer invocation* on a batch of
+S inputs of f images sized n³ (isotropic shorthand; tuples accepted).
+
+The paper's Table I counts one multiply-add as one operation for direct
+convolution and uses `C n log n` for FFT passes; we count 2 FLOPs per MAC
+and use C≈5 (split-radix), so absolute numbers differ from the paper by a
+constant factor while all *ratios* (the paper's actual claims) match.
+
+Table II's memory maxima are reproduced per-primitive as the max live bytes
+of each execution stage of OUR implementations (which stage the same way:
+input spectra → MAD per output-channel chunk → inverse).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+from .hw import HardwareSpec
+from .pruned_fft import fft_optimal_shape, fft_1d_flops, pruned_fft_flops
+
+F32 = 4
+C64 = 8
+
+
+def _vol(n: Sequence[int]) -> int:
+    v = 1
+    for x in n:
+        v *= int(x)
+    return v
+
+
+def _nt(fft_shape: Sequence[int]) -> int:
+    """Complex elements in an rfftn spectrum of this FFT shape."""
+    na, nb, nc = fft_shape
+    return na * nb * (nc // 2 + 1)
+
+
+@dataclass(frozen=True)
+class LayerCost:
+    flops: float  # arithmetic work
+    hbm_bytes: float  # streamed bytes (roofline memory term)
+    peak_bytes: float  # peak live memory (Table II analogue)
+    coll_bytes: float = 0.0  # inter-chip bytes (streamed/spatial modes)
+
+    def time(self, hw: HardwareSpec, chips: int = 1) -> float:
+        compute = self.flops / (chips * hw.peak_flops)
+        memory = self.hbm_bytes / (chips * hw.hbm_bw)
+        coll = self.coll_bytes / (chips * hw.ici_bw)
+        return max(compute, memory) + coll
+
+
+# ---------------------------------------------------------------------------
+# Convolutional layer primitives
+# ---------------------------------------------------------------------------
+
+
+def conv_direct_cost(S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> LayerCost:
+    npr = tuple(x - k + 1 for x in n)
+    flops = 2.0 * S * fp * f * _vol(npr) * k**3  # Table I: S f' f n'³ k³ MACs
+    w_bytes = fp * f * k**3 * F32
+    io = (S * f * _vol(n) + S * fp * _vol(npr)) * F32
+    # each output tile re-reads its input halo once; weights re-read per tile
+    hbm = io + w_bytes
+    peak = io + w_bytes
+    return LayerCost(flops, hbm, peak)
+
+
+def _fft_common(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> Tuple[Tuple[int, ...], int, int, int, float, float, float]:
+    fft_shape = fft_optimal_shape(n)
+    nt = _nt(fft_shape)
+    vol_n, vol_np = _vol(n), _vol(tuple(x - k + 1 for x in n))
+    img_fft = S * f * pruned_fft_flops(n, fft_shape)
+    ker_fft = fp * f * pruned_fft_flops((k, k, k), fft_shape)
+    inv_fft = S * fp * pruned_fft_flops(tuple(x - k + 1 for x in n), fft_shape)
+    # complex MAC = 4 real mult + 4 add = 8 flops per element (3-mult Karatsuba
+    # in the Pallas kernel: 3 mult + 5 add); model at 8 (paper Table I: 4 S f' f ñ)
+    mad = 8.0 * S * fp * f * nt
+    return fft_shape, nt, vol_n, vol_np, img_fft + inv_fft, ker_fft, mad
+
+
+def conv_fft_data_parallel_cost(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
+    """Table II "FFT algorithm 1" (data parallel, Alg. 2): one kernel-spectrum
+    buffer and one output-channel spectrum column live at a time."""
+    fft_shape, nt, vol_n, vol_np, img_fft, ker_fft, mad = _fft_common(S, f, fp, n, k)
+    flops = img_fft + ker_fft + mad
+    stage_in = S * f * (vol_n * F32 + nt * C64)
+    stage_mad = (S * f + S + 1) * nt * C64 + S * fp * vol_np * F32
+    peak = max(stage_in, stage_mad)
+    # streamed bytes: X spectra re-read once per output channel (the price of
+    # the single-buffer discipline), kernels/outputs touched once.
+    hbm = (
+        S * f * vol_n * F32
+        + S * f * nt * C64 * (1 + fp)  # write once, read per output channel
+        + fp * f * (k**3) * F32
+        + fp * f * nt * C64
+        + 2 * S * fp * nt * C64
+        + S * fp * vol_np * F32
+    )
+    return LayerCost(flops, hbm, peak)
+
+
+# number of concurrently-live kernel-spectrum buffers in the task-parallel
+# variant (the paper's T = one per primary thread; ours = spectra chunk).
+TASK_T = 8
+
+
+def conv_fft_task_parallel_cost(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
+    """Table II "FFT algorithm 2" (task parallel): ALL input and output
+    spectra live at once — max{S f (n+ñ), S (f+f') ñ + T ñ, S f' (n'+ñ)} —
+    kernel spectra only T at a time.  Every spectrum is touched once: the
+    fused MAD reads X once while streaming kernel chunks (the paper's
+    "higher cache locality"; on TPU: one pass over HBM)."""
+    fft_shape, nt, vol_n, vol_np, img_fft, ker_fft, mad = _fft_common(S, f, fp, n, k)
+    flops = img_fft + ker_fft + mad
+    peak = max(
+        S * f * (vol_n * F32 + nt * C64),
+        (S * (f + fp) + TASK_T) * nt * C64,
+        S * fp * (vol_np * F32 + nt * C64),
+    )
+    hbm = (
+        S * f * vol_n * F32
+        + 2 * S * f * nt * C64
+        + fp * f * (k**3) * F32
+        + fp * f * nt * C64
+        + 2 * S * fp * nt * C64
+        + S * fp * vol_np * F32
+    )
+    return LayerCost(flops, hbm, peak)
+
+
+def conv_fft_cached_kernels_cost(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
+    """Task-parallel with kernel spectra precomputed once per *service*, not
+    per patch (beyond-paper: cross-patch kernel-spectrum reuse).  Kernel FFT
+    flops amortized to zero; spectra storage still charged to peak."""
+    c = conv_fft_task_parallel_cost(S, f, fp, n, k)
+    fft_shape = fft_optimal_shape(n)
+    ker_fft = fp * f * pruned_fft_flops((k, k, k), fft_shape)
+    return LayerCost(c.flops - ker_fft, c.hbm_bytes, c.peak_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Pooling primitives
+# ---------------------------------------------------------------------------
+
+
+def pool_cost(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
+    vol = _vol(n)
+    flops = 1.0 * S * f * vol  # Table I: S f n³ comparisons
+    hbm = 2 * S * f * vol * F32
+    return LayerCost(flops, hbm, hbm)
+
+
+def mpf_cost(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
+    vol = _vol(n)
+    flops = 1.0 * S * f * vol * p**3  # Table I: S f n³ p³
+    m3 = _vol(tuple(x // p for x in n)) * p**3
+    hbm = (S * f * vol + S * f * m3) * F32
+    return LayerCost(flops, hbm, hbm)
+
+
+# ---------------------------------------------------------------------------
+# Primitive registry used by the planner
+# ---------------------------------------------------------------------------
+
+CONV_PRIMS = ("direct", "fft_data", "fft_task", "fft_cached")
+POOL_PRIMS = ("mpf", "pool")
+
+
+def conv_cost(prim: str, S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> LayerCost:
+    if prim == "direct":
+        return conv_direct_cost(S, f, fp, n, k)
+    if prim == "fft_data":
+        return conv_fft_data_parallel_cost(S, f, fp, n, k)
+    if prim == "fft_task":
+        return conv_fft_task_parallel_cost(S, f, fp, n, k)
+    if prim == "fft_cached":
+        return conv_fft_cached_kernels_cost(S, f, fp, n, k)
+    raise ValueError(prim)

@@ -1,0 +1,35 @@
+"""Direct 3D convolution primitives (ZNNi §IV-A1 / §IV-B1).
+
+The paper's direct CPU primitive parallelizes over (batch, output channel);
+its GPU primitive is cuDNN's implicit GEMM.  The TPU-native formulation is
+the same implicit GEMM: for each kernel offset (dx,dy,dz) accumulate
+``W[:, :, dx,dy,dz] @ I[:, :, shifted window]`` — k³ MXU matmuls with the
+channel dimension as the contraction.  That is what both the XLA path
+(`lax.conv_general_dilated` lowers to exactly this on TPU) and the Pallas
+kernel (`repro.kernels.direct_conv3d`) compute.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.direct_conv3d import ops as conv3d_ops
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def direct_conv(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """'valid' cross-correlation. x (S,f,n³) f32, w (f',f,k³) -> (S,f',n'³)."""
+    o = conv3d_ops.conv3d(x, w, use_pallas=use_pallas)
+    if b is not None:
+        o = o + b.reshape(1, w.shape[0], 1, 1, 1)
+    return o

@@ -1,0 +1,147 @@
+"""FFT-based convolutional layer primitives (ZNNi §IV, Algorithms 2–3).
+
+Layout: images I (S, f, nx, ny, nz) f32, kernels w (f', f, kx, ky, kz), bias
+(f',).  Output (S, f', n'x, n'y, n'z) with n' = n - k + 1 ('valid').
+
+Two variants, mirroring the paper's CPU algorithms:
+
+* ``data_parallel``  (Algorithm 2): all image FFTs up front, then for each
+  output channel j: transform the f kernels, multiply-accumulate across
+  input channels, inverse-transform.  Peak live spectra: all S*f input
+  spectra + one output-channel column.  Parallelism lives *inside* each
+  transform / MAD (on TPU: the XLA ops themselves are data-parallel).
+
+* ``task_parallel``  (Algorithm task-graph, Fig. 3): the (f', f) kernel grid
+  and the MADs are independent tasks.  On TPU the grid is materialized as a
+  single batched einsum over all channels at once — the scheduler's "tasks"
+  become the MXU/VPU grid of one fused contraction, and the paper's
+  "primary thread owns one kernel-FFT buffer" becomes "all kernel spectra
+  live at once".  Fastest, largest memory — the same trade the paper reports.
+
+The pointwise multiply-accumulate is the hot spot: it is dispatched through
+``repro.kernels.cmul_mad`` (Pallas kernel on TPU, einsum oracle elsewhere).
+
+Staged memory discipline (the paper frees I before allocating O-spectra):
+XLA's buffer liveness does this automatically once the graph is staged the
+same way; the chunked `lax.map` in ``data_parallel`` bounds the live kernel
+spectra exactly like the paper's sub-batched cuFFT calls.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.cmul_mad import ops as cmul_ops
+from .pruned_fft import (
+    fft_optimal_shape,
+    kernel_rfftn,
+    pruned_irfftn,
+    pruned_rfftn,
+)
+
+
+def _out_shape(n: Sequence[int], k: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(int(ni - ki + 1) for ni, ki in zip(n, k))
+
+
+def precompute_kernel_fft(w: jnp.ndarray, fft_shape: Sequence[int]) -> jnp.ndarray:
+    """Kernel spectra (f', f, na, nb, nc''), reusable across patches/batches.
+
+    ZNNi reuses kernel transforms across the batch; a sliding-window service
+    reuses them across *patches* — compute once per layer per FFT size.
+    """
+    return kernel_rfftn(w, fft_shape)
+
+
+@partial(jax.jit, static_argnames=("fft_shape", "use_pallas", "fprime_chunk"))
+def fft_conv_data_parallel(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    fft_shape: Optional[Tuple[int, int, int]] = None,
+    use_pallas: bool = False,
+    fprime_chunk: int = 8,
+) -> jnp.ndarray:
+    """Algorithm 2: image FFTs up front; loop over output-channel chunks."""
+    S, f = x.shape[:2]
+    fp = w.shape[0]
+    n, k = x.shape[2:], w.shape[2:]
+    if fft_shape is None:
+        fft_shape = fft_optimal_shape(n)
+    out = _out_shape(n, k)
+
+    X = pruned_rfftn(x, fft_shape)  # (S, f, na, nb, nc'')
+
+    # chunk output channels like the paper's sub-batched cuFFT calls: bounds
+    # live kernel spectra to (chunk, f, ñ).
+    fprime_chunk = min(fprime_chunk, fp)
+    pad_fp = (-fp) % fprime_chunk
+    w_p = jnp.pad(w, ((0, pad_fp), (0, 0), (0, 0), (0, 0), (0, 0)))
+    w_chunks = w_p.reshape((fp + pad_fp) // fprime_chunk, fprime_chunk, *w.shape[1:])
+
+    def one_chunk(wc):
+        Wc = kernel_rfftn(wc, fft_shape)  # (chunk, f, ñ)
+        Oc = cmul_ops.cmul_mad(X, Wc, use_pallas=use_pallas)  # (S, chunk, ñ)
+        return pruned_irfftn(Oc, fft_shape, (0, 0, 0), out)
+
+    o = jax.lax.map(one_chunk, w_chunks)  # (n_chunk, S, chunk, out)
+    o = jnp.moveaxis(o, 1, 0).reshape(S, fp + pad_fp, *out)[:, :fp]
+    if b is not None:
+        o = o + b.reshape(1, fp, 1, 1, 1)
+    return o
+
+
+@partial(jax.jit, static_argnames=("fft_shape", "use_pallas"))
+def fft_conv_task_parallel(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    fft_shape: Optional[Tuple[int, int, int]] = None,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Task-graph variant: all kernel spectra at once, one fused MAD.
+
+    Requires f*S and f'*S large to pay off (paper §IV-A3) — here that means
+    the single einsum has enough parallel work to fill the chip; memory is
+    the full (f', f, ñ) kernel-spectrum grid, exactly Table II's trade.
+    """
+    S, f = x.shape[:2]
+    fp = w.shape[0]
+    n, k = x.shape[2:], w.shape[2:]
+    if fft_shape is None:
+        fft_shape = fft_optimal_shape(n)
+    out = _out_shape(n, k)
+
+    X = pruned_rfftn(x, fft_shape)  # (S, f, ñ)
+    W = precompute_kernel_fft(w, fft_shape)  # (f', f, ñ)
+    O = cmul_ops.cmul_mad(X, W, use_pallas=use_pallas)  # (S, f', ñ)
+    o = pruned_irfftn(O, fft_shape, (0, 0, 0), out)
+    if b is not None:
+        o = o + b.reshape(1, fp, 1, 1, 1)
+    return o
+
+
+def fft_conv_with_precomputed(
+    x: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    fft_shape: Tuple[int, int, int],
+    k: Tuple[int, int, int],
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Task-parallel forward with cached kernel spectra (inference service path)."""
+    n = x.shape[2:]
+    out = _out_shape(n, k)
+    X = pruned_rfftn(x, fft_shape)
+    O = cmul_ops.cmul_mad(X, W, use_pallas=use_pallas)
+    o = pruned_irfftn(O, fft_shape, (0, 0, 0), out)
+    if b is not None:
+        o = o + b.reshape(1, W.shape[0], 1, 1, 1)
+    return o

@@ -1,0 +1,39 @@
+"""Hardware model constants (target: TPU v5e; container runtime is CPU)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    hbm_bytes: int = 16 * 2**30  # per chip
+    ici_bw: float = 50e9  # bytes/s per link
+    vmem_bytes: int = 128 * 2**20
+    # MXU native tile (used by kernel BlockSpec choices and napkin math)
+    mxu: int = 128
+
+
+TPU_V5E = HardwareSpec()
+
+# The paper's two machines, for reproducing its tables analytically.
+XEON_E7_8890V3_4WAY = HardwareSpec(
+    name="4-way Xeon E7-8890v3",
+    peak_flops=72 * 2.5e9 * 16,  # 72 cores * AVX2 fp32 FMA throughput
+    hbm_bw=85e9,  # 4-socket aggregate stream bw (approx)
+    hbm_bytes=256 * 2**30,
+    ici_bw=16e9,  # QPI-ish
+    vmem_bytes=45 * 2**20,  # LLC
+)
+
+TITAN_X = HardwareSpec(
+    name="Titan X (Maxwell)",
+    peak_flops=6.1e12,
+    hbm_bw=336e9,
+    hbm_bytes=12 * 2**30,
+    ici_bw=12e9,  # PCIe 3.0 x16 ~ 12 GB/s effective
+    vmem_bytes=3 * 2**20,
+)

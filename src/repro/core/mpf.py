@@ -1,0 +1,109 @@
+"""Max-pooling and Max-Pooling Fragments (ZNNi §V).
+
+MPF computes max pooling at every offset (x,y,z), 0 <= offset < p per axis,
+producing p³ fragments per input.  Fragments multiply the *batch* dimension
+of subsequent layers (paper: "the most significant dimension"), and the
+composed fragments of all MPF layers tile the dense sliding-window output.
+
+Offset composition: an MPF layer applied after earlier poolings of combined
+stride s contributes `offset * s` to the dense output coordinate; the first
+pooling has unit stride.  `recombine_fragments` inverts the stacking.
+
+Input constraint: (n + 1) % p == 0 per axis so all fragments share the size
+floor(n/p) (paper §V).
+"""
+
+from __future__ import annotations
+
+import itertools
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mpf_pool import ops as mpf_ops
+
+
+def max_pool3d(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Plain max pooling, window p³, stride p.  x (..., nx, ny, nz)."""
+    nx, ny, nz = x.shape[-3:]
+    if nx % p or ny % p or nz % p:
+        raise ValueError(f"pool {p} does not divide {x.shape[-3:]}")
+    y = x.reshape(*x.shape[:-3], nx // p, p, ny // p, p, nz // p, p)
+    return y.max(axis=(-5, -3, -1))
+
+
+@partial(jax.jit, static_argnames=("p", "use_pallas"))
+def mpf(x: jnp.ndarray, p: int, *, use_pallas: bool = False) -> jnp.ndarray:
+    """Max-pooling fragments. x (S, f, n³) with (n+1)%p==0 -> (S*p³, f, m³).
+
+    Fragment o=(ox,oy,oz) (row-major) of batch s lands at output batch
+    index s*p³ + flat(o).
+    """
+    return mpf_ops.mpf_pool(x, p, use_pallas=use_pallas)
+
+
+def mpf_reference(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Oracle: explicit loop over offsets (also used by tests)."""
+    S, f = x.shape[:2]
+    n = x.shape[2:]
+    if any((ni + 1) % p for ni in n):
+        raise ValueError(f"MPF needs (n+1)%p==0, got n={n}, p={p}")
+    m = tuple(ni // p for ni in n)
+    frags = []
+    for ox, oy, oz in itertools.product(range(p), repeat=3):
+        v = x[:, :, ox : ox + p * m[0], oy : oy + p * m[1], oz : oz + p * m[2]]
+        frags.append(max_pool3d(v, p))
+    y = jnp.stack(frags, axis=1)  # (S, p³, f, m³)
+    return y.reshape(S * p**3, f, *m)
+
+
+def naive_sliding_pool(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """The baseline 'compute all subsamplings' primitive (ZNNi baseline):
+
+    dense max-filter with window p, stride 1: out[v] = max(x[v : v+p]) per
+    axis; output size n - p + 1.  The MPF fragments, recombined, equal this.
+    """
+    S, f = x.shape[:2]
+    n = x.shape[2:]
+    out = tuple(ni - p + 1 for ni in n)
+    y = jnp.full((S, f) + out, -jnp.inf, x.dtype)
+    for ox, oy, oz in itertools.product(range(p), repeat=3):
+        y = jnp.maximum(
+            y, x[:, :, ox : ox + out[0], oy : oy + out[1], oz : oz + out[2]]
+        )
+    return y
+
+
+def recombine_fragments(
+    y: jnp.ndarray, pools: Sequence[int], batch: int
+) -> jnp.ndarray:
+    """Invert MPF stacking into the dense sliding-window output.
+
+    y: (batch * Π p³, f, m³) where pools = (p1, p2, ...) in network order
+    (p1 applied first).  Returns (batch, f, (m*P + Σ(p_l - 1)*s_l)³) — the
+    dense output; dense coord = v*P + Σ_l o_l * s_l with s_l = Π_{l'<l} p_l'.
+    """
+    P = 1
+    for p in pools:
+        P *= p
+    S = batch
+    f = y.shape[1]
+    m = y.shape[2:]
+    k = len(pools)
+    # batch layout: s, o1, o2, ..., ok (o1 outermost after s) — each o is (p,p,p)
+    dims = [S]
+    for p in pools:
+        dims += [p, p, p]
+    y = y.reshape(*dims, f, *m)
+    # axis order target per spatial axis X: (vx, o_k x, ..., o_1 x) — most
+    # significant first; o_l x lives at axis index 1 + 3*(l-1) + axis.
+    perm = [0, 1 + 3 * k]  # S, f
+    for ax in range(3):
+        perm.append(1 + 3 * k + 1 + ax)  # v_ax
+        for l in range(k - 1, -1, -1):
+            perm.append(1 + 3 * l + ax)  # o_{l+1} for this axis
+    y = y.transpose(perm)
+    out = tuple(mi * P for mi in m)
+    return y.reshape(S, f, *out)

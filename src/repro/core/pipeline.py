@@ -1,0 +1,95 @@
+"""Two-stage producer-consumer pipeline — ZNNi's CPU-GPU execution (§VII-C).
+
+The paper splits the net at layer θ: the CPU computes layers [0, θ) for
+patch t while the GPU computes layers [θ, L) for patch t-1, with a queue of
+depth 1 (the producer stalls until the consumer drains).
+
+TPU adaptation (DESIGN.md §3): the two engines are the two pods of the
+multi-pod mesh.  ``pipelined_apply`` stages the steady-state loop as a
+lax.scan over patches; each scan step runs stage-0 on its pod, hands the
+activation across the ``pod`` axis with ``ppermute`` (the ICI hop standing
+in for the paper's host→device transfer), and runs stage-1 on the other
+pod.  Both pods execute both stage functions SPMD-style, but each pod's
+stage function sees only its own shard of the patch stream — with patches
+sharded over the pod axis, pod 0's "stage 1" work and pod 1's "stage 0"
+work are each other's bubbles, which is exactly the paper's Fig. 8
+interleaving (CPU busy on patch t while GPU busy on patch t-1).
+
+``pipeline_schedule`` exposes the timeline (for tests and the Fig. 8
+benchmark) without needing 2 devices: it simulates queue-depth-1 order.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pipeline_schedule(
+    n_patches: int, t_stage0: float, t_stage1: float, t_xfer: float = 0.0
+) -> Tuple[float, List[Tuple[str, int, float, float]]]:
+    """Simulate the paper's queue-depth-1 schedule.
+
+    Returns (makespan, events) with events (stage, patch, start, end).
+    Producer may only start patch t+1 once the consumer has *picked up*
+    patch t (queue empty), per §VII-C.
+    """
+    events = []
+    prod_free = 0.0
+    cons_free = 0.0
+    queue_free = 0.0  # time the queue becomes empty again
+    for t in range(n_patches):
+        s0 = max(prod_free, queue_free)
+        e0 = s0 + t_stage0
+        events.append(("stage0", t, s0, e0))
+        # hand-off: consumer picks up when free; queue empties at pickup
+        pickup = max(e0 + t_xfer, cons_free)
+        queue_free = pickup
+        e1 = pickup + t_stage1
+        events.append(("stage1", t, pickup, e1))
+        cons_free = e1
+        prod_free = e0
+    return cons_free, events
+
+
+def pipelined_apply(
+    stage0: Callable,
+    stage1: Callable,
+    xs: jnp.ndarray,
+    *,
+    axis_name: str = "pod",
+) -> jnp.ndarray:
+    """Run stage0 → (pod hand-off) → stage1 over a stream of patches.
+
+    Called inside shard_map with ``xs`` (T, ...) the *local* patch stream of
+    this pod.  Stage-0 output for step t is ppermuted to the next pod, which
+    applies stage-1 at step t+1; a one-slot carry realizes queue depth 1.
+    The returned stream is the stage-1 output aligned to the sender's
+    patches (first slot is the pipeline-fill bubble).
+    """
+    n_pods = lax.psum(1, axis_name)
+    perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+
+    def step(carry, x):
+        prev = carry  # stage-0 activation received at step t-1
+        y = stage1(prev)
+        a = stage0(x)
+        a_next = lax.ppermute(a, axis_name, perm)
+        return a_next, y
+
+    a0 = stage0(xs[0])
+    a0 = lax.ppermute(a0, axis_name, perm)
+    a_final, ys = lax.scan(step, a0, xs[1:])
+    y_last = stage1(a_final)
+    return jnp.concatenate([ys, y_last[None]], axis=0)
+
+
+def split_net_at_theta(
+    prims: Sequence[str], theta: int
+) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Layer indices for stage 0 ([0, θ)) and stage 1 ([θ, L))."""
+    idx = tuple(range(len(prims)))
+    return idx[:theta], idx[theta:]

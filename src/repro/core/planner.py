@@ -1,0 +1,350 @@
+"""The ZNNi throughput planner (§VI-A exhaustive search, §VII strategies).
+
+Given a ConvNet, a hardware spec, and a memory budget, enumerate
+
+  1. pooling-layer realization (MPF vs plain pooling — plain pooling forces
+     the naive all-subsamplings outer loop, the paper's baseline),
+  2. input patch size (parameterized by the final fragment size m, which
+     makes every candidate automatically satisfy the MPF divisibility
+     constraints),
+  3. batch size S,
+  4. per-conv-layer primitive (direct / fft_data / fft_task / fft_cached),
+
+and pick the throughput-maximizing combination whose per-layer peak memory
+fits the budget.  This is exactly the paper's search; on one chip the budget
+is HBM (the "GPU-only" column), and three further *strategies* re-run the
+same search under different resource envelopes:
+
+  * ``streamed``  — ZNNi "GPU + host RAM" (Fig. 6): tensors live sharded
+    across the mesh (aggregate HBM plays host RAM), sub-layer chunks are
+    all-gathered over ICI; collective bytes enter the layer time.
+  * ``pipeline2`` — ZNNi "CPU-GPU" (Fig. 8): two pods form a producer-
+    consumer pipeline split at layer θ; steady-state time is the max stage
+    time; each pod needs only its stage's memory.
+  * ``spatial``   — beyond-paper: one big patch sharded spatially over all
+    chips with halo exchange instead of overlapped independent patches.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from ..configs.base import ConvNetConfig
+from .cost_model import (
+    CONV_PRIMS,
+    LayerCost,
+    conv_cost,
+    mpf_cost,
+    pool_cost,
+)
+from .hw import HardwareSpec
+
+
+@dataclass(frozen=True)
+class LayerChoice:
+    index: int
+    kind: str  # conv | pool
+    prim: str
+    in_shape: Tuple[int, int, Tuple[int, int, int]]  # (S, f, n)
+    out_shape: Tuple[int, int, Tuple[int, int, int]]
+    cost: LayerCost
+    time_s: float
+
+
+@dataclass(frozen=True)
+class Plan:
+    net: str
+    strategy: str
+    chips: int
+    batch: int
+    n_in: int
+    m_final: int
+    choices: Tuple[LayerChoice, ...]
+    total_time: float
+    out_voxels: float
+    peak_bytes: float
+    theta: int = -1  # pipeline2 split point
+
+    @property
+    def throughput(self) -> float:
+        return self.out_voxels / self.total_time
+
+    def summary(self) -> str:
+        lines = [
+            f"plan[{self.net}] strategy={self.strategy} chips={self.chips} "
+            f"S={self.batch} n_in={self.n_in}^3 -> {self.throughput:,.0f} vox/s "
+            f"peak={self.peak_bytes/2**30:.2f} GiB"
+            + (f" theta={self.theta}" if self.theta >= 0 else "")
+        ]
+        for c in self.choices:
+            S, f, n = c.in_shape
+            lines.append(
+                f"  L{c.index:<2d} {c.kind:<4s} {c.prim:<10s} "
+                f"in=({S},{f},{n[0]}^3) t={c.time_s*1e3:8.3f} ms "
+                f"mem={c.cost.peak_bytes/2**30:6.3f} GiB"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Single-strategy layer walk
+# ---------------------------------------------------------------------------
+
+
+def _walk(
+    net: ConvNetConfig,
+    S: int,
+    n_in: int,
+    use_mpf: bool,
+    hw: HardwareSpec,
+    mem_budget: float,
+    chips: int = 1,
+    conv_prims: Sequence[str] = CONV_PRIMS,
+    stream_collectives: bool = False,
+) -> Optional[List[LayerChoice]]:
+    """Greedy per-layer fastest-feasible-primitive walk (§VI-A step 3).
+
+    Returns None if some layer cannot fit the budget with any primitive.
+    """
+    choices: List[LayerChoice] = []
+    S_cur, f_cur, n_cur = S, net.in_channels, n_in
+    for i, layer in enumerate(net.layers):
+        n3 = (n_cur,) * 3
+        if layer.kind == "conv":
+            fp = layer.out_channels
+            best: Optional[Tuple[float, str, LayerCost]] = None
+            for prim in conv_prims:
+                c = conv_cost(prim, S_cur, f_cur, fp, n3, layer.size)
+                if stream_collectives:
+                    # sub-layer streaming: weights+spectra sharded over the
+                    # mesh; each chip gathers its chunk once per layer.
+                    coll = c.peak_bytes / chips * (chips - 1) / chips
+                    c = LayerCost(c.flops, c.hbm_bytes, c.peak_bytes / chips, coll)
+                if c.peak_bytes > mem_budget:
+                    continue
+                t = c.time(hw, chips)
+                if best is None or t < best[0]:
+                    best = (t, prim, c)
+            if best is None:
+                return None
+            t, prim, c = best
+            n_next = n_cur - layer.size + 1
+            choices.append(
+                LayerChoice(i, "conv", prim, (S_cur, f_cur, n3), (S_cur, fp, (n_next,) * 3), c, t)
+            )
+            f_cur, n_cur = fp, n_next
+        else:
+            p = layer.size
+            if use_mpf:
+                if (n_cur + 1) % p != 0:
+                    return None
+                c = mpf_cost(S_cur, f_cur, n3, p)
+                if stream_collectives:
+                    c = LayerCost(c.flops, c.hbm_bytes, c.peak_bytes / chips, 0.0)
+                if c.peak_bytes > mem_budget:
+                    return None
+                t = c.time(hw, chips)
+                n_next = n_cur // p
+                S_next = S_cur * p**3
+                choices.append(
+                    LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3), (S_next, f_cur, (n_next,) * 3), c, t)
+                )
+                S_cur, n_cur = S_next, n_next
+            else:
+                if n_cur % p != 0:
+                    return None
+                c = pool_cost(S_cur, f_cur, n3, p)
+                if c.peak_bytes > mem_budget:
+                    return None
+                t = c.time(hw, chips)
+                choices.append(
+                    LayerChoice(i, "pool", "pool", (S_cur, f_cur, n3), (S_cur, f_cur, (n_cur // p,) * 3), c, t)
+                )
+                n_cur //= p
+    return choices
+
+
+def _n_in_for_m(net: ConvNetConfig, m: int, use_mpf: bool = True) -> int:
+    if use_mpf:
+        return net.valid_input_size(m)
+    # plain pooling: n = p*m at each pool (no fragment offset slack)
+    n = m
+    for layer in reversed(net.layers):
+        n = n + layer.size - 1 if layer.kind == "conv" else n * layer.size
+    return n
+
+
+def _out_voxels(net: ConvNetConfig, S: int, m: int, use_mpf: bool, n_in: int) -> float:
+    if use_mpf:
+        return S * float(m * net.total_pooling()) ** 3
+    # naive baseline: one subsampling per call — the dense output requires
+    # P³ independent passes, so the *effective* voxels per pass divide by P³.
+    return S * float(m) ** 3
+
+
+# ---------------------------------------------------------------------------
+# Strategy searches
+# ---------------------------------------------------------------------------
+
+
+def plan_single(
+    net: ConvNetConfig,
+    hw: HardwareSpec,
+    *,
+    mem_bytes: Optional[float] = None,
+    batches: Sequence[int] = (1, 2, 4),
+    max_m: int = 48,
+    use_mpf: bool = True,
+    conv_prims: Sequence[str] = CONV_PRIMS,
+    strategy_name: str = "single",
+    chips: int = 1,
+    stream_collectives: bool = False,
+) -> Optional[Plan]:
+    """Best single-worker plan (the paper's CPU-only/GPU-only search)."""
+    mem = hw.hbm_bytes if mem_bytes is None else mem_bytes
+    best: Optional[Plan] = None
+    for S in batches:
+        for m in range(1, max_m + 1):
+            n_in = _n_in_for_m(net, m, use_mpf)
+            choices = _walk(
+                net, S, n_in, use_mpf, hw, mem,
+                chips=chips, conv_prims=conv_prims,
+                stream_collectives=stream_collectives,
+            )
+            if choices is None:
+                continue
+            total = sum(c.time_s for c in choices)
+            vox = _out_voxels(net, S, m, use_mpf, n_in)
+            peak = max(c.cost.peak_bytes for c in choices)
+            plan = Plan(
+                net.name, strategy_name, chips, S, n_in, m,
+                tuple(choices), total, vox, peak,
+            )
+            if best is None or plan.throughput > best.throughput:
+                best = plan
+    return best
+
+
+def plan_streamed(
+    net: ConvNetConfig,
+    hw: HardwareSpec,
+    *,
+    chips: int,
+    batches: Sequence[int] = (1, 2, 4),
+    max_m: int = 64,
+) -> Optional[Plan]:
+    """ZNNi GPU+host-RAM analogue: budget = aggregate HBM, ICI streaming."""
+    return plan_single(
+        net, hw,
+        mem_bytes=hw.hbm_bytes * chips,
+        batches=batches, max_m=max_m,
+        strategy_name="streamed", chips=chips, stream_collectives=True,
+    )
+
+
+def plan_pipeline2(
+    net: ConvNetConfig,
+    hw: HardwareSpec,
+    *,
+    chips_per_stage: int,
+    batches: Sequence[int] = (1,),
+    max_m: int = 64,
+) -> Optional[Plan]:
+    """ZNNi CPU-GPU pipeline: split at θ, steady-state time = max stage time.
+
+    Queue depth 1 (paper §VII-C): producer stalls until consumer drains, so
+    steady-state throughput is out_voxels / max(stage_time) and each stage
+    needs only its own layers' memory.
+    """
+    best: Optional[Plan] = None
+    L = len(net.layers)
+    for S in batches:
+        for m in range(1, max_m + 1):
+            n_in = _n_in_for_m(net, m)
+            choices = _walk(
+                net, S, n_in, True, hw,
+                hw.hbm_bytes * chips_per_stage,
+                chips=chips_per_stage, stream_collectives=True,
+            )
+            if choices is None:
+                continue
+            times = [c.time_s for c in choices]
+            for theta in range(1, L):
+                t0, t1 = sum(times[:theta]), sum(times[theta:])
+                # activation hand-off between pods crosses the slow axis once
+                S_t, f_t, n_t = choices[theta].in_shape
+                xfer = S_t * f_t * (n_t[0] ** 3) * 4 / (hw.ici_bw * chips_per_stage)
+                stage = max(t0, t1) + xfer
+                vox = _out_voxels(net, S, m, True, n_in)
+                peak = max(c.cost.peak_bytes for c in choices)
+                plan = Plan(
+                    net.name, "pipeline2", 2 * chips_per_stage, S, n_in, m,
+                    tuple(choices), stage, vox, peak, theta=theta,
+                )
+                if best is None or plan.throughput > best.throughput:
+                    best = plan
+    return best
+
+
+def plan_spatial(
+    net: ConvNetConfig,
+    hw: HardwareSpec,
+    *,
+    chips: int,
+    batches: Sequence[int] = (1,),
+    max_m: int = 48,
+) -> Optional[Plan]:
+    """Beyond-paper: one volume sharded spatially with halo exchange.
+
+    Each chip holds an m-parameterized patch; halos of (FOV-1)/2 are
+    exchanged instead of recomputed, so border waste is paid in ICI bytes
+    (surface * depth) rather than FLOPs.
+    """
+    best: Optional[Plan] = None
+    for S in batches:
+        for m in range(1, max_m + 1):
+            n_in = _n_in_for_m(net, m)
+            choices = _walk(net, S, n_in, True, hw, hw.hbm_bytes, chips=1)
+            if choices is None:
+                continue
+            total = sum(c.time_s for c in choices)
+            # halo bytes per layer: 6 faces * n² * halo depth * f * 4B
+            halo_t = 0.0
+            for c in choices:
+                if c.kind != "conv":
+                    continue
+                S_c, f_c, n_c = c.in_shape
+                k = net.layers[c.index].size
+                halo_bytes = 6 * (n_c[0] ** 2) * (k - 1) * f_c * S_c * 4
+                halo_t += halo_bytes / hw.ici_bw
+            total = total + halo_t
+            # all chips advance in lockstep: per-patch time is `total`, and
+            # the mesh completes `chips` patches worth of output per step.
+            vox = chips * _out_voxels(net, S, m, True, n_in)
+            peak = max(c.cost.peak_bytes for c in choices)
+            plan = Plan(
+                net.name, "spatial", chips, S, n_in, m,
+                tuple(choices), total, vox, peak,
+            )
+            if best is None or plan.throughput > best.throughput:
+                best = plan
+    return best
+
+
+def plan_all_strategies(
+    net: ConvNetConfig, hw: HardwareSpec, *, chips: int = 256
+) -> dict:
+    return {
+        "single": plan_single(net, hw),
+        "streamed": plan_streamed(net, hw, chips=chips),
+        "pipeline2": plan_pipeline2(net, hw, chips_per_stage=chips // 2),
+        "spatial": plan_spatial(net, hw, chips=chips),
+        "baseline_naive": plan_single(
+            net, hw, use_mpf=False, strategy_name="baseline_naive"
+        ),
+        "direct_only": plan_single(
+            net, hw, conv_prims=("direct",), strategy_name="direct_only"
+        ),
+    }

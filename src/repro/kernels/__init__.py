@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel is a subpackage with kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper with a ``use_pallas`` dispatch), and ref.py (the
+pure-jnp oracle the tests sweep against).
+
+The dry-run/roofline paths run the XLA oracle (Pallas cannot lower on the
+CPU backend); on TPU, ``use_pallas=True`` selects the kernels.
+"""
+
+from . import cmul_mad, decode_attn, direct_conv3d, mpf_pool  # noqa: F401

@@ -1,0 +1,3 @@
+"""FFT-domain complex multiply-accumulate over channels (ZNNi's MAD stage)."""
+
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the FFT-domain channel MAD (ZNNi Alg. 2/3 hot spot).
+
+The operation — for every frequency bin b: O[s, j, b] = Σ_i X[s, i, b] · W[j, i, b]
+— is an *elementwise-batched* complex contraction: the weights differ per
+bin, so it is VPU work (not an MXU GEMM).  We tile bins to the lane width
+and keep a full input-channel column per block so each block does
+f · f'_blk complex MACs per bin with one pass over X.
+
+Complex multiply uses 3-real-mult Karatsuba (beyond-paper micro-opt):
+    t1 = xr·wr;  t2 = xi·wi;  t3 = (xr+xi)·(wr+wi)
+    or = t1 − t2;  oi = t3 − t1 − t2
+
+Layout: complex tensors are passed as separate float32 real/imag planes
+(Pallas has no complex dtype).  Bins are padded to BIN_BLOCK lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIN_BLOCK = 512  # lanes per block: multiple of 128 (VPU lane width)
+FP_BLOCK = 8  # output channels per block
+
+
+def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    xr = xr_ref[0]  # (f, Bb)
+    xi = xi_ref[0]
+    wr = wr_ref[...]  # (FP_BLOCK, f, Bb)
+    wi = wi_ref[...]
+    # Karatsuba per output channel j: contract over f on the sublane axis.
+    t1 = jnp.einsum("jfb,fb->jb", wr, xr, preferred_element_type=jnp.float32)
+    t2 = jnp.einsum("jfb,fb->jb", wi, xi, preferred_element_type=jnp.float32)
+    t3 = jnp.einsum(
+        "jfb,fb->jb", wr + wi, xr + xi, preferred_element_type=jnp.float32
+    )
+    or_ref[0] = t1 - t2
+    oi_ref[0] = t3 - t1 - t2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cmul_mad_planes(
+    xr: jnp.ndarray,
+    xi: jnp.ndarray,
+    wr: jnp.ndarray,
+    wi: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    """xr/xi (S, f, B) f32, wr/wi (f', f, B) f32 -> (or, oi) (S, f', B).
+
+    B must be a multiple of BIN_BLOCK and f' a multiple of FP_BLOCK
+    (ops.py pads).
+    """
+    S, f, B = xr.shape
+    fp = wr.shape[0]
+    grid = (S, fp // FP_BLOCK, B // BIN_BLOCK)
+    x_spec = pl.BlockSpec((1, f, BIN_BLOCK), lambda s, j, b: (s, 0, b))
+    w_spec = pl.BlockSpec((FP_BLOCK, f, BIN_BLOCK), lambda s, j, b: (j, 0, b))
+    o_spec = pl.BlockSpec((1, FP_BLOCK, BIN_BLOCK), lambda s, j, b: (s, j, b))
+    out_shape = [
+        jax.ShapeDtypeStruct((S, fp, B), jnp.float32),
+        jax.ShapeDtypeStruct((S, fp, B), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, w_spec, w_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, wr, wi)

@@ -1,0 +1,52 @@
+"""Jitted wrapper for the complex MAD: pads/flattens, dispatches kernel vs ref."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cmul_mad(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """O[s,j] = Σ_i X[s,i] · W[j,i].  X (S,f,*sp), W (f',f,*sp) complex64.
+
+    ``use_pallas=False`` (default; the dry-run/roofline path) uses the XLA
+    einsum oracle.  ``use_pallas=True`` runs the Pallas kernel —
+    ``interpret`` defaults to True off-TPU.
+    """
+    if not use_pallas:
+        return _ref.cmul_mad(X, W)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S, f = X.shape[:2]
+    fp = W.shape[0]
+    spatial = X.shape[2:]
+    B = 1
+    for s in spatial:
+        B *= int(s)
+    xr = jnp.real(X).reshape(S, f, B)
+    xi = jnp.imag(X).reshape(S, f, B)
+    wr = jnp.real(W).reshape(fp, f, B)
+    wi = jnp.imag(W).reshape(fp, f, B)
+    padB = (-B) % _k.BIN_BLOCK
+    padF = (-fp) % _k.FP_BLOCK
+    if padB:
+        pad = ((0, 0), (0, 0), (0, padB))
+        xr, xi, wr, wi = (jnp.pad(a, pad) for a in (xr, xi, wr, wi))
+    if padF:
+        pad = ((0, padF), (0, 0), (0, 0))
+        wr, wi = jnp.pad(wr, pad), jnp.pad(wi, pad)
+    o_r, o_i = _k.cmul_mad_planes(xr, xi, wr, wi, interpret=interpret)
+    o = jax.lax.complex(o_r, o_i)[:, :fp, :B]
+    return o.reshape(S, fp, *spatial)

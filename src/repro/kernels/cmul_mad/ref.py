@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the complex MAD: O[s,j] = Σ_i X[s,i] * W[j,i]."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cmul_mad(X: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    """X (S, f, *spatial) complex, W (f', f, *spatial) complex -> (S, f', *spatial)."""
+    return jnp.einsum("si...,ji...->sj...", X, W)

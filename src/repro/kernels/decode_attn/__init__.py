@@ -1,0 +1,3 @@
+"""Fused GQA flash-decode attention kernel (serving hot spot)."""
+
+from . import kernel, ops, ref  # noqa: F401

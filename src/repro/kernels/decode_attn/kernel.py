@@ -1,0 +1,90 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Grid: (batch, kv-head, S-blocks) with the S dimension innermost so the
+online-softmax state (running max m, denominator l, accumulator) lives in
+VMEM scratch across S-blocks.  Each program handles the G = H/Hkv query
+heads of one kv head — scores are a (G, S_BLOCK) VPU tile and the PV
+contraction a (G, S_BLOCK) @ (S_BLOCK, d) MXU matmul.
+
+This is the ZNNi "bigger batch under a memory ceiling" logic applied to
+serving: only one S_BLOCK of K/V is resident per step, so the KV cache can
+be HBM-resident (or mesh-sharded) at any length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+S_BLOCK = 512
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale):
+    sb = pl.program_id(2)
+    n_sb = pl.num_programs(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (S_BLOCK, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (S_BLOCK, d)
+    s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, Sb)
+    idx = sb * S_BLOCK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # (G, Sb)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(sb == n_sb - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attn_blocked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q (B, Hkv, G, d); k/v (B, S, Hkv, d) with S % S_BLOCK == 0; lengths (B,)."""
+    B, Hkv, G, d = q.shape
+    S = k.shape[1]
+    scale = 1.0 / (d**0.5)
+    grid = (B, Hkv, S // S_BLOCK)
+    q_spec = pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, S_BLOCK, 1, d), lambda b, h, s: (b, s, h, 0))
+    len_spec = pl.BlockSpec((1,), lambda b, h, s: (b,))
+    o_spec = pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[len_spec, q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,38 @@
+"""Jitted wrapper for flash-decode: pads S, reshapes GQA groups, dispatches."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attn(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """q (B,H,d); k/v (B,S,Hkv,d); lengths (B,) -> (B,H,d).  See ref.py."""
+    if not use_pallas:
+        return _ref.decode_attn(q, k, v, lengths)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, d = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    padS = (-S) % _k.S_BLOCK
+    if padS:
+        pad = ((0, 0), (0, padS), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    qg = q.reshape(B, Hkv, G, d)
+    o = _k.decode_attn_blocked(qg, k, v, lengths.astype(jnp.int32), interpret=interpret)
+    return o.reshape(B, H, d)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attn(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+) -> jnp.ndarray:
+    """q (B, H, d); k/v (B, S, Hkv, d); lengths (B,) valid KV entries.
+
+    GQA: H = G·Hkv, query head h attends to kv head h // G ... here heads are
+    grouped contiguously: q reshaped (B, Hkv, G, d).
+    Returns (B, H, d) in q.dtype; softmax in f32.
+    """
+    B, H, d = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, d)
+    # accumulate in f32 WITHOUT materializing f32 copies of the cache —
+    # an explicit k.astype(f32) here gets hoisted by XLA outside the
+    # layer scan, converting the whole stacked cache at once.
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(d).astype(jnp.float32)
+    S = k.shape[1]
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum(
+        "bhgs,bshd->bhgd", w.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return o.reshape(B, H, d).astype(q.dtype)

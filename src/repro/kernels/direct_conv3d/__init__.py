@@ -1,0 +1,3 @@
+"""Direct 3D 'valid' convolution as k³ shifted MXU matmuls."""
+
+from . import kernel, ops, ref  # noqa: F401

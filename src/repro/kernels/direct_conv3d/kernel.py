@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: direct 3D conv as k³ offset-shifted matmuls.
+
+TPU-native formulation (DESIGN.md §3): the channel dimension is the MXU
+contraction.  For each kernel offset (dx,dy,dz):
+
+    O[j, x,y,z] += W[j, i, dx,dy,dz] @ I[i, x+dx, y+dy, z+dz]
+
+i.e. k³ matmuls of shape (f'_blk × f) @ (f × tile_voxels).  The kernel
+offsets are a static Python loop (k ≤ 9 in the paper's nets), so the whole
+block is one unrolled chain of MXU dots accumulating in VMEM.
+
+Blocking: grid over (batch, f' blocks, x-tiles).  The input block holds the
+x-tile plus its (k-1)-halo and the full (y, z) extent; the planner/ops
+wrapper sizes tiles so the block fits VMEM.  Input x-halo overlap is
+expressed by passing the whole (per-batch) input as a VMEM-resident block
+and slicing with `pl.ds` — revisited blocks stay resident across the
+innermost grid dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FP_BLOCK = 8  # output channels per block
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k: int, tx: int):
+    s = 0  # x_ref block is (1, f, nx, ny, nz)
+    it = pl.program_id(2)
+    f = x_ref.shape[1]
+    ny, nz = x_ref.shape[3], x_ref.shape[4]
+    npy, npz = ny - k + 1, nz - k + 1
+    w = w_ref[...]  # (FP_BLOCK, f, k, k, k)
+    acc = jnp.zeros((FP_BLOCK, tx * npy * npz), jnp.float32)
+    for dx in range(k):
+        for dy in range(k):
+            for dz in range(k):
+                xs = x_ref[s, :, pl.ds(it * tx + dx, tx), pl.ds(dy, npy), pl.ds(dz, npz)]
+                acc += jax.lax.dot(
+                    w[:, :, dx, dy, dz],
+                    xs.reshape(f, tx * npy * npz),
+                    preferred_element_type=jnp.float32,
+                )
+    o_ref[0] = acc.reshape(FP_BLOCK, tx, npy, npz)
+
+
+@functools.partial(jax.jit, static_argnames=("tx", "interpret"))
+def conv3d_blocked(
+    x: jnp.ndarray, w: jnp.ndarray, *, tx: int, interpret: bool = True
+) -> jnp.ndarray:
+    """x (S, f, nx, ny, nz) f32, w (f', f, k³) f32; f' % FP_BLOCK == 0,
+    (nx - k + 1) % tx == 0 (ops.py pads/chunks)."""
+    S, f, nx, ny, nz = x.shape
+    fp, _, k, _, _ = w.shape
+    npx, npy, npz = nx - k + 1, ny - k + 1, nz - k + 1
+    grid = (S, fp // FP_BLOCK, npx // tx)
+    x_spec = pl.BlockSpec((1, f, nx, ny, nz), lambda s, j, t: (s, 0, 0, 0, 0))
+    w_spec = pl.BlockSpec((FP_BLOCK, f, k, k, k), lambda s, j, t: (j, 0, 0, 0, 0))
+    o_spec = pl.BlockSpec((1, FP_BLOCK, tx, npy, npz), lambda s, j, t: (s, j, t, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, tx=tx),
+        grid=grid,
+        in_specs=[x_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((S, fp, npx, npy, npz), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,44 @@
+"""Jitted wrapper for direct 3D conv: pads channels, picks x-tile, dispatches."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _pick_tx(npx: int) -> int:
+    for t in (8, 4, 2, 1):
+        if npx % t == 0:
+            return t
+    return 1
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def conv3d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """'valid' cross-correlation; see ref.py for semantics."""
+    if not use_pallas:
+        return _ref.conv3d(x, w)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fp = w.shape[0]
+    padF = (-fp) % _k.FP_BLOCK
+    if padF:
+        w = jnp.pad(w, ((0, padF), (0, 0), (0, 0), (0, 0), (0, 0)))
+    k = w.shape[2]
+    npx = x.shape[2] - k + 1
+    tx = _pick_tx(npx)
+    o = _k.conv3d_blocked(
+        x.astype(jnp.float32), w.astype(jnp.float32), tx=tx, interpret=interpret
+    )
+    return o[:, :fp]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: 'valid' cross-correlation via lax.conv_general_dilated."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv3d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (S, f, nx, ny, nz), w (f', f, kx, ky, kz) -> (S, f', n'x, n'y, n'z)."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1, 1),
+        padding="VALID",
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )

@@ -1,0 +1,3 @@
+"""Max-pooling fragments (MPF) kernel."""
+
+from . import kernel, ops, ref  # noqa: F401

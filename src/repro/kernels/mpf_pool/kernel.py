@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for max-pooling fragments (ZNNi §V).
+
+Grid: (batch, p³ fragment offsets, channel blocks).  Each program computes
+one fragment of one channel block: a dynamic offset slice of the input
+followed by a p-strided window max (reshape-max, all static shapes).  The
+input block is revisited across the fragment-offset grid dimension, so it
+stays VMEM-resident while all p³ fragments are emitted (this is the reuse
+the naive all-subsamplings baseline lacks — each offset re-reads HBM there).
+
+Output batch index s·p³ + o is produced directly by the output index_map.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F_BLOCK = 8  # channels per block
+
+
+def _kernel(x_ref, o_ref, *, p: int):
+    o = pl.program_id(1)
+    ox = o // (p * p)
+    oy = (o // p) % p
+    oz = o % p
+    f, nx, ny, nz = x_ref.shape[1:]
+    m = (nx // p, ny // p, nz // p)
+    v = x_ref[0, :, pl.ds(ox, p * m[0]), pl.ds(oy, p * m[1]), pl.ds(oz, p * m[2])]
+    v = v.reshape(f, m[0], p, m[1], p, m[2], p)
+    o_ref[0] = v.max(axis=(2, 4, 6))
+
+
+@functools.partial(jax.jit, static_argnames=("p", "interpret"))
+def mpf_pool_blocked(x: jnp.ndarray, *, p: int, interpret: bool = True) -> jnp.ndarray:
+    """x (S, f, n³) f32 with (n+1)%p==0 and f % F_BLOCK == 0 (ops.py pads)."""
+    S, f, nx, ny, nz = x.shape
+    m = (nx // p, ny // p, nz // p)
+    P = p**3
+    grid = (S, P, f // F_BLOCK)
+    x_spec = pl.BlockSpec((1, F_BLOCK, nx, ny, nz), lambda s, o, fb: (s, fb, 0, 0, 0))
+    o_spec = pl.BlockSpec(
+        (1, F_BLOCK, *m), lambda s, o, fb: (s * P + o, fb, 0, 0, 0)
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, p=p),
+        grid=grid,
+        in_specs=[x_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((S * P, f, *m), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,35 @@
+"""Jitted wrapper for MPF pooling: pads channels, dispatches kernel vs ref."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("p", "use_pallas", "interpret"))
+def mpf_pool(
+    x: jnp.ndarray,
+    p: int,
+    *,
+    use_pallas: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Max-pooling fragments; see ref.py for semantics."""
+    n = x.shape[2:]
+    if any((ni + 1) % p for ni in n):
+        raise ValueError(f"MPF needs (n+1)%p==0, got n={n}, p={p}")
+    if not use_pallas:
+        return _ref.mpf_pool(x, p)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    f = x.shape[1]
+    padF = (-f) % _k.F_BLOCK
+    if padF:
+        x = jnp.pad(x, ((0, 0), (0, padF), (0, 0), (0, 0), (0, 0)))
+    o = _k.mpf_pool_blocked(x.astype(jnp.float32), p=p, interpret=interpret)
+    return o[:, :f]

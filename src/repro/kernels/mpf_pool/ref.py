@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for MPF: all p³ offset poolings, fragments into batch."""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+
+
+def mpf_pool(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """x (S, f, n³) with (n+1)%p==0 -> (S·p³, f, (n//p)³).
+
+    Output batch index = s·p³ + (ox·p² + oy·p + oz).
+    """
+    S, f = x.shape[:2]
+    n = x.shape[2:]
+    m = tuple(ni // p for ni in n)
+    frags = []
+    for ox, oy, oz in itertools.product(range(p), repeat=3):
+        v = x[:, :, ox : ox + p * m[0], oy : oy + p * m[1], oz : oz + p * m[2]]
+        v = v.reshape(S, f, m[0], p, m[1], p, m[2], p).max(axis=(3, 5, 7))
+        frags.append(v)
+    y = jnp.stack(frags, axis=1)
+    return y.reshape(S * p**3, f, *m)

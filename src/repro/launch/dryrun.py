@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    " --xla_cpu_strict_dot_conv_math=true"
+    " --xla_allow_excess_precision=false"
+)
+
+# (flags 2-3: keep bf16 dot operands unconverted — as the TPU MXU does —
+# and keep bf16 round-trips so XLA cannot hoist f32 copies of stacked
+# weights out of the layer scan; without them the CPU backend's float
+# normalization inflates temp-memory and bytes-accessed ~2x vs the TPU
+# target.  Residual CPU-only f32 artifacts are noted in EXPERIMENTS.md.)
+
+# Multi-pod dry-run (DESIGN.md §7): lower + compile every
+# (architecture x input-shape x mesh) cell with ShapeDtypeStruct inputs —
+# no allocation — and record memory_analysis / cost_analysis / collective
+# bytes for the roofline table.  The two lines above MUST precede any other
+# import (jax locks the device count on first init); they are scoped to
+# this entry point only (tests and benches see 1 device).
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, cell_applicable, get_config, get_shape  # noqa: E402
+from ..core.hw import TPU_V5E  # noqa: E402
+from ..distributed.sharding import batch_shardings, param_shardings, replicated  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..optim import AdamWConfig, init_state  # noqa: E402
+from ..roofline.analysis import collective_bytes, roofline  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .train import make_train_step  # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def _apply_overrides(cfg, overrides: Dict[str, Any]):
+    """Config-level hillclimb levers (EXPERIMENTS.md §Perf)."""
+    if overrides.get("pad_q_groups") and cfg.attn is not None:
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn, pad_q_groups=overrides["pad_q_groups"])
+        )
+    if overrides.get("expand_kv") and cfg.attn is not None:
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn, expand_kv=True)
+        )
+    if overrides.get("dtype"):
+        cfg = dataclasses.replace(cfg, dtype=overrides["dtype"])
+    if overrides.get("moe_routing_groups"):
+        cfg = dataclasses.replace(cfg, moe_routing_groups=overrides["moe_routing_groups"])
+    if overrides.get("decode_replicate_activations"):
+        cfg = dataclasses.replace(cfg, decode_replicate_activations=True)
+    return cfg
+
+
+def _compile_cell(cfg, shape, mesh_kind: str, overrides: Dict[str, Any]):
+    """Lower + compile one (config x shape x mesh); returns raw artifacts."""
+    cfg = _apply_overrides(cfg, overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    model = build_model(cfg)
+    t0 = time.monotonic()
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = model.input_specs(shape)
+    bsh = batch_shardings(cfg, shape, mesh, specs)
+
+    if shape.kind == "train":
+        state_dtype = "bfloat16" if cfg.param_count() > 40e9 else "float32"
+        ocfg = AdamWConfig(state_dtype=overrides.get("opt_state_dtype", state_dtype))
+        zero_mode = overrides.get("zero", "zero3")  # zero3 | zero1 (H2 lever)
+        psh = param_shardings(cfg, params_sds, mesh, zero=(zero_mode == "zero3"))
+        opt_sds = jax.eval_shape(lambda p: init_state(p, ocfg), params_sds)
+        osh_inner = param_shardings(cfg, params_sds, mesh, zero=True)
+        osh = {"m": osh_inner, "v": osh_inner, "step": replicated(mesh)}
+        msh = {"loss": replicated(mesh), "gnorm": replicated(mesh)}
+        step = make_train_step(model, ocfg, remat=overrides.get("remat", True))
+        jitted = jax.jit(
+            step,
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, msh),
+            donate_argnums=(0, 1),  # params/opt updated in place
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, opt_sds, specs)
+    elif shape.kind == "prefill":
+        psh = param_shardings(
+            cfg, params_sds, mesh, zero=bool(overrides.get("serve_zero", False))
+        )
+
+        def serve_step(p, batch):
+            return model.prefill(p, batch, cache_len=shape.seq_len)
+
+        jitted = jax.jit(serve_step, in_shardings=(psh, bsh))
+        with mesh:
+            lowered = jitted.lower(params_sds, specs)
+    else:  # decode
+        psh = param_shardings(
+            cfg, params_sds, mesh, zero=bool(overrides.get("serve_zero", False))
+        )
+
+        def serve_step(p, tokens, caches):
+            return model.decode_step(p, tokens, caches)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(psh, bsh["tokens"], bsh["caches"]),
+            donate_argnums=(2,),  # caches updated in place
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, specs["tokens"], specs["caches"])
+
+    compiled = lowered.compile()
+    t1 = time.monotonic()
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "compile_s": t1 - t0,
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "total_bytes": mem.argument_size_in_bytes + mem.temp_size_in_bytes + mem.output_size_in_bytes,
+        },
+        "fits_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) < TPU_V5E.hbm_bytes,
+        "cost": {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))},
+        "collectives": coll,
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    verbose: bool = True,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    chips = 512 if mesh_kind == "multi" else 256
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+    }
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: SKIP ({why})")
+        return rec
+
+    overrides = overrides or {}
+    raw = _compile_cell(cfg, shape, mesh_kind, overrides)
+    ca, coll = raw["cost"], raw["collectives"]
+    mf = _model_flops(cfg, shape)
+    terms = roofline(
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        coll.get("total", 0.0),
+        hw=TPU_V5E, chips=chips, model_flops=mf,
+    )
+    rec.update(raw)
+    rec["roofline"] = terms.to_dict()
+    rec["overrides"] = overrides
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} ({chips} chips)")
+        print(f"  memory_analysis: {raw['mem']}")
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: { {k: f'{v:.3e}' for k, v in coll.items()} }")
+        print(
+            f"  roofline: compute={terms.compute_s:.3e}s memory={terms.memory_s:.3e}s "
+            f"collective={terms.collective_s:.3e}s dominant={terms.dominant} "
+            f"useful_ratio={terms.useful_flops_ratio:.3f}"
+        )
+    return rec
+
+
+def probe_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    verbose: bool = True,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Trip-count-corrected roofline via depth extrapolation.
+
+    XLA's HLO cost analysis counts a while-loop body ONCE regardless of
+    trip count, so full-depth numbers undercount the layer scan by ~R.
+    Fix: compile the model at 1x and 2x pattern depth with all INNER chunk
+    loops unrolled (REPRO_UNROLL_INNER=1 — required, asserted below), then
+    extrapolate linearly: f(L) = f1 + (L/PL - 1) * (f2 - f1).  Linear-in-
+    depth is exact for everything inside the scan (per-layer flops/bytes/
+    collectives are depth-independent); only XLA fusion differences between
+    the probe and full compiles are approximated.
+    """
+    from .. import flags as _flags
+
+    assert _flags.UNROLL_INNER, "probe mode requires REPRO_UNROLL_INNER=1"
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    chips = 512 if mesh_kind == "multi" else 256
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "probe": True,
+    }
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        return rec
+
+    overrides = overrides or {}
+    PL = len(cfg.block_pattern)
+
+    def probe_cfg(reps: int):
+        kw: Dict[str, Any] = {"n_layers": PL * reps}
+        if cfg.enc_dec:
+            kw["n_enc_layers"] = reps
+        return dataclasses.replace(cfg, **kw)
+
+    raws = [_compile_cell(probe_cfg(r), shape, mesh_kind, overrides) for r in (1, 2)]
+
+    def _lin(v1: float, v2: float) -> float:
+        # negative slopes are partitioner noise on out-of-loop ops; the
+        # quantity itself cannot shrink with depth, so clamp at the probes.
+        reps_full = cfg.n_layers / PL
+        return max(v1 + (reps_full - 1.0) * (v2 - v1), v1, v2)
+
+    flops = _lin(raws[0]["cost"].get("flops", 0.0), raws[1]["cost"].get("flops", 0.0))
+    byts = _lin(
+        raws[0]["cost"].get("bytes accessed", 0.0),
+        raws[1]["cost"].get("bytes accessed", 0.0),
+    )
+    coll = _lin(
+        raws[0]["collectives"].get("total", 0.0),
+        raws[1]["collectives"].get("total", 0.0),
+    )
+    mf = _model_flops(cfg, shape)
+    terms = roofline(flops, byts, coll, hw=TPU_V5E, chips=chips, model_flops=mf)
+    rec.update(
+        {
+            "roofline": terms.to_dict(),
+            "probe_raw": raws,
+            "compile_s": sum(r["compile_s"] for r in raws),
+            "overrides": overrides,
+        }
+    )
+    if verbose:
+        print(
+            f"[probe] {arch} x {shape_name} x {mesh_kind}: "
+            f"compute={terms.compute_s:.3e}s memory={terms.memory_s:.3e}s "
+            f"collective={terms.collective_s:.3e}s dominant={terms.dominant} "
+            f"useful_ratio={terms.useful_flops_ratio:.3f}"
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=DEFAULT_OUT)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--probe", action="store_true",
+                    help="depth-extrapolated roofline (needs REPRO_UNROLL_INNER=1)")
+    args = ap.parse_args()
+    if args.probe and args.tag == "baseline":
+        args.tag = "probe"
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    archs = list(ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or args.shape is None else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                fname = os.path.join(
+                    args.out_dir, f"{args.tag}__{arch}__{shape}__{mesh_kind}.json"
+                )
+                if args.skip_existing and os.path.exists(fname):
+                    continue
+                try:
+                    fn = probe_cell if args.probe else run_cell
+                    rec = fn(arch, shape, mesh_kind)
+                except Exception as e:  # noqa: BLE001 — record the failure
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    n_fail += 1
+                    print(f"[dryrun] {arch} x {shape} x {mesh_kind}: FAIL {e}")
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=2, default=str)
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

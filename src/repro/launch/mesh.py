@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first jax
+init, and tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    devices = None
+    n = 1
+    for s in shape:
+        n *= s
+    avail = jax.devices()
+    if len(avail) > n:
+        devices = avail[:n]
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes), devices=devices
+    )
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,4 @@
+"""LM layer zoo: norms, RoPE/M-RoPE, GQA attention, MLP, MoE, Mamba2-SSD,
+embeddings, and modality frontend stubs."""
+
+from . import attention, embedding, mlp, moe, norms, rope, ssm, stubs  # noqa: F401

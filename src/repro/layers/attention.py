@@ -1,0 +1,235 @@
+"""GQA attention: q-chunked training/prefill path + cached decode path.
+
+Training/prefill uses a query-chunked online-softmax formulation (pure
+lax.scan over query blocks — compiles anywhere, memory bounded by
+(q_chunk × S) score tiles instead of S², which is what makes prefill_32k
+lowerable).  Sliding-window (`window`) masks |i-j| >= window.
+
+Decode takes one query token against a (B, S_max, Hkv, d) cache and
+dispatches through ``repro.kernels.decode_attn`` (Pallas on TPU, einsum
+oracle elsewhere).
+
+Shapes: x (B, S, d_model); heads grouped contiguously (H = Hkv·G with
+query head h served by kv head h // G).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import flags
+from ..configs.base import AttnConfig
+from ..distributed.constraints import constrain
+from ..kernels.decode_attn import ops as da_ops
+from .dot import contract
+from .rope import apply_mrope, apply_rope, text_mrope_positions
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, a: AttnConfig, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = (2.0 / d_model) ** 0.5
+    so = (2.0 / (a.n_heads * a.head_dim)) ** 0.5
+    G = a.q_per_kv
+    Gp = a.n_heads_eff // a.n_kv_heads
+    wq = jax.random.normal(kq, (d_model, a.n_kv_heads, G, a.head_dim)) * s
+    wo = jax.random.normal(ko, (a.n_kv_heads, G, a.head_dim, d_model)) * so
+    if Gp != G:
+        # group-preserving zero padding: kv head j still serves the first G
+        # q slots of its group; padded slots are zero in wq AND wo, so they
+        # contribute nothing and their gradients stay zero.
+        wq = jnp.zeros((d_model, a.n_kv_heads, Gp, a.head_dim)).at[:, :, :G].set(wq)
+        wo = jnp.zeros((a.n_kv_heads, Gp, a.head_dim, d_model)).at[:, :G].set(wo)
+    H = a.n_heads_eff
+    p = {
+        "wq": wq.reshape(d_model, H, a.head_dim).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, a.n_kv_heads, a.head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, a.n_kv_heads, a.head_dim)) * s).astype(dtype),
+        "wo": wo.reshape(H, a.head_dim, d_model).astype(dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((H, a.head_dim), dtype)
+        p["bk"] = jnp.zeros((a.n_kv_heads, a.head_dim), dtype)
+        p["bv"] = jnp.zeros((a.n_kv_heads, a.head_dim), dtype)
+    return p
+
+
+def _qkv(p, x, a: AttnConfig, positions, rope: bool = True):
+    q = contract("bsd,dhk->bshk", x, p["wq"])
+    k = contract("bsd,dhk->bshk", x, p["wk"])
+    v = contract("bsd,dhk->bshk", x, p["wv"])
+    if a.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if rope and a.rope_kind == "rope":
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    elif rope and a.rope_kind == "mrope":
+        pos3 = positions if positions.ndim == 3 else text_mrope_positions(positions)
+        q = apply_mrope(q, pos3, a.rope_theta, a.mrope_sections)
+        k = apply_mrope(k, pos3, a.rope_theta, a.mrope_sections)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    q_offset: int = 0,
+    expand_kv: bool = False,
+) -> jnp.ndarray:
+    """q (B, Sq, H, d), k/v (B, Skv, Hkv, d) -> (B, Sq, H, d).
+
+    Query-chunked with f32 softmax; masks: causal (query position
+    q_offset+i attends to kv j <= i) and optional sliding window.
+
+    ``expand_kv`` (EXPERIMENTS.md §Perf H1): repeat kv heads to the full H
+    before the score einsum.  The grouped (Hkv, G) layout defeats GSPMD
+    when the model axis divides H but neither factor (qwen2-vl: 16 | 32 but
+    4 x 8) — the partitioner all-gathers scores.  The expanded tensor
+    shards cleanly on H, and each chip only materializes its own H/tp
+    expanded heads.
+    """
+    B, Sq, H, d = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / (d**0.5)
+    qc = min(q_chunk, Sq)
+    pad = (-Sq) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // qc
+    kv_j = jnp.arange(Skv)
+
+    if expand_kv and G > 1:
+        k = constrain(jnp.repeat(k, G, axis=2), "batch", None, "model")
+        v = constrain(jnp.repeat(v, G, axis=2), "batch", None, "model")
+    if expand_kv:
+        qg = q.reshape(B, nq, qc, H, 1, d)  # degenerate group: plain MHA
+    else:
+        qg = q.reshape(B, nq, qc, Hkv, G, d)
+
+    def one_chunk(qi_idx):
+        qi, idx = qi_idx
+        # f32 accumulation via preferred_element_type — explicit astype(f32)
+        # on k/v would be hoisted into a full-tensor f32 copy by XLA.
+        s = jnp.einsum("bqhgd,bshd->bhgqs", qi, k, preferred_element_type=jnp.float32)
+        s = constrain(s, "batch", "model")
+        s = s * scale
+        q_pos = q_offset + idx * qc + jnp.arange(qc)
+        m = jnp.ones((qc, Skv), bool)
+        if causal:
+            m &= kv_j[None, :] <= q_pos[:, None]
+        if window is not None:
+            m &= kv_j[None, :] > q_pos[:, None] - window
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bhgqs,bshd->bqhgd", w.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        return o.astype(q.dtype)
+
+    # nested remat: the backward recomputes each chunk's scores/softmax
+    # instead of keeping (qc x Skv) f32 residuals for every chunk at once —
+    # flash-attention memory behaviour from composition, not a kernel.
+    o = flags.chunk_map(jax.checkpoint(one_chunk), (jnp.moveaxis(qg, 1, 0), jnp.arange(nq)))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, nq * qc, H, d)
+    return o[:, :Sq]
+
+
+def attn_apply(
+    p: dict,
+    x: jnp.ndarray,
+    a: AttnConfig,
+    positions: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Full training/prefill self-attention (causal)."""
+    q, k, v = _qkv(p, x, a, positions)
+    o = chunked_attention(
+        q, k, v, causal=True, window=window, q_chunk=q_chunk, expand_kv=a.expand_kv
+    )
+    return contract("bshk,hkd->bsd", o, p["wo"])
+
+
+def attn_prefill(
+    p: dict,
+    x: jnp.ndarray,
+    a: AttnConfig,
+    positions: jnp.ndarray,
+    cache_len: int,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Prefill: returns output and (k, v) padded to cache_len."""
+    q, k, v = _qkv(p, x, a, positions)
+    o = chunked_attention(q, k, v, causal=True, window=window, expand_kv=a.expand_kv)
+    S = x.shape[1]
+    pad = ((0, 0), (0, cache_len - S), (0, 0), (0, 0))
+    return contract("bshk,hkd->bsd", o, p["wo"]), (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def attn_decode(
+    p: dict,
+    x: jnp.ndarray,
+    a: AttnConfig,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One decode step.  x (B, 1, d); cache (B, S_max, Hkv, d); lengths (B,)
+    = tokens already in cache.  Returns (out (B,1,d), updated cache).
+
+    The new token is written at index `lengths`; attention then covers
+    lengths+1 entries (window-limited if `window`).
+    """
+    B = x.shape[0]
+    positions = lengths[:, None]  # (B, 1)
+    q, k_new, v_new = _qkv(p, x, a, positions)
+    # one-hot select update: dtype-preserving and shard-local on a
+    # sequence-sharded cache (a vmapped dynamic-update-slice lowers to a
+    # scatter, which XLA upcasts bf16 -> f32, doubling cache memory).
+    S = cache_k.shape[1]
+    onehot = jnp.arange(S)[None, :] == lengths[:, None]  # (B, S)
+    sel = onehot[:, :, None, None]
+    cache_k = jnp.where(sel, k_new.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(sel, v_new.astype(cache_v.dtype), cache_v)
+    valid = lengths + 1
+    if window is None:
+        o = da_ops.decode_attn(q[:, 0], cache_k, cache_v, valid, use_pallas=use_pallas)
+    else:
+        # windowed decode: mask entries outside [valid - window, valid).
+        # (baseline keeps the full cache; the optimized path uses a ring
+        # buffer of `window` entries — see EXPERIMENTS.md §Perf.)
+        S = cache_k.shape[1]
+        j = jnp.arange(S)
+        keep = (j[None] < valid[:, None]) & (j[None] >= (valid - window)[:, None])
+        H, d = q.shape[2], q.shape[3]
+        Hkv = cache_k.shape[2]
+        G = H // Hkv
+        qf = q[:, 0].reshape(B, Hkv, G, d)
+        s = jnp.einsum(
+            "bhgd,bshd->bhgs", qf, cache_k, preferred_element_type=jnp.float32
+        ) / (d**0.5)
+        s = jnp.where(keep[:, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bhgs,bshd->bhgd", w.astype(cache_v.dtype), cache_v,
+            preferred_element_type=jnp.float32,
+        )
+        o = o.reshape(B, H, d).astype(x.dtype)
+    out = contract("bhk,hkd->bd", o, p["wo"])[:, None]
+    return out, (cache_k, cache_v)

@@ -1,0 +1,25 @@
+"""Matmul helper: bf16 operands, f32 accumulation, result in compute dtype.
+
+This is how the TPU MXU actually executes bf16 matmuls (f32 accumulators),
+and — via --xla_cpu_strict_dot_conv_math — how the CPU dry-run lowers them
+too.  Without the explicit preferred_element_type, XLA's float
+normalization rewrites bf16 dots as f32 dots with convert()s on both
+operands; the weight-side converts get hoisted out of the layer scan and
+materialize an f32 copy of EVERY stacked weight (2x param memory).  Every
+weight-touching matmul in the framework goes through these helpers.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x @ w with f32 accumulation, result cast back to x.dtype."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def contract(pattern: str, *args: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """einsum with f32 accumulation; result in out_dtype (default: first arg's)."""
+    out = jnp.einsum(pattern, *args, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or args[0].dtype)

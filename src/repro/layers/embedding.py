@@ -1,0 +1,108 @@
+"""Token embeddings and the logits head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from .. import flags
+from .dot import mm
+
+
+def embed_init(key, vocab: int, d: int, tie: bool, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": (jax.random.normal(k1, (vocab, d)) * 0.02).astype(dtype)}
+    if not tie:
+        p["head"] = (jax.random.normal(k2, (d, vocab)) * 0.02).astype(dtype)
+    return p
+
+
+def embed_apply(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def head_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    return mm(x, w)
+
+
+@jax.custom_vjp
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE in f32.  logits (B, S, V) any float dtype, labels int32.
+
+    Custom VJP: the forward materializes only per-token lse (B, S) f32 —
+    never a full (B, S, V) f32 copy — and the backward recomputes
+    softmax(logits) chunk-by-chunk (d = (softmax - onehot)/N in the input
+    dtype).  Without this, whisper train_4k keeps 12+ GiB of f32 logits
+    residuals per device.
+    """
+    return _ce_fwd(logits, labels)[0]
+
+
+_CE_CHUNK = 512
+
+
+def _ce_per_token(logits, labels):
+    """Chunked per-token (lse - gold); returns (B, S) f32."""
+    B, S, V = logits.shape
+    c = min(_CE_CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        logits = jnp.pad(logits, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    n = logits.shape[1] // c
+    lc = jnp.moveaxis(logits.reshape(B, n, c, V), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+
+    def one(args):
+        lg, y = args
+        lf = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, y[..., None], axis=-1)[..., 0]
+        return lse - gold  # (B, c)
+
+    per_tok = flags.chunk_map(one, (lc, yc))  # (n, B, c)
+    return jnp.moveaxis(per_tok, 0, 1).reshape(B, S + pad)[:, :S]
+
+
+def _ce_fwd(logits, labels):
+    per_tok = _ce_per_token(logits, labels)
+    return jnp.mean(per_tok), (logits, labels)
+
+
+def _ce_bwd(res, g):
+    logits, labels = res
+    B, S, V = logits.shape
+    c = min(_CE_CHUNK, S)
+    pad = (-S) % c
+    lp = jnp.pad(logits, ((0, 0), (0, pad), (0, 0))) if pad else logits
+    yp = jnp.pad(labels, ((0, 0), (0, pad))) if pad else labels
+    n = lp.shape[1] // c
+    lc = jnp.moveaxis(lp.reshape(B, n, c, V), 1, 0)
+    yc = jnp.moveaxis(yp.reshape(B, n, c), 1, 0)
+    scale = g / (B * S)
+
+    def one(args):
+        lg, y = args
+        p = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)
+        d = p - jax.nn.one_hot(y, V, dtype=jnp.float32)
+        return (d * scale).astype(lg.dtype)  # (B, c, V)
+
+    d = flags.chunk_map(one, (lc, yc))  # (n, B, c, V)
+    d = jnp.moveaxis(d, 0, 1).reshape(B, S + pad, V)[:, :S]
+    return d, None
+
+
+cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+def sinusoidal_positions(S: int, d: int) -> jnp.ndarray:
+    """(S, d) fixed sinusoidal table (whisper-style positions)."""
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((S, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

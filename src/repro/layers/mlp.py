@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (3 mats) and GELU (2 mats)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dot import mm
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (2.0 / d) ** 0.5
+    s_out = (2.0 / d_ff) ** 0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * s_out).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * s_in).astype(dtype)
+    else:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(mm(x, p["w_gate"])) * mm(x, p["w_in"])
+        return mm(h, p["w_out"])
+    h = jax.nn.gelu(mm(x, p["w_in"]) + p["b_in"])
+    return mm(h, p["w_out"]) + p["b_out"]

@@ -1,0 +1,114 @@
+"""Top-k MoE with capacity-bounded sort-free dispatch (GShard-style).
+
+Dispatch avoids the (T, E, C) one-hot tensor: per-expert positions come
+from a (T·K, E) cumsum, tokens scatter into an (E·C, d) buffer (unique
+destinations), expert FFNs run as one batched einsum over stacked expert
+weights, and results gather back with the router weights.  Tokens beyond
+an expert's capacity are dropped (standard GShard semantics); the router
+adds the load-balancing aux loss of Shazeer et al.
+
+Sharding: the expert dimension E shards over the `model` axis when
+divisible (expert parallelism — jamba's 16e on a 16-way axis); otherwise
+the per-expert d_ff shards (tensor parallelism inside experts — mixtral's
+and grok's 8e).  Both arrive via the name-based rules in
+distributed/sharding.py; this module is sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+from .dot import contract
+from ..distributed.constraints import constrain
+
+
+def moe_init(key, d: int, d_ff: int, cfg: MoEConfig, act: str, dtype) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E = cfg.n_experts
+    s_in = (2.0 / d) ** 0.5
+    s_out = (2.0 / d_ff) ** 0.5
+    p = {
+        "router": (jax.random.normal(kr, (d, E)) * s_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(k1, (E, d, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (E, d_ff, d)) * s_out).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (E, d, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def moe_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: MoEConfig,
+    act: str,
+    *,
+    routing_groups: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``routing_groups`` (EXPERIMENTS.md §Perf H2): capacity and dispatch are
+    computed per token GROUP instead of globally.  With groups == the data-
+    parallel degree, the rank cumsum and the dispatch scatter never cross a
+    shard boundary, so GSPMD partitions them shard-locally (the global
+    cumsum otherwise serializes via collective-permute, and the scatter's
+    destination indices force an all-gather of the dispatch buffer).
+    Per-group capacity C/G is the standard DeepSpeed/GShard local-capacity
+    semantics.
+    """
+    capacity_factor = cfg.capacity_factor
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    Gr = routing_groups
+    assert T % Gr == 0, (T, Gr)
+    Tg = T // Gr
+    xt = x.reshape(Gr, Tg, d)
+    xt = constrain(xt, "batch")
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (Gr, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)  # (Gr, Tg, K)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # aux load-balance loss: E * Σ_e fraction_tokens(e) * mean_prob(e)
+    me = jnp.mean(probs, axis=(0, 1))
+    one = jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one, axis=(0, 1))
+    aux = E * jnp.sum(me * ce) * cfg.aux_loss_weight
+
+    C = int(max(1, capacity_factor * Tg * K / E))
+    flat_i = topi.reshape(Gr, Tg * K)  # expert id per (token, k) slot
+    oh = jax.nn.one_hot(flat_i, E, dtype=jnp.int32)  # (Gr, TgK, E)
+    pos = jnp.cumsum(oh, axis=1) - oh  # rank within expert, per group
+    pos = jnp.sum(pos * oh, axis=2)  # (Gr, TgK)
+    keep = pos < C
+    dest = jnp.where(keep, flat_i * C + pos, E * C)  # overflow -> scratch row
+
+    xr = jnp.repeat(xt, K, axis=1)  # (Gr, TgK, d) token per slot
+    buf = jnp.zeros((Gr, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, dst, v: b.at[dst].set(v))(buf, dest, xr)
+    ein = buf[:, : E * C].reshape(Gr, E, C, d)
+    ein = constrain(ein, "batch")
+
+    # fold groups into the capacity dim so the expert einsums keep the
+    # (e batch, c free, d contract) form the CPU thunk runtime executes
+    ein2 = ein.transpose(1, 0, 2, 3).reshape(E, Gr * C, d)
+    if act == "swiglu":
+        h = jax.nn.silu(contract("ecd,edf->ecf", ein2, p["w_gate"])) * contract(
+            "ecd,edf->ecf", ein2, p["w_in"]
+        )
+    else:
+        h = jax.nn.gelu(contract("ecd,edf->ecf", ein2, p["w_in"]))
+    eout = contract("ecf,efd->ecd", h, p["w_out"])
+    eout = eout.reshape(E, Gr, C, d).transpose(1, 0, 2, 3).reshape(Gr, E * C, d)
+    eout = jnp.concatenate([eout, jnp.zeros((Gr, 1, d), eout.dtype)], axis=1)
+
+    slot_out = jax.vmap(jnp.take, in_axes=(0, 0, None))(eout, dest, 0)
+    slot_out = slot_out * topw.reshape(Gr, Tg * K, 1).astype(eout.dtype)
+    out = jnp.sum(slot_out.reshape(Gr, Tg, K, d), axis=2)
+    return out.reshape(B, S, d), aux

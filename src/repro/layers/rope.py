@@ -1,0 +1,69 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim/2 rotary frequencies into (temporal, height,
+width) sections, each rotated by its own position id.  For text-only
+positions all three ids coincide and M-RoPE reduces to RoPE (a property the
+tests assert).  Position ids: (B, S) for RoPE, (3, B, S) for M-RoPE.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim//2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., d) with cos/sin (..., d//2) broadcastable; pairs (even, odd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x (B, S, H, d), positions (B, S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """x (B, S, H, d), positions (3, B, S) (t/h/w ids), sections sum to d//2."""
+    d = x.shape[-1]
+    if sum(sections) != d // 2:
+        raise ValueError(f"mrope sections {sections} must sum to {d // 2}")
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang_all = positions[..., None].astype(jnp.float32) * inv  # (3, B, S, d/2)
+    # first `sections[0]` freqs use temporal ids, next height, rest width.
+    s0, s1, _ = sections
+    ang = jnp.concatenate(
+        [ang_all[0, ..., :s0], ang_all[1, ..., s0 : s0 + s1], ang_all[2, ..., s0 + s1 :]],
+        axis=-1,
+    )  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def text_mrope_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """Text-only M-RoPE ids: all three axes share the 1D position."""
+    return jnp.broadcast_to(positions[None], (3, *positions.shape))

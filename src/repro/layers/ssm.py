@@ -1,0 +1,224 @@
+"""Mamba2 block via SSD (state-space duality) chunked form [arXiv:2405.21060].
+
+Layout follows the reference minimal implementation: the sequence is split
+into chunks of Q; within a chunk the quadratic "attention-like" form runs
+(MXU-friendly einsums with decay matrix L = exp(segsum(a))), and a scan
+carries the (H, P, N) state across chunks.
+
+Block: projections -> causal conv1d (width d_conv over x/B/C, cached for
+decode) -> SSD -> gated RMSNorm (silu(z)) -> out_proj.
+
+The input projection is stored as separate mats (w_z, w_x, w_B, w_C, w_dt)
+rather than one fused w_in so each output dim shards cleanly on the model
+axis (a fused dim's split points would not align with shard boundaries —
+see distributed/sharding.py).
+
+Decode carries (conv_cache (B, d_conv-1, ch), ssm_state (B,H,P,N)) —
+O(1) in sequence length, which is why long_500k runs for ssm/hybrid archs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import flags
+from ..configs.base import SSMConfig
+from .norms import rmsnorm
+from .dot import mm
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., q) -> (..., q, q): L[i,j] = Σ_{j < t <= i} a_t (lower-tri, else -inf)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_init(key, d_model: int, s: SSMConfig, dtype) -> dict:
+    di = s.d_inner(d_model)
+    nh = s.n_ssm_heads(d_model)
+    ks = jax.random.split(key, 6)
+    scale = (2.0 / d_model) ** 0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d_model, di)) * scale).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d_model, di)) * scale).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d_model, s.d_state)) * scale).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d_model, s.d_state)) * scale).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d_model, nh)) * scale).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (s.d_conv, di)) * 0.3).astype(dtype),
+        "conv_B": jnp.zeros((s.d_conv, s.d_state), dtype).at[-1].set(1.0),
+        "conv_C": jnp.zeros((s.d_conv, s.d_state), dtype).at[-1].set(1.0),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_bB": jnp.zeros((s.d_state,), dtype),
+        "conv_bC": jnp.zeros((s.d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": (jax.random.normal(jax.random.fold_in(key, 7), (di, d_model)) * (2.0 / di) ** 0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time + silu. x (B, L, ch), w (d_conv, ch)."""
+    dk = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dk - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(dk):
+        out = out + pad[:, t : t + x.shape[1]] * w[t]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A_log: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    chunk: int,
+    init_state: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD core.  x (b,l,h,p); dt (b,l,h) >0; A_log (h,); B/C (b,l,n); D (h,).
+
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).  l must be divisible by
+    `chunk` (callers pad).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    a = (-jnp.exp(A_log)[None, None] * dt).astype(jnp.float32)  # (b,l,h)
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, n)
+
+    L = jnp.exp(_segsum(ac))  # (b,h,c,q,q)
+    y_diag = jnp.einsum("bcqn,bckn,bhcqk,bckhp->bcqhp", Cc, Bc, L, xc)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # (b,h,c,q)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (b,h,c,q)
+    states = jnp.einsum("bckn,bhck,bckhp->bchpn", Bc, decay_states, xc)
+
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (b,h,c)
+
+    def scan_fn(s, inp):
+        st, dec = inp  # st (b,h,p,n), dec (b,h)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s  # emit state at chunk START
+
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    final, prev_states = flags.chunk_scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    state_decay = jnp.exp(a_cum)  # (b,h,c,q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, final
+
+
+def _project(p, x, s: SSMConfig):
+    z = mm(x, p["w_z"])
+    xs = mm(x, p["w_x"])
+    Bv = mm(x, p["w_B"])
+    Cv = mm(x, p["w_C"])
+    dt = mm(x, p["w_dt"])
+    return z, xs, Bv, Cv, dt
+
+
+def _conv_all(p, xs, Bv, Cv):
+    xs = _causal_conv(xs, p["conv_x"], p["conv_bx"])
+    Bv = _causal_conv(Bv, p["conv_B"], p["conv_bB"])
+    Cv = _causal_conv(Cv, p["conv_C"], p["conv_bC"])
+    return xs, Bv, Cv
+
+
+def _run_ssd(p, xs, Bv, Cv, dt, z, s: SSMConfig, L: int, nh: int, di: int, init_state=None):
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    pad = (-L) % s.chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0))
+        xs, Bv, Cv, dtf = jnp.pad(xs, zp), jnp.pad(Bv, zp), jnp.pad(Cv, zp), jnp.pad(dtf, zp)
+    B_ = xs.shape[0]
+    y, state = ssd_chunked(
+        xs.reshape(B_, L + pad, nh, s.headdim), dtf, p["A_log"], Bv, Cv, p["D"],
+        s.chunk, init_state=init_state,
+    )
+    y = y[:, :L].reshape(B_, L, di).astype(z.dtype)
+    return rmsnorm(y * jax.nn.silu(z), p["norm_scale"]), state
+
+
+def ssm_apply(p: dict, x: jnp.ndarray, s: SSMConfig, d_model: int) -> jnp.ndarray:
+    """Full-sequence Mamba2 block. x (B, L, d_model) -> (B, L, d_model)."""
+    di, nh = s.d_inner(d_model), s.n_ssm_heads(d_model)
+    L = x.shape[1]
+    z, xs, Bv, Cv, dt = _project(p, x, s)
+    xs, Bv, Cv = _conv_all(p, xs, Bv, Cv)
+    y, _ = _run_ssd(p, xs, Bv, Cv, dt, z, s, L, nh, di)
+    return mm(y, p["w_out"])
+
+
+def ssm_prefill(
+    p: dict, x: jnp.ndarray, s: SSMConfig, d_model: int
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Like ssm_apply but also returns (conv_cache, ssm_state) for decode.
+
+    conv_cache holds the last d_conv-1 *pre-conv* channel values of
+    concat(x, B, C)."""
+    di, nh = s.d_inner(d_model), s.n_ssm_heads(d_model)
+    L = x.shape[1]
+    z, xs, Bv, Cv, dt = _project(p, x, s)
+    conv_cache = jnp.concatenate([xs, Bv, Cv], axis=-1)[:, -(s.d_conv - 1) :, :]
+    xs, Bv, Cv = _conv_all(p, xs, Bv, Cv)
+    y, state = _run_ssd(p, xs, Bv, Cv, dt, z, s, L, nh, di)
+    return mm(y, p["w_out"]), (conv_cache.astype(x.dtype), state.astype(jnp.float32))
+
+
+def ssm_decode(
+    p: dict,
+    x: jnp.ndarray,
+    s: SSMConfig,
+    d_model: int,
+    conv_cache: jnp.ndarray,
+    state: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One decode step.  x (B, 1, d_model); conv_cache (B, d_conv-1, ch);
+    state (B, h, p, n).  Returns (y (B,1,d_model), new caches)."""
+    di, nh = s.d_inner(d_model), s.n_ssm_heads(d_model)
+    B_ = x.shape[0]
+    z, xs, Bv, Cv, dt = _project(p, x[:, 0], s)  # (B, ·)
+    xBC = jnp.concatenate([xs, Bv, Cv], axis=-1)  # (B, ch)
+    window = jnp.concatenate([conv_cache.astype(xBC.dtype), xBC[:, None]], axis=1)
+    w_all = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    b_all = jnp.concatenate([p["conv_bx"], p["conv_bB"], p["conv_bC"]], axis=-1)
+    conv = jax.nn.silu(jnp.einsum("btc,tc->bc", window, w_all) + b_all)
+    new_conv_cache = window[:, 1:]
+    xs, Bv, Cv = jnp.split(conv, [di, di + s.d_state], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    xh = xs.reshape(B_, nh, s.headdim).astype(jnp.float32)
+    dA = jnp.exp(-jnp.exp(p["A_log"])[None] * dtf)  # (B, nh)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", Bv.astype(jnp.float32), dtf, xh)
+    state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return mm(y, p["w_out"])[:, None], (new_conv_cache, state)

@@ -1,0 +1,42 @@
+"""Modality frontend stubs (per the assignment: the transformer backbone is
+real; vision/audio frontends supply *precomputed* embeddings via
+``input_specs()``).
+
+* ``vlm``  (qwen2-vl): the first `n_patches` sequence positions carry patch
+  embeddings (B, n_patches, d_model); the rest are text tokens.  M-RoPE ids
+  for the patch block use a synthetic (t, h, w) grid; text continues 1D.
+* ``audio`` (whisper): the encoder consumes frame embeddings
+  (B, enc_seq, d_model) directly.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# patch grid assumed by the stub (t=4, h=8, w=8 -> 256 patch positions)
+VLM_PATCH_GRID: Tuple[int, int, int] = (4, 8, 8)
+VLM_N_PATCHES = VLM_PATCH_GRID[0] * VLM_PATCH_GRID[1] * VLM_PATCH_GRID[2]
+
+
+def vlm_splice(tok_embeds: jnp.ndarray, patch_embeds: jnp.ndarray) -> jnp.ndarray:
+    """Replace the first n_patches positions with the patch embeddings."""
+    n = patch_embeds.shape[1]
+    return jnp.concatenate([patch_embeds.astype(tok_embeds.dtype), tok_embeds[:, n:]], axis=1)
+
+
+def vlm_mrope_positions(B: int, S: int, n_patches: int = VLM_N_PATCHES) -> jnp.ndarray:
+    """(3, B, S) M-RoPE ids: (t,h,w) grid over the patch block (truncated to
+    n_patches), then text positions continuing from max(t,h,w) of the grid
+    (qwen2-vl scheme)."""
+    t, h, w = VLM_PATCH_GRID
+    ids_t = jnp.repeat(jnp.arange(t), h * w)[:n_patches]
+    ids_h = jnp.tile(jnp.repeat(jnp.arange(h), w), t)[:n_patches]
+    ids_w = jnp.tile(jnp.arange(w), t * h)[:n_patches]
+    grid = jnp.stack([ids_t, ids_h, ids_w])  # (3, n_patches)
+    start = int(max(t, h, w))
+    text = jnp.arange(S - n_patches) + start  # (S - n_patches,)
+    text3 = jnp.broadcast_to(text[None], (3, S - n_patches))
+    pos = jnp.concatenate([grid, text3], axis=1)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, B, S))

@@ -1,0 +1,4 @@
+"""Model builders: decoder-only LM (transformer.py), enc-dec (encdec.py),
+and the unified build_model API (api.py)."""
+
+from .api import Model, build_model  # noqa: F401

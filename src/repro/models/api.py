@@ -1,0 +1,88 @@
+"""Unified model API: ``build_model(cfg)`` -> init / forward / loss /
+prefill / decode_step / make_caches / input_specs.
+
+``input_specs(shape)`` returns weak-type-correct ShapeDtypeStruct stand-ins
+for every *non-parameter* input of the step the shape exercises (train ->
+train loss inputs; prefill -> token batch; decode -> token + caches), so
+the dry-run can ``jax.jit(step).lower(**specs)`` without allocating.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..layers import embedding as emb_l
+from ..layers import stubs
+from . import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_caches: Callable
+    input_specs: Callable
+
+
+def _frontend_specs(cfg: ModelConfig, B: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "patch":
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((B, stubs.VLM_N_PATCHES, cfg.d_model), dt)
+        }
+    if cfg.frontend == "audio":
+        return {"frame_embeds": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dt)}
+    return {}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    mod = encdec if cfg.enc_dec else transformer
+
+    def init(key):
+        return mod.init_params(key, cfg)
+
+    def forward(params, batch, *, remat=True):
+        return mod.forward(params, cfg, batch, remat=remat)
+
+    def loss(params, batch, *, remat=True):
+        logits, aux = mod.forward(params, cfg, batch, remat=remat)
+        ce = emb_l.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return ce + aux
+
+    def prefill(params, batch, *, cache_len):
+        return mod.prefill(params, cfg, batch, cache_len=cache_len)
+
+    def decode_step(params, tokens, caches, *, use_pallas=False):
+        return mod.decode_step(params, cfg, tokens, caches, use_pallas=use_pallas)
+
+    def make_caches(B, S_max, *, abstract=False):
+        return mod.make_caches(cfg, B, S_max, abstract=abstract)
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            specs = {
+                "tokens": tok((B, S), jnp.int32),
+                "labels": tok((B, S), jnp.int32),
+                **_frontend_specs(cfg, B),
+            }
+            return specs
+        if shape.kind == "prefill":
+            return {"tokens": tok((B, S), jnp.int32), **_frontend_specs(cfg, B)}
+        # decode: one new token against a cache of S entries
+        return {
+            "tokens": tok((B, 1), jnp.int32),
+            "caches": make_caches(B, S, abstract=True),
+        }
+
+    return Model(cfg, init, forward, loss, prefill, decode_step, make_caches, input_specs)

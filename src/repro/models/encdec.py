@@ -1,0 +1,222 @@
+"""Whisper-style encoder-decoder (audio family).
+
+Encoder: `n_enc_layers` bidirectional attention blocks over precomputed
+frame embeddings (the conv frontend is a stub per the assignment) with
+sinusoidal positions.  Decoder: causal self-attention + cross-attention to
+the encoder output + MLP, with sinusoidal positions on token embeddings.
+
+Caches: self-attn KV per decoder layer (stacked) + cross-attn KV computed
+once at prefill (keyed off the encoder output, static during decode).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import flags
+from ..configs.base import ModelConfig
+from ..layers import attention as attn_l
+from ..layers import embedding as emb_l
+from ..layers import mlp as mlp_l
+from ..layers import norms as norm_l
+from ..layers.attention import chunked_attention
+from ..layers.dot import contract
+from ..distributed.constraints import constrain
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+        "attn": attn_l.attn_init(k1, cfg.d_model, cfg.attn, _dt(cfg)),
+        "norm2": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+        "mlp": mlp_l.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act, _dt(cfg)),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+        "self": attn_l.attn_init(k1, cfg.d_model, cfg.attn, _dt(cfg)),
+        "norm_x": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+        "cross": attn_l.attn_init(k2, cfg.d_model, cfg.attn, _dt(cfg)),
+        "norm2": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+        "mlp": mlp_l.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act, _dt(cfg)),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": emb_l.embed_init(kt, cfg.vocab, cfg.d_model, cfg.tie_embeddings, _dt(cfg)),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": norm_l.norm_init(cfg.norm, cfg.d_model, _dt(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(p, enc_out, cfg):
+    k = contract("bsd,dhk->bshk", enc_out, p["wk"])
+    v = contract("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.attn.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def _cross_attend(p, x, k, v, cfg):
+    q = contract("bsd,dhk->bshk", x, p["wq"])
+    if cfg.attn.qkv_bias:
+        q = q + p["bq"]
+    o = chunked_attention(q, k, v, causal=False)
+    return contract("bshk,hkd->bsd", o, p["wo"])
+
+
+def encode(params, cfg: ModelConfig, frame_embeds: jnp.ndarray) -> jnp.ndarray:
+    """frame_embeds (B, enc_seq, d_model) -> encoder output."""
+    S = frame_embeds.shape[1]
+    pos = emb_l.sinusoidal_positions(S, cfg.d_model).astype(frame_embeds.dtype)
+    x = constrain(frame_embeds + pos[None], "batch")
+    dummy_pos = jnp.broadcast_to(jnp.arange(S)[None], (x.shape[0], S))
+
+    def body(x, p):
+        h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+        q, k, v = attn_l._qkv(p["attn"], h, cfg.attn, dummy_pos, rope=False)
+        o = chunked_attention(q, k, v, causal=False)
+        x = x + contract("bshk,hkd->bsd", o, p["attn"]["wo"])
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        x = x + mlp_l.mlp_apply(p["mlp"], h, cfg.act)
+        return constrain(x, "batch"), None
+
+    x, _ = flags.chunk_scan(body, x, params["enc_blocks"])
+    return norm_l.norm_apply(cfg.norm, x, params["enc_norm"])
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    """Training: batch {tokens (B,S), frame_embeds (B,enc_seq,d)} -> logits."""
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = emb_l.embed_apply(params["embed"], tokens)
+    x = constrain(x + emb_l.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None], "batch")
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+        q, k, v = attn_l._qkv(p["self"], h, cfg.attn, positions, rope=False)
+        o = chunked_attention(q, k, v, causal=True)
+        x = x + contract("bshk,hkd->bsd", o, p["self"]["wo"])
+        h = norm_l.norm_apply(cfg.norm, x, p["norm_x"])
+        kx, vx = _cross_kv(p["cross"], enc_out, cfg)
+        x = x + _cross_attend(p["cross"], h, kx, vx, cfg)
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        x = x + mlp_l.mlp_apply(p["mlp"], h, cfg.act)
+        return constrain(x, "batch"), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = flags.chunk_scan(body_fn, x, params["dec_blocks"])
+    x = norm_l.norm_apply(cfg.norm, x, params["final_norm"])
+    return emb_l.head_apply(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg: ModelConfig, batch, *, cache_len: int):
+    enc_out = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = emb_l.embed_apply(params["embed"], tokens)
+    x = constrain(x + emb_l.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None], "batch")
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+        q, k, v = attn_l._qkv(p["self"], h, cfg.attn, positions, rope=False)
+        o = chunked_attention(q, k, v, causal=True)
+        pad = ((0, 0), (0, cache_len - S), (0, 0), (0, 0))
+        cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        x = x + contract("bshk,hkd->bsd", o, p["self"]["wo"])
+        h = norm_l.norm_apply(cfg.norm, x, p["norm_x"])
+        kx, vx = _cross_kv(p["cross"], enc_out, cfg)
+        cache["xk"], cache["xv"] = kx, vx
+        x = x + _cross_attend(p["cross"], h, kx, vx, cfg)
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        x = x + mlp_l.mlp_apply(p["mlp"], h, cfg.act)
+        return constrain(x, "batch"), cache
+
+    x, caches = flags.chunk_scan(body, x, params["dec_blocks"])
+    x = norm_l.norm_apply(cfg.norm, x, params["final_norm"])
+    lengths = jnp.full((B,), S, jnp.int32)
+    return emb_l.head_apply(params["embed"], x), {"dec": caches, "lengths": lengths}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, *, use_pallas: bool = False):
+    lengths = caches["lengths"]
+    B = tokens.shape[0]
+    x = emb_l.embed_apply(params["embed"], tokens)
+    # position = current length (per batch); use mean position embedding via
+    # dynamic gather from the sinusoidal table.
+    S_max = caches["dec"]["k"].shape[2]
+    table = emb_l.sinusoidal_positions(S_max, cfg.d_model).astype(x.dtype)
+    x = x + table[lengths][:, None]
+
+    def body(carry, inp):
+        x, dec = carry
+        p, r = inp
+        c = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, r, 0, keepdims=False), dec
+        )
+        h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+        y, (k, v) = attn_l.attn_decode(
+            p["self"], h, cfg.attn, c["k"], c["v"], lengths, use_pallas=use_pallas
+        )
+        x = x + y
+        h = norm_l.norm_apply(cfg.norm, x, p["norm_x"])
+        x = x + _cross_attend(p["cross"], h, c["xk"], c["xv"], cfg)
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        x = x + mlp_l.mlp_apply(p["mlp"], h, cfg.act)
+        dec = {
+            "k": lax.dynamic_update_index_in_dim(dec["k"], k, r, 0),
+            "v": lax.dynamic_update_index_in_dim(dec["v"], v, r, 0),
+            "xk": dec["xk"],
+            "xv": dec["xv"],
+        }
+        return (x, dec), None
+
+    (x, new), _ = flags.chunk_scan(
+        body, (x, caches["dec"]), (params["dec_blocks"], jnp.arange(cfg.n_layers))
+    )
+    x = norm_l.norm_apply(cfg.norm, x, params["final_norm"])
+    return emb_l.head_apply(params["embed"], x), {"dec": new, "lengths": lengths + 1}
+
+
+def make_caches(cfg: ModelConfig, B: int, S_max: int, *, abstract: bool = False):
+    a = cfg.attn
+    L = cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    dec = {
+        "k": mk((L, B, S_max, a.n_kv_heads, a.head_dim), dt),
+        "v": mk((L, B, S_max, a.n_kv_heads, a.head_dim), dt),
+        "xk": mk((L, B, cfg.enc_seq, a.n_kv_heads, a.head_dim), dt),
+        "xv": mk((L, B, cfg.enc_seq, a.n_kv_heads, a.head_dim), dt),
+    }
+    lengths = mk((B,), jnp.int32)
+    return {"dec": dec, "lengths": lengths}

@@ -1,0 +1,343 @@
+"""Decoder-only LM assembled from the layer zoo, covering dense / MoE / SSM
+/ hybrid / VLM families via the config's ``block_pattern``.
+
+Layer stacking: the pattern (length PL) repeats R = n_layers // PL times;
+parameters for pattern position j are stacked over repeats (leading dim R)
+and the repeats run under one ``lax.scan`` (small HLO, fast compiles, remat
+per repeat).  A partial trailing repeat (gemma3's 62 = 10·6 + 2) is applied
+unrolled after the scan.
+
+Three entry points share the block code:
+  forward  — full-sequence logits (training)
+  prefill  — full-sequence logits + decode caches
+  decode   — single-token step against the caches
+
+Caches (leading dim R, stacked like params):
+  attn/local/global: {k, v: (R, B, S_max, Hkv, hd)}         + lengths (B,)
+  mamba:             {conv: (R, B, d_conv-1, ch), state: (R, B, h, p, n)}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import flags
+from ..configs.base import ModelConfig, parse_block_token
+from ..distributed.constraints import constrain, constrain_replicated
+from ..layers import attention as attn_l
+from ..layers import embedding as emb_l
+from ..layers import mlp as mlp_l
+from ..layers import moe as moe_l
+from ..layers import norms as norm_l
+from ..layers import ssm as ssm_l
+from ..layers import stubs
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, tok: str) -> Dict[str, Any]:
+    mixer, is_moe = parse_block_token(tok)
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": norm_l.norm_init(cfg.norm, cfg.d_model, dt)}
+    if mixer == "mamba":
+        p["mixer"] = ssm_l.ssm_init(keys[0], cfg.d_model, cfg.ssm, dt)
+    else:
+        p["mixer"] = attn_l.attn_init(keys[0], cfg.d_model, cfg.attn, dt)
+    if cfg.d_ff > 0:
+        p["norm2"] = norm_l.norm_init(cfg.norm, cfg.d_model, dt)
+        if is_moe:
+            p["ffn"] = moe_l.moe_init(keys[1], cfg.d_model, cfg.d_ff, cfg.moe, cfg.act, dt)
+        else:
+            p["ffn"] = mlp_l.mlp_init(keys[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    PL = len(cfg.block_pattern)
+    R = cfg.n_layers // PL
+    REM = cfg.n_layers % PL
+    k_emb, k_blocks, k_rem, k_fin = jax.random.split(key, 4)
+
+    params: Dict[str, Any] = {
+        "embed": emb_l.embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.tie_embeddings, dt),
+        "final_norm": norm_l.norm_init(cfg.norm, cfg.d_model, dt),
+    }
+
+    def init_repeat(k):
+        ks = jax.random.split(k, PL)
+        return {str(j): _init_block(ks[j], cfg, tok) for j, tok in enumerate(cfg.block_pattern)}
+
+    rkeys = jax.random.split(k_blocks, R)
+    params["blocks"] = jax.vmap(init_repeat)(rkeys)
+    if REM:
+        ks = jax.random.split(k_rem, REM)
+        params["rem"] = {
+            str(j): _init_block(ks[j], cfg, cfg.block_pattern[j]) for j in range(REM)
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _block_full(p, x, tok: str, cfg: ModelConfig, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block (train/prefill without cache capture)."""
+    mixer, is_moe = parse_block_token(tok)
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+    if mixer == "mamba":
+        y = ssm_l.ssm_apply(p["mixer"], h, cfg.ssm, cfg.d_model)
+    else:
+        window = cfg.attn.swa_window if mixer == "local" else None
+        y = attn_l.attn_apply(p["mixer"], h, cfg.attn, positions, window=window)
+    x = x + y
+    if cfg.d_ff > 0:
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        if is_moe:
+            y, aux = moe_l.moe_apply(
+                p["ffn"], h, cfg.moe, cfg.act, routing_groups=cfg.moe_routing_groups
+            )
+        else:
+            y = mlp_l.mlp_apply(p["ffn"], h, cfg.act)
+        x = x + y
+    return x, aux
+
+
+def _block_prefill(p, x, tok, cfg, positions, cache_len):
+    mixer, is_moe = parse_block_token(tok)
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+    if mixer == "mamba":
+        y, cache = ssm_l.ssm_prefill(p["mixer"], h, cfg.ssm, cfg.d_model)
+        cache = {"conv": cache[0], "state": cache[1]}
+    else:
+        window = cfg.attn.swa_window if mixer == "local" else None
+        y, (k, v) = attn_l.attn_prefill(p["mixer"], h, cfg.attn, positions, cache_len, window=window)
+        cache = {"k": k, "v": v}
+    x = x + y
+    if cfg.d_ff > 0:
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        if is_moe:
+            y, aux = moe_l.moe_apply(
+                p["ffn"], h, cfg.moe, cfg.act, routing_groups=cfg.moe_routing_groups
+            )
+        else:
+            y = mlp_l.mlp_apply(p["ffn"], h, cfg.act)
+        x = x + y
+    return x, aux, cache
+
+
+def _block_decode(p, x, tok, cfg, cache, lengths, use_pallas):
+    mixer, is_moe = parse_block_token(tok)
+    h = norm_l.norm_apply(cfg.norm, x, p["norm1"])
+    if mixer == "mamba":
+        y, (conv, state) = ssm_l.ssm_decode(
+            p["mixer"], h, cfg.ssm, cfg.d_model, cache["conv"], cache["state"]
+        )
+        cache = {"conv": conv, "state": state}
+    else:
+        window = cfg.attn.swa_window if mixer == "local" else None
+        y, (k, v) = attn_l.attn_decode(
+            p["mixer"], h, cfg.attn, cache["k"], cache["v"], lengths,
+            window=window, use_pallas=use_pallas,
+        )
+        cache = {"k": k, "v": v}
+    x = x + y
+    if cfg.d_ff > 0:
+        h = norm_l.norm_apply(cfg.norm, x, p["norm2"])
+        if is_moe:
+            y, _ = moe_l.moe_apply(
+                p["ffn"], h, cfg.moe, cfg.act, routing_groups=cfg.moe_routing_groups
+            )
+        else:
+            y = mlp_l.mlp_apply(p["ffn"], h, cfg.act)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / positions
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = emb_l.embed_apply(params["embed"], tokens)
+    x = constrain(x, "batch")
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        x = stubs.vlm_splice(x, batch["patch_embeds"])
+        positions = stubs.vlm_mrope_positions(B, S, batch["patch_embeds"].shape[1])
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *, remat: bool = True):
+    """Full-sequence logits (B, S, vocab) + moe aux loss."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    PL = len(cfg.block_pattern)
+
+    def repeat_body(carry, rep_params):
+        x, aux = carry
+        for j, tok in enumerate(cfg.block_pattern):
+            x, a = _block_full(rep_params[str(j)], x, tok, cfg, positions)
+            x = constrain(x, "batch")
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(repeat_body) if remat else repeat_body
+    (x, aux), _ = flags.chunk_scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    for j in range(cfg.n_layers % PL):
+        x, a = _block_full(params["rem"][str(j)], x, cfg.block_pattern[j], cfg, positions)
+        aux = aux + a
+    x = norm_l.norm_apply(cfg.norm, x, params["final_norm"])
+    logits = emb_l.head_apply(params["embed"], x)
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, batch, *, cache_len: int):
+    """Logits + decode caches (stacked over repeats)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    PL = len(cfg.block_pattern)
+
+    def repeat_body(x, rep_params):
+        caches = {}
+        for j, tok in enumerate(cfg.block_pattern):
+            x, _, cache = _block_prefill(rep_params[str(j)], x, tok, cfg, positions, cache_len)
+            x = constrain(x, "batch")
+            caches[str(j)] = cache
+        return x, caches
+
+    x, caches = flags.chunk_scan(repeat_body, x, params["blocks"])
+    rem_caches = {}
+    for j in range(cfg.n_layers % PL):
+        x, _, cache = _block_prefill(
+            params["rem"][str(j)], x, cfg.block_pattern[j], cfg, positions, cache_len
+        )
+        rem_caches[str(j)] = cache
+    x = norm_l.norm_apply(cfg.norm, x, params["final_norm"])
+    logits = emb_l.head_apply(params["embed"], x)
+    lengths = jnp.full((batch["tokens"].shape[0],), batch["tokens"].shape[1], jnp.int32)
+    return logits, {"blocks": caches, "rem": rem_caches, "lengths": lengths}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, *, use_pallas: bool = False):
+    """tokens (B, 1) -> logits (B, 1, vocab) + updated caches.
+
+    Caches ride the scan CARRY (updated in place via per-repeat
+    dynamic-update-slice on the stacked dim) rather than as xs/ys — the
+    while-loop state aliases in place, so the cache exists ONCE in memory
+    instead of as separate input and output stacks.
+    """
+    lengths = caches["lengths"]
+    x = emb_l.embed_apply(params["embed"], tokens)
+    if cfg.decode_replicate_activations:
+        x = constrain_replicated(x)
+    PL = len(cfg.block_pattern)
+
+    def repeat_body(carry, inp):
+        x, blocks = carry
+        rep_params, r = inp
+        for j, tok in enumerate(cfg.block_pattern):
+            cache_rj = jax.tree.map(
+                lambda c: lax.dynamic_index_in_dim(c, r, 0, keepdims=False),
+                blocks[str(j)],
+            )
+            x, c_new = _block_decode(
+                rep_params[str(j)], x, tok, cfg, cache_rj, lengths, use_pallas
+            )
+            blocks = {
+                **blocks,
+                str(j): jax.tree.map(
+                    lambda c, n: lax.dynamic_update_index_in_dim(c, n, r, 0),
+                    blocks[str(j)],
+                    c_new,
+                ),
+            }
+        return (x, blocks), None
+
+    R = cfg.n_layers // PL
+    (x, new_caches), _ = flags.chunk_scan(
+        repeat_body, (x, caches["blocks"]), (params["blocks"], jnp.arange(R))
+    )
+    new_rem = {}
+    for j in range(cfg.n_layers % PL):
+        x, c = _block_decode(
+            params["rem"][str(j)], x, cfg.block_pattern[j], cfg,
+            caches["rem"][str(j)], lengths, use_pallas,
+        )
+        new_rem[str(j)] = c
+    x = norm_l.norm_apply(cfg.norm, x, params["final_norm"])
+    logits = emb_l.head_apply(params["embed"], x)
+    return logits, {"blocks": new_caches, "rem": new_rem, "lengths": lengths + 1}
+
+
+# ---------------------------------------------------------------------------
+# Cache constructors (zeros + ShapeDtypeStruct variants)
+# ---------------------------------------------------------------------------
+
+
+def _cache_shape_for(cfg: ModelConfig, tok: str, B: int, S_max: int):
+    mixer, _ = parse_block_token(tok)
+    dt = _dtype(cfg)
+    if mixer == "mamba":
+        s = cfg.ssm
+        ch = s.d_inner(cfg.d_model) + 2 * s.d_state
+        return {
+            "conv": ((B, s.d_conv - 1, ch), dt),
+            "state": ((B, s.n_ssm_heads(cfg.d_model), s.headdim, s.d_state), jnp.float32),
+        }
+    a = cfg.attn
+    return {
+        "k": ((B, S_max, a.n_kv_heads, a.head_dim), dt),
+        "v": ((B, S_max, a.n_kv_heads, a.head_dim), dt),
+    }
+
+
+def make_caches(cfg: ModelConfig, B: int, S_max: int, *, abstract: bool = False):
+    """Zero (or ShapeDtypeStruct) caches matching prefill's output layout."""
+    PL = len(cfg.block_pattern)
+    R = cfg.n_layers // PL
+    REM = cfg.n_layers % PL
+
+    def mk(shape, dtype, lead=None):
+        full = ((lead,) if lead else ()) + shape
+        if abstract:
+            return jax.ShapeDtypeStruct(full, dtype)
+        return jnp.zeros(full, dtype)
+
+    blocks = {}
+    for j, tok in enumerate(cfg.block_pattern):
+        spec = _cache_shape_for(cfg, tok, B, S_max)
+        blocks[str(j)] = {k: mk(s, d, lead=R) for k, (s, d) in spec.items()}
+    rem = {}
+    for j in range(REM):
+        spec = _cache_shape_for(cfg, cfg.block_pattern[j], B, S_max)
+        rem[str(j)] = {k: mk(s, d) for k, (s, d) in spec.items()}
+    lengths = (
+        jax.ShapeDtypeStruct((B,), jnp.int32) if abstract else jnp.zeros((B,), jnp.int32)
+    )
+    return {"blocks": blocks, "rem": rem, "lengths": lengths}

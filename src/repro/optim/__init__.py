@@ -1,0 +1,4 @@
+"""Optimizers and schedules."""
+
+from .adamw import AdamWConfig, apply_updates, init_state  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401

@@ -1,0 +1,111 @@
+"""AdamW with selectable state dtype (f32 / bf16 / int8-quantized moments).
+
+The moment-dtype knob is the optimizer-memory half of the framework's
+distributed-optimization toolkit (DESIGN.md §6): grok-1 training on 256
+chips fits only with bf16 or int8 moments (EXPERIMENTS.md §Dry-run).
+int8 moments use per-tensor-block absmax scaling (block = last dim), the
+standard 8-bit-Adam construction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray  # int8 payload
+    scale: jnp.ndarray  # f32 absmax per last-dim block
+
+
+def _quantize(x: jnp.ndarray) -> QTensor:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32))
+
+
+def _dequantize(t: QTensor) -> jnp.ndarray:
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def _to_state_dtype(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _from_state_dtype(x, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def init_state(params: Any, cfg: AdamWConfig) -> dict:
+    def zeros_like_state(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _to_state_dtype(z, cfg.state_dtype)
+
+    return {
+        "m": jax.tree.map(zeros_like_state, params),
+        "v": jax.tree.map(zeros_like_state, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig
+) -> Tuple[Any, dict]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_q = cfg.state_dtype == "int8"
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _from_state_dtype(m, cfg.state_dtype)
+        vf = _from_state_dtype(v, cfg.state_dtype)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = mf / b1c
+        vhat = vf / b2c
+        u = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype)
+        return newp, _to_state_dtype(mf, cfg.state_dtype), _to_state_dtype(vf, cfg.state_dtype)
+
+    treedef = jax.tree.structure(params)
+    flat_p = treedef.flatten_up_to(params)
+    flat_g = treedef.flatten_up_to(grads)
+    if is_q:
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+    else:
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

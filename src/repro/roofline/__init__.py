@@ -1,0 +1,3 @@
+"""Roofline-term extraction from compiled artifacts."""
+
+from .analysis import RooflineTerms, analyze_compiled, collective_bytes, roofline  # noqa: F401

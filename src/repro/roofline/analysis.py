@@ -1,0 +1,119 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §7).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+`cost_analysis()` supplies per-device FLOPs/bytes for the SPMD-partitioned
+program; collective bytes are parsed from the optimized HLO (result-shape
+bytes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute; async `-done` ops are skipped to avoid double counting).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from ..core.hw import HardwareSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\b"
+)
+_DONE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)-done\b"
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-category result-shape bytes of collectives in optimized HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        if _DONE_RE.search(line):
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(0))[0]
+        # result decl is everything before the op name
+        b = _shape_bytes(lhs)
+        key = m.group(1)
+        out[key] = out.get(key, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_flops_ratio: float = 0.0  # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll_bytes_per_device: float,
+    *,
+    hw: HardwareSpec = TPU_V5E,
+    chips: int = 256,
+    model_flops: float = 0.0,
+) -> RooflineTerms:
+    c = flops_per_device / hw.peak_flops
+    m = bytes_per_device / hw.hbm_bw
+    l = coll_bytes_per_device / hw.ici_bw
+    dom = max(("compute", c), ("memory", m), ("collective", l), key=lambda t: t[1])[0]
+    ratio = model_flops / (flops_per_device * chips) if flops_per_device else 0.0
+    return RooflineTerms(
+        flops_per_device, bytes_per_device, coll_bytes_per_device,
+        c, m, l, dom, model_flops, ratio,
+    )
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    hw: HardwareSpec = TPU_V5E,
+    chips: int = 256,
+    model_flops: float = 0.0,
+) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())["total"]
+    return roofline(
+        flops, byts, coll, hw=hw, chips=chips, model_flops=model_flops
+    )

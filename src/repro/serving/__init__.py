@@ -1,0 +1,3 @@
+"""Batched inference engine (continuous batching)."""
+
+from .engine import EngineConfig, Request, ServingEngine  # noqa: F401

@@ -1,0 +1,113 @@
+"""Batched serving engine: continuous batching over prefill/decode steps.
+
+The ZNNi planner logic applied to LM serving (DESIGN.md §5): the engine
+picks the largest decode batch whose KV cache fits the memory budget
+(slots), admits requests into free slots (continuous batching), and runs
+one fused decode step per tick for all active slots.  Prefill runs
+per-request (chunked) and its KV is packed into the slot.
+
+Single-host reference implementation; the batch tensors it produces are
+exactly the decode-shape inputs the dry-run shards over the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.api import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S_prompt,) int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineConfig:
+    slots: int  # max concurrent sequences (the "batch" the planner sized)
+    max_seq: int  # KV capacity per slot
+    eos_id: int = -1  # -1: never stop early
+
+
+class ServingEngine:
+    """Slot-based continuous batching."""
+
+    def __init__(self, model: Model, params: Any, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.caches = model.make_caches(cfg.slots, cfg.max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * cfg.slots
+        self.queue: List[Request] = []
+        self._next_tok = jnp.zeros((cfg.slots, 1), jnp.int32)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.cfg.slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(slot, req)
+                self.slot_req[slot] = req
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache1 = self.model.prefill(
+            self.params, {"tokens": toks}, cache_len=self.cfg.max_seq
+        )
+        first = int(jnp.argmax(logits[0, -1]))
+        req.out.append(first)
+        self._next_tok = self._next_tok.at[slot, 0].set(first)
+        # pack the single-sequence cache into the slot of the batched cache
+        def pack(big, small):
+            if big.ndim == 1:  # lengths
+                return big.at[slot].set(small[0])
+            # batch dim is axis 1 for stacked caches (R/L, B, ...)
+            return jax.lax.dynamic_update_index_in_dim(big, small[:, 0], slot, 1)
+
+        self.caches = jax.tree.map(pack, self.caches, cache1)
+
+    # -- decode tick ---------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine tick: admit, fused decode for all slots; returns the
+        number of active sequences."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        logits, self.caches = self.model.decode_step(
+            self.params, self._next_tok, self.caches
+        )
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        self._next_tok = nxt[:, None]
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            if len(req.out) >= req.max_new or tok == self.cfg.eos_id:
+                req.done = True
+                self.slot_req[slot] = None
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return finished

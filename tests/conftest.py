@@ -1,0 +1,35 @@
+"""Shared fixtures/helpers.  NOTE: no XLA_FLAGS here — tests must see the
+real single CPU device; only launch/dryrun.py forces 512 placeholders."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 560) -> str:
+    """Run a python snippet in a subprocess with N fake host devices.
+
+    Used by tests that need a real multi-device mesh (pipeline, halo
+    exchange, ring collectives) without polluting this process's jax."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(0)

@@ -1,0 +1,93 @@
+"""ConvNet assembly (C8): plan execution equals the dense sliding-window
+oracle; paper net geometry (Table III) is self-consistent."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ZNNI_NETS
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet
+
+TINY = ConvNetConfig(
+    "tiny", 1,
+    (L("conv", 2, 4), L("pool", 2), L("conv", 3, 5), L("pool", 2), L("conv", 3, 2)),
+)
+
+
+@pytest.mark.parametrize("prims", [
+    ["direct", "mpf", "direct", "mpf", "direct"],
+    ["fft_task", "mpf", "fft_data", "mpf", "fft_task"],
+    ["fft_data", "mpf", "fft_task", "mpf", "direct"],
+])
+def test_plan_matches_dense_reference(prims, rng):
+    m = 2
+    n_in = TINY.valid_input_size(m)
+    params = convnet.init_params(jax.random.PRNGKey(0), TINY)
+    x = jnp.asarray(rng.normal(size=(1, 1, n_in, n_in, n_in)).astype(np.float32))
+    got = convnet.apply_plan(params, TINY, x, prims)
+    want = convnet.apply_dense_reference(params, TINY, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-4)
+
+
+def test_plain_pool_plan_is_one_subsampling(rng):
+    """pool (not MPF) computes the stride-P subsampling of the dense output."""
+    m = 2
+    # plain-pool valid input: conv adds k-1, pool multiplies by p
+    n = m
+    for layer in reversed(TINY.layers):
+        n = n + layer.size - 1 if layer.kind == "conv" else n * layer.size
+    params = convnet.init_params(jax.random.PRNGKey(1), TINY)
+    x = jnp.asarray(rng.normal(size=(1, 1, n, n, n)).astype(np.float32))
+    got = convnet.apply_plan(params, TINY, x, ["direct", "pool", "direct", "pool", "direct"])
+    dense = convnet.apply_dense_reference(params, TINY, x)
+    want = dense[:, :, :: TINY.total_pooling(), :: TINY.total_pooling(), :: TINY.total_pooling()]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-4)
+
+
+def test_batch_fragments_bookkeeping(rng):
+    m, S = 1, 2
+    n_in = TINY.valid_input_size(m)
+    params = convnet.init_params(jax.random.PRNGKey(2), TINY)
+    x = jnp.asarray(rng.normal(size=(S, 1, n_in, n_in, n_in)).astype(np.float32))
+    raw = convnet.apply_plan(params, TINY, x, ["direct", "mpf", "direct", "mpf", "direct"], recombine=False)
+    assert raw.shape[0] == S * TINY.total_pooling() ** 3
+    rec = convnet.apply_plan(params, TINY, x, ["direct", "mpf", "direct", "mpf", "direct"])
+    want = convnet.apply_dense_reference(params, TINY, x)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(want), atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", list(ZNNI_NETS))
+def test_paper_net_geometry(name):
+    net = ZNNI_NETS[name]
+    for m in (1, 2, 5):
+        n_in = net.valid_input_size(m)
+        assert net.output_size(n_in) == m
+    # Table III field-of-view sanity: n537 deepest FOV, n337 smallest
+    fovs = {k: v.field_of_view() for k, v in ZNNI_NETS.items()}
+    assert fovs["n337"] < fovs["n726"] < fovs["n926"] < fovs["n537"]
+
+
+def test_paper_nets_tiny_forward(rng):
+    """Run n337 structure (reduced channels) end-to-end once."""
+    import dataclasses
+
+    net = ZNNI_NETS["n337"]
+    small = ConvNetConfig(
+        "n337-small", 1,
+        tuple(
+            L(l.kind, l.size, min(l.out_channels, 4) if l.kind == "conv" else 0)
+            for l in net.layers
+        ),
+    )
+    n_in = small.valid_input_size(1)
+    params = convnet.init_params(jax.random.PRNGKey(3), small)
+    x = jnp.asarray(rng.normal(size=(1, 1, n_in, n_in, n_in)).astype(np.float32))
+    prims = ["fft_task" if l.kind == "conv" else "mpf" for l in small.layers]
+    out = convnet.apply_plan(params, small, x, prims)
+    P = small.total_pooling()
+    assert out.shape == (1, 3 if False else small.layers[-1].out_channels, P, P, P)
+    assert bool(jnp.isfinite(out).all())

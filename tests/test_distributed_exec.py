@@ -1,0 +1,159 @@
+"""Multi-device semantics: pipeline schedule, halo exchange, ring collectives.
+
+Real multi-device cases run in a subprocess with forced host devices so
+this process keeps its single CPU device.
+"""
+
+import numpy as np
+
+from repro.core.pipeline import pipeline_schedule, split_net_at_theta
+from tests.conftest import run_with_devices
+
+
+def test_pipeline_schedule_queue_depth_one():
+    """§VII-C: producer may not run ahead; steady state = max stage time."""
+    mk, events = pipeline_schedule(5, t_stage0=1.0, t_stage1=2.0)
+    # consumer is the bottleneck: makespan = fill(1) + 5*2
+    assert abs(mk - 11.0) < 1e-9
+    # producer stalls: stage0 of patch t+1 never starts before consumer
+    # picked up patch t
+    s0 = {t: (s, e) for (st, t, s, e) in events if st == "stage0"}
+    s1 = {t: (s, e) for (st, t, s, e) in events if st == "stage1"}
+    for t in range(4):
+        assert s0[t + 1][0] >= s1[t][0] - 1e-9
+
+
+def test_pipeline_schedule_balanced_is_ideal():
+    mk, _ = pipeline_schedule(100, 1.0, 1.0)
+    assert mk <= 102.0  # fill bubble + N steps
+
+
+def test_split_net():
+    a, b = split_net_at_theta(["c", "p", "c", "c"], 2)
+    assert a == (0, 1) and b == (2, 3)
+
+
+def test_pipelined_apply_two_pods():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core.pipeline import pipelined_apply
+
+        mesh = jax.make_mesh((2,), ('pod',))
+        stage0 = lambda x: x * 2.0
+        stage1 = lambda x: x + 1.0
+        T = 6
+        xs = jnp.arange(T * 4, dtype=jnp.float32).reshape(T, 4)
+
+        def run(xs):
+            return pipelined_apply(stage0, stage1, xs, axis_name='pod')
+
+        f = shard_map(run, mesh=mesh, in_specs=P(None, None), out_specs=P(None, None), check_rep=False)
+        ys = f(xs)
+        # each pod's stream: stage1(stage0(x_t)) delivered to the *next* pod;
+        # with replicated input both pods compute identical streams, so the
+        # result equals the functional composition.
+        want = xs * 2.0 + 1.0
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(want), rtol=1e-6)
+        print('PIPE OK')
+        """,
+        n_devices=2,
+    )
+    assert "PIPE OK" in out
+
+
+def test_halo_sharded_convnet_matches_single_device():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+        from repro.core import convnet
+        from repro.core.distributed_inference import halo_sharded_apply
+
+        net = ConvNetConfig('t', 1, (L('conv', 3, 4), L('conv', 2, 2)))
+        params = convnet.init_params(jax.random.PRNGKey(0), net)
+        prims = ['direct', 'direct']
+        W = 4                      # chips along x
+        cx = 8                     # x extent per chip
+        nx = W * cx
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, nx, 10, 10), jnp.float32)
+
+        mesh = jax.make_mesh((W,), ('x',))
+        f = shard_map(
+            lambda xl: halo_sharded_apply(params, net, xl, prims, axis_name='x'),
+            mesh=mesh, in_specs=P(None, None, 'x', None, None),
+            out_specs=P(None, None, 'x', None, None),
+        )
+        got = f(x)
+        want = convnet.apply_plan(params, net, x, prims)
+        # valid region: all but the last chip's garbage tail (FOV-1 = 3)
+        v = nx - 3
+        np.testing.assert_allclose(
+            np.asarray(got)[:, :, :v], np.asarray(want)[:, :, :v], atol=2e-4, rtol=1e-4)
+        print('HALO OK')
+        """,
+        n_devices=4,
+    )
+    assert "HALO OK" in out
+
+
+def test_ring_allgather_matmul():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed.collectives import ring_allgather_matmul
+
+        A = 4
+        K, N = 32, 16
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, K))
+        w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+        mesh = jax.make_mesh((A,), ('m',))
+        f = shard_map(
+            lambda xx, ws: ring_allgather_matmul(xx, ws, 'm'),
+            mesh=mesh, in_specs=(P(None, None), P('m', None)), out_specs=P(None, None),
+            check_rep=False,
+        )
+        got = f(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), atol=1e-3, rtol=1e-4)
+        print('RING OK')
+        """,
+        n_devices=4,
+    )
+    assert "RING OK" in out
+
+
+def test_psum_compressed_error_feedback():
+    out = run_with_devices(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed.collectives import psum_compressed
+
+        mesh = jax.make_mesh((4,), ('p',))
+        g = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+
+        def step(gl, err):
+            return psum_compressed(gl, 'p', error=err)
+
+        f = shard_map(step, mesh=mesh, in_specs=(P('p', None), P('p', None)),
+                      out_specs=(P(None, None), P('p', None)))
+        err = jnp.zeros_like(g)
+        # accumulated compressed means converge to the true mean over steps
+        acc_c = jnp.zeros((1, 64))
+        true = jnp.mean(g, axis=0, keepdims=True)
+        for _ in range(30):
+            mean, err = f(g, err)
+            acc_c = acc_c + mean[:1]
+        np.testing.assert_allclose(np.asarray(acc_c / 30), np.asarray(true), atol=1e-2)
+        print('PSUMC OK')
+        """,
+        n_devices=4,
+    )
+    assert "PSUMC OK" in out

@@ -1,0 +1,164 @@
+"""Layer-zoo unit tests: RoPE/M-RoPE, norms, MoE routing, Mamba2 SSD."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, SSMConfig
+from repro.layers import moe as moe_mod
+from repro.layers import norms, rope
+from repro.layers import ssm as ssm_mod
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def test_mrope_reduces_to_rope_for_text(rng):
+    B, S, H, d = 2, 7, 3, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    a = rope.apply_rope(x, pos, 10_000.0)
+    b = rope.apply_mrope(x, rope.text_mrope_positions(pos), 10_000.0, (2, 3, 3))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_angles(rng):
+    B, S, H, d = 1, 5, 1, 32
+    x = jnp.asarray(rng.normal(size=(B, S, H, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y = rope.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative-position property: <R(p)q, R(p+delta)k> depends only on delta
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, d)).astype(np.float32))
+    def dot_at(pq, pk):
+        rq = rope.apply_rope(q, jnp.array([[pq]]), 10_000.0)
+        rk = rope.apply_rope(k, jnp.array([[pk]]), 10_000.0)
+        return float(jnp.sum(rq * rk))
+    assert abs(dot_at(3, 7) - dot_at(10, 14)) < 1e-3
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def test_rmsnorm_unit_rms(rng):
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 7.0
+    y = norms.rmsnorm(x, jnp.zeros((64,)))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layernorm_zero_mean_unit_var(rng):
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 3 + 5
+    y = norms.layernorm(x, jnp.ones((64,)), jnp.zeros((64,)))
+    np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.var(np.asarray(y), -1), 1.0, rtol=1e-2)
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+
+def _dense_moe_reference(p, x, cfg: MoEConfig, act: str):
+    """Oracle: run every expert densely, combine with top-k router weights."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = jax.lax.top_k(probs, cfg.top_k)
+    topw = topw / topw.sum(-1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_in"][e])
+        outs.append(h @ p["w_out"][e])
+    dense = jnp.stack(outs, 1)  # (T, E, d)
+    w = jnp.zeros((T, cfg.n_experts))
+    for kk in range(cfg.top_k):
+        w = w + jax.nn.one_hot(topi[:, kk], cfg.n_experts) * topw[:, kk : kk + 1]
+    return jnp.einsum("te,ted->td", w, dense).reshape(B, S, d)
+
+
+def test_moe_dropfree_matches_dense_reference(rng):
+    cfg = MoEConfig(n_experts=4, top_k=2, capacity_factor=4.0)
+    d, ff = 16, 32
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), d, ff, cfg, "swiglu", jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 5, d)).astype(np.float32))
+    got, aux = moe_mod.moe_apply(p, x, cfg, "swiglu")
+    want = _dense_moe_reference(p, x, cfg, "swiglu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+    assert float(aux) >= 0.0
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity_factor ~0 every token drops and the output is ~0."""
+    cfg = MoEConfig(n_experts=4, top_k=1, capacity_factor=1e-9)
+    d, ff = 8, 16
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), d, ff, cfg, "swiglu", jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 8, d)).astype(np.float32))
+    got, _ = moe_mod.moe_apply(p, x, cfg, "swiglu")
+    # capacity C>=1 keeps at most E tokens; most of the 8 are dropped
+    assert float(jnp.abs(got).sum()) < float(jnp.abs(_dense_moe_reference(p, x, cfg, "swiglu")).sum())
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD
+# --------------------------------------------------------------------------
+
+
+def _ssd_sequential(x, dt, A_log, B, C, D):
+    """O(L·N·P) sequential-state oracle for the chunked SSD."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    a = -jnp.exp(A_log)[None] * dt  # (b,l,h)
+    s = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        s = s * jnp.exp(a[:, t])[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", B[:, t], dt[:, t], x[:, t]
+        )
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t], s))
+    y = jnp.stack(ys, 1) + x * D[None, None, :, None]
+    return y, s
+
+
+@pytest.mark.parametrize("chunk", [2, 4, 8])
+def test_ssd_chunked_matches_sequential(chunk, rng):
+    b, l, h, p, n = 1, 8, 2, 4, 3
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, size=(b, l, h)).astype(np.float32))
+    A_log = jnp.asarray(rng.uniform(-1, 1, size=(h,)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(b, l, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, l, n)).astype(np.float32))
+    D = jnp.ones((h,), jnp.float32)
+    got_y, got_s = ssm_mod.ssd_chunked(x, dt, A_log, B, C, D, chunk)
+    want_y, want_s = _ssd_sequential(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_prefill_decode_continuity(rng):
+    """prefill state + one decode step == full-sequence apply on L+1 tokens."""
+    s = SSMConfig(d_state=8, d_conv=4, expand=2, headdim=8, chunk=4)
+    d_model = 16
+    p = ssm_mod.ssm_init(jax.random.PRNGKey(0), d_model, s, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 8, d_model)).astype(np.float32))
+    x_next = jnp.asarray(rng.normal(size=(2, 1, d_model)).astype(np.float32))
+    _, (conv_c, state) = ssm_mod.ssm_prefill(p, x, s, d_model)
+    y_dec, _ = ssm_mod.ssm_decode(p, x_next, s, d_model, conv_c, state)
+    y_full = ssm_mod.ssm_apply(p, jnp.concatenate([x, x_next], 1), s, d_model)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0]), np.asarray(y_full[:, -1]), atol=1e-4, rtol=1e-3
+    )

@@ -1,0 +1,97 @@
+"""Per-arch smoke tests (assignment requirement): every assigned arch, as a
+REDUCED same-family config, runs one forward/train step on CPU with correct
+output shapes and no NaNs — plus prefill/decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.layers import stubs
+from repro.models import build_model
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+ARCH_IDS = list(ARCHS)
+
+
+def _batch_for(cfg, B, S, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+    if cfg.frontend == "patch":
+        n_patch = min(8, S // 2)
+        batch["patch_embeds"] = (
+            jax.random.normal(key, (B, n_patch, cfg.d_model)) * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.frontend == "audio":
+        batch["frame_embeds"] = (
+            jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model)) * 0.05
+        ).astype(jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
+
+    logits, aux = model.forward(params, batch, remat=False)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), "NaN/Inf in logits"
+
+    # one real train step
+    ocfg = AdamWConfig(lr=1e-3)
+    opt = init_state(params, ocfg)
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch, remat=True))(params)
+    assert bool(jnp.isfinite(loss))
+    new_params, _ = apply_updates(params, grads, opt, ocfg)
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum()), params, new_params),
+    )
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_decode_matches_forward(arch):
+    red = ARCHS[arch].reduced()
+    kw = {"dtype": "float32"}
+    if red.moe:
+        kw["moe"] = dataclasses.replace(red.moe, capacity_factor=float(red.moe.n_experts))
+    cfg = dataclasses.replace(red, **kw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
+    batch.pop("labels")
+    lg, caches = model.prefill(params, batch, cache_len=S + 4)
+    tok = jnp.ones((B, 1), jnp.int32)
+    lg2, caches = model.decode_step(params, tok, caches)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], tok], axis=1)
+    ref, _ = model.forward(params, batch2, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(lg2[:, 0]), np.asarray(ref[:, -1]), atol=5e-4, rtol=1e-3
+    )
+
+
+def test_vlm_patch_splice_changes_output():
+    cfg = dataclasses.replace(ARCHS["qwen2-vl-7b"].reduced(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 300
+    toks = jnp.zeros((B, S), jnp.int32)
+    pe1 = jnp.ones((B, stubs.VLM_N_PATCHES, cfg.d_model), jnp.float32) * 0.01
+    pe2 = -pe1
+    l1, _ = model.forward(params, {"tokens": toks, "patch_embeds": pe1}, remat=False)
+    l2, _ = model.forward(params, {"tokens": toks, "patch_embeds": pe2}, remat=False)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-6

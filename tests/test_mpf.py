@@ -1,0 +1,67 @@
+"""C4: max-pooling fragments — equivalence with dense sliding-window pooling."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mpf as mpf_mod
+
+
+@pytest.mark.parametrize("p,m", [(2, 3), (2, 1), (3, 2)])
+def test_mpf_matches_reference(p, m, rng):
+    n = p * m + p - 1
+    x = jnp.asarray(rng.normal(size=(2, 3, n, n, n)).astype(np.float32))
+    got = mpf_mod.mpf(x, p)
+    want = mpf_mod.mpf_reference(x, p)
+    assert got.shape == (2 * p**3, 3, m, m, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_single_mpf_recombines_to_dense_max_filter(rng):
+    """Fragments of one MPF layer tile the stride-1 max filter output."""
+    p, m = 2, 3
+    n = p * m + p - 1
+    x = jnp.asarray(rng.normal(size=(1, 2, n, n, n)).astype(np.float32))
+    frags = mpf_mod.mpf(x, p)
+    dense = mpf_mod.recombine_fragments(frags, [p], 1)
+    want = mpf_mod.naive_sliding_pool(x, p)  # (1, 2, n-p+1 ...)
+    # dense covers offsets 0..p-1 strided: dense[v*p + o] == want[v*p + o]
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(want))
+
+
+def test_two_level_fragment_composition(rng):
+    """Offsets of stacked MPF layers compose with stride p1 (§V)."""
+    p1, p2 = 2, 2
+    m = 1
+    n2 = p2 * m + p2 - 1  # input to pool2 per fragment
+    n1 = p1 * n2 + p1 - 1
+    x = jnp.asarray(rng.normal(size=(1, 1, n1, n1, n1)).astype(np.float32))
+    y = mpf_mod.mpf(mpf_mod.mpf(x, p1), p2)
+    dense = mpf_mod.recombine_fragments(y, [p1, p2], 1)
+    # oracle: dense sliding window of pool2(pool1(.)) == dilated max filters
+    from repro.core.convnet import _dilated_max_filter
+
+    want = _dilated_max_filter(x, p1, 1)
+    want = _dilated_max_filter(want, p2, p1)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(2, 3), m=st.integers(1, 3), f=st.integers(1, 3))
+def test_property_mpf_fragment_values_are_pool_outputs(p, m, f):
+    rng = np.random.default_rng(p * 10 + m)
+    n = p * m + p - 1
+    x = jnp.asarray(rng.normal(size=(1, f, n, n, n)).astype(np.float32))
+    frags = np.asarray(mpf_mod.mpf(x, p))
+    xn = np.asarray(x)
+    for o, (ox, oy, oz) in enumerate(itertools.product(range(p), repeat=3)):
+        for v in itertools.product(range(m), repeat=3):
+            blk = xn[0, :, ox + v[0] * p: ox + v[0] * p + p,
+                     oy + v[1] * p: oy + v[1] * p + p,
+                     oz + v[2] * p: oz + v[2] * p + p]
+            np.testing.assert_array_equal(
+                frags[o, :, v[0], v[1], v[2]], blk.max(axis=(1, 2, 3))
+            )

@@ -1,0 +1,77 @@
+"""C5: planner invariants and reproduction of the paper's qualitative claims."""
+
+import pytest
+
+from repro.configs import ZNNI_NETS
+from repro.core import planner
+from repro.core.hw import TPU_V5E
+
+
+@pytest.fixture(scope="module")
+def plans():
+    return {
+        name: planner.plan_all_strategies(net, TPU_V5E, chips=256)
+        for name, net in ZNNI_NETS.items()
+    }
+
+
+def test_memory_budget_respected(plans):
+    for name, ps in plans.items():
+        p = ps["single"]
+        assert p is not None
+        assert p.peak_bytes <= TPU_V5E.hbm_bytes
+
+
+def test_mpf_beats_naive_baseline(plans):
+    """The paper's headline: MPF >> all-subsamplings baseline (Table V)."""
+    for name, ps in plans.items():
+        if ps["baseline_naive"] is None:
+            continue
+        assert ps["single"].throughput > 5 * ps["baseline_naive"].throughput, name
+
+
+def test_fft_wins_for_large_kernels(plans):
+    """Table IV structure: interior k>=5 layers (f=f'=80) pick FFT; the
+    first (f=1) and last (f'=3) layers may legitimately pick direct — the
+    same per-layer variation the paper's Table IV shows."""
+    for name in ("n537", "n726", "n926"):
+        convs = [c for c in plans[name]["single"].choices if c.kind == "conv"]
+        assert all(c.prim.startswith("fft") for c in convs[1:-1]), name
+        # and the FFT plan strictly beats a direct-only plan
+        assert plans[name]["single"].throughput > plans[name]["direct_only"].throughput
+
+
+def test_batch_one_is_optimal_single_chip(plans):
+    """§VI-A: S=1 maximizes throughput under the memory ceiling (2+ pools)."""
+    for name, ps in plans.items():
+        assert ps["single"].batch == 1, name
+
+
+def test_streamed_extends_memory_and_throughput(plans):
+    """C6: aggregate-HBM streaming beats the single-chip ceiling (Fig. 7)."""
+    for name, ps in plans.items():
+        assert ps["streamed"].throughput > ps["single"].throughput, name
+        assert ps["streamed"].n_in >= ps["single"].n_in, name
+
+
+def test_bigger_patch_higher_throughput():
+    """§II: throughput grows with patch size (border waste shrinks)."""
+    net = ZNNI_NETS["n537"]
+    t = []
+    for m in (1, 4, 8, 16):
+        p = planner.plan_single(net, TPU_V5E, batches=(1,), max_m=m)
+        # restrict search to exactly this m by bounding, take best <= m
+        t.append(p.throughput)
+    assert t == sorted(t)
+
+
+def test_pipeline_theta_split_valid(plans):
+    for name, ps in plans.items():
+        p = ps["pipeline2"]
+        assert p is not None
+        assert 0 < p.theta < len(ZNNI_NETS[name].layers)
+
+
+def test_plan_summary_prints(plans):
+    s = plans["n337"]["single"].summary()
+    assert "n337" in s and "L0" in s

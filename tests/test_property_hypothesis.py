@@ -1,0 +1,103 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ZNNI_NETS
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import cost_model
+from repro.core.mpf import mpf_reference, recombine_fragments
+from repro.layers.embedding import cross_entropy
+from repro.optim.adamw import _dequantize, _quantize
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 6), net_idx=st.integers(0, 3))
+def test_input_size_roundtrip(m, net_idx):
+    """valid_input_size and output_size are exact inverses for every net."""
+    net = list(ZNNI_NETS.values())[net_idx]
+    n_in = net.valid_input_size(m)
+    assert net.output_size(n_in) == m
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    S=st.integers(1, 3), f=st.integers(1, 8), fp=st.integers(1, 8),
+    n=st.integers(6, 24), k=st.sampled_from([2, 3, 5]),
+)
+def test_cost_model_positive_and_fft_flops_beat_direct_for_big_k(S, f, fp, n, k):
+    for prim in cost_model.CONV_PRIMS:
+        c = cost_model.conv_cost(prim, S, f, fp, (n, n, n), k)
+        assert c.flops > 0 and c.hbm_bytes > 0 and c.peak_bytes > 0
+    # monotone in batch
+    c1 = cost_model.conv_cost("fft_task", S, f, fp, (n, n, n), k)
+    c2 = cost_model.conv_cost("fft_task", S + 1, f, fp, (n, n, n), k)
+    assert c2.flops > c1.flops and c2.peak_bytes > c1.peak_bytes
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p1=st.integers(2, 3), p2=st.integers(2, 3), m=st.integers(1, 2),
+    S=st.integers(1, 2),
+)
+def test_fragment_recombination_permutes_fragment_values(p1, p2, m, S):
+    """recombine_fragments only REARRANGES fragment voxels — the dense
+    output is an exact multiset permutation of the fragment tensor."""
+    n2 = p2 * m + p2 - 1
+    n1 = p1 * n2 + p1 - 1
+    rng = np.random.default_rng(p1 * 100 + p2 * 10 + m)
+    vals = rng.normal(size=(S, 1, n1, n1, n1)).astype(np.float32)
+    x = jnp.asarray(vals)
+    y = mpf_reference(mpf_reference(x, p1), p2)
+    dense = recombine_fragments(y, [p1, p2], S)
+    assert dense.shape[0] == S
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(dense).ravel()), np.sort(np.asarray(y).ravel())
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(B=st.integers(1, 3), S=st.integers(2, 40), V=st.integers(3, 80))
+def test_chunked_ce_matches_direct(B, S, V):
+    rng = np.random.default_rng(B * 1000 + S * 10 + V)
+    lg = jnp.asarray(rng.normal(size=(B, S, V)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, V, size=(B, S)).astype(np.int32))
+    lf = lg.astype(jnp.float32)
+    want = jnp.mean(
+        jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(lf, y[..., None], -1)[..., 0]
+    )
+    got = cross_entropy(lg, y)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(2, 100))
+def test_int8_moment_quantization_error_bounded(scale, n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray((rng.normal(size=(4, n)) * scale).astype(np.float32))
+    q = _quantize(x)
+    back = _dequantize(q)
+    absmax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= absmax / 127.0 * 0.5 + 1e-9).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ks=st.lists(st.sampled_from([2, 3, 5]), min_size=1, max_size=3),
+    pools=st.integers(0, 2),
+)
+def test_fov_consistency_random_nets(ks, pools):
+    """FOV computed forward == inversion via valid_input_size(1)."""
+    layers = []
+    for i, k in enumerate(ks):
+        layers.append(L("conv", k, 4))
+        if i < pools:
+            layers.append(L("pool", 2))
+    net = ConvNetConfig("rnd", 1, tuple(layers))
+    # input that yields exactly one dense output voxel per fragment
+    n_in = net.valid_input_size(1)
+    # dense output size = n_in - FOV + 1 must equal total_pooling (fragments)
+    assert n_in - net.field_of_view() + 1 == net.total_pooling()

@@ -1,0 +1,83 @@
+"""C1: pruned FFTs equal the naive pad-then-rfftn transform (ZNNi §III)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruned_fft as pf
+
+
+@pytest.mark.parametrize("in_shape,fft_shape", [
+    ((2, 2, 2), (8, 8, 8)),
+    ((3, 5, 7), (9, 10, 12)),
+    ((5, 5, 5), (5, 5, 5)),  # no padding at all
+    ((1, 1, 1), (4, 6, 8)),
+    ((4, 3, 2), (16, 3, 2)),  # pad one axis only
+])
+def test_pruned_forward_matches_naive(in_shape, fft_shape, rng):
+    x = jnp.asarray(rng.normal(size=(2, 3) + in_shape).astype(np.float32))
+    a = pf.pruned_rfftn(x, fft_shape)
+    b = pf.naive_rfftn(x, fft_shape)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_pruned_inverse_with_crop(rng):
+    x = jnp.asarray(rng.normal(size=(2, 4, 5, 6)).astype(np.float32))
+    fft_shape = (8, 9, 10)
+    X = pf.pruned_rfftn(x, fft_shape)
+    got = pf.pruned_irfftn(X, fft_shape, (1, 2, 3), (3, 4, 5))
+    full = jnp.fft.irfftn(X, s=fft_shape, axes=(-3, -2, -1))
+    want = full[..., 1:4, 2:6, 3:8]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_fft_correlate_valid_equals_lax_conv(rng):
+    from repro.kernels.direct_conv3d import ref as conv_ref
+
+    x = jnp.asarray(rng.normal(size=(1, 1, 9, 8, 7)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(1, 1, 3, 2, 4)).astype(np.float32))
+    got = pf.fft_correlate_valid(x[0], w[0])
+    want = conv_ref.conv3d(x, w)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+
+def test_optimal_sizes_are_smooth():
+    for n in [1, 2, 17, 97, 100, 127, 129, 250, 333]:
+        m = pf.fft_optimal_size(n)
+        assert m >= n
+        r = m
+        for p in (2, 3, 5, 7):
+            while r % p == 0:
+                r //= p
+        assert r == 1, f"{m} not 7-smooth"
+        # minimality within the smooth set
+        for c in range(n, m):
+            rr = c
+            for p in (2, 3, 5, 7):
+                while rr % p == 0:
+                    rr //= p
+            assert rr != 1
+
+
+def test_pruned_speedup_increases_with_padding_ratio():
+    """The paper reports ~5-10x for small kernels in large images."""
+    s_small = pf.pruned_speedup((3, 3, 3), (128, 128, 128))
+    s_large = pf.pruned_speedup((64, 64, 64), (128, 128, 128))
+    assert s_small > 2.5  # k << n: most 1D passes pruned (~3x bound per §III-A)
+    assert s_small > s_large  # less padding -> less pruning win
+    assert s_large >= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a=st.integers(1, 6), b=st.integers(1, 6), c=st.integers(1, 6),
+    pa=st.integers(0, 6), pb=st.integers(0, 6), pc=st.integers(0, 6),
+)
+def test_property_pruned_equals_naive(a, b, c, pa, pb, pc):
+    rng = np.random.default_rng(a * 100 + b * 10 + c)
+    x = jnp.asarray(rng.normal(size=(1, a, b, c)).astype(np.float32))
+    fft_shape = (a + pa, b + pb, c + pc)
+    got = pf.pruned_rfftn(x, fft_shape)
+    want = pf.naive_rfftn(x, fft_shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)

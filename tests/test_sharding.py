@@ -1,0 +1,122 @@
+"""Sharding-rule unit tests (no multi-device mesh needed — rules are pure)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_shape
+from repro.distributed.sharding import batch_shardings, param_shardings
+from repro.models import build_model
+
+
+def _mesh16():
+    # a 16x16 LOGICAL mesh shape is what the rules key on; build it on one
+    # device by reusing the device — rules only read mesh.shape/axis_names.
+    import jax.sharding as shd
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    return FakeMesh()
+
+
+def _specs(cfg, mesh, zero=False):
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # monkeypatch NamedSharding construction by capturing specs
+    import repro.distributed.sharding as sh
+
+    captured = {}
+    orig = sh.NamedSharding
+
+    class Cap:
+        def __init__(self, mesh, spec):
+            self.mesh, self.spec = mesh, spec
+
+    sh.NamedSharding = Cap
+    try:
+        tree = sh.param_shardings(cfg, params_sds, mesh, zero=zero)
+    finally:
+        sh.NamedSharding = orig
+    flat = jax.tree_util.tree_leaves_with_path(
+        tree, is_leaf=lambda x: isinstance(x, Cap)
+    )
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        captured[key] = leaf.spec
+    return captured
+
+
+def test_jamba_experts_use_expert_parallelism():
+    specs = _specs(ARCHS["jamba-v0.1-52b"], _mesh16())
+    # 16 experts over a 16-way model axis -> expert dim sharded
+    # (jamba MoE lives at odd pattern indices; block 0 is a dense-MLP mamba)
+    key = next(k for k in specs if "blocks/1/ffn/w_in" in k)
+    assert specs[key][-3] == "model"
+
+
+def test_mixtral_experts_fall_back_to_tensor_parallel():
+    specs = _specs(ARCHS["mixtral-8x7b"], _mesh16())
+    key = next(k for k in specs if "ffn/w_in" in k)
+    # 8 experts cannot shard over 16 -> d_ff sharded instead
+    assert specs[key][-1] == "model" and specs[key][-3] is None
+
+
+def test_qwen15_attention_replicated_mlp_sharded():
+    specs = _specs(ARCHS["qwen1.5-4b"], _mesh16())
+    wq = next(k for k in specs if k.endswith("mixer/wq"))
+    assert all(s is None for s in specs[wq]), "20 heads must not shard over 16"
+    w_in = next(k for k in specs if "ffn/w_in" in k)
+    assert specs[w_in][-1] == "model"
+
+
+def test_gemma3_full_head_sharding():
+    specs = _specs(ARCHS["gemma3-27b"], _mesh16())
+    wq = next(k for k in specs if k.endswith("mixer/wq"))
+    wk = next(k for k in specs if k.endswith("mixer/wk"))
+    assert specs[wq][-2] == "model"  # 32 q heads
+    assert specs[wk][-2] == "model"  # 16 kv heads
+
+
+def test_zero_adds_data_axis_to_large_leaves():
+    specs = _specs(ARCHS["grok-1-314b"], _mesh16(), zero=True)
+    w_in = next(k for k in specs if "ffn/w_in" in k)
+    assert "data" in specs[w_in] and "model" in specs[w_in]
+    # genuinely small leaves (unstacked final norm, d=6144 < 2^16 elems)
+    # stay unsharded; STACKED norm scales (64 x 6144) may take the data axis
+    norm = next(k for k in specs if k.startswith("final_norm"))
+    assert "data" not in specs[norm]
+
+
+def test_mamba_projections_shard_cleanly():
+    specs = _specs(ARCHS["mamba2-2.7b"], _mesh16())
+    for leaf in ("w_z", "w_x", "conv_x", "norm_scale"):
+        key = next(k for k in specs if k.endswith(f"mixer/{leaf}"))
+        assert "model" in specs[key], leaf
+
+
+def test_decode_cache_sequence_sharding():
+    import repro.distributed.sharding as sh
+
+    cfg = ARCHS["phi3-medium-14b"]
+    model = build_model(cfg)
+    shape = get_shape("decode_32k")
+    specs = model.input_specs(shape)
+    mesh = _mesh16()
+    orig = sh.NamedSharding
+
+    class Cap:
+        def __init__(self, mesh, spec):
+            self.mesh, self.spec = mesh, spec
+
+    sh.NamedSharding = Cap
+    try:
+        tree = sh.batch_shardings(cfg, shape, mesh, specs)
+    finally:
+        sh.NamedSharding = orig
+    k_spec = tree["caches"]["blocks"]["0"]["k"].spec
+    assert k_spec[1] in ("data", ("data",))  # batch 128 over data
+    assert k_spec[2] == "model"  # sequence over model (flash-decode layout)
+    assert tree["caches"]["lengths"].spec == P()
