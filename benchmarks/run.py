@@ -20,6 +20,7 @@ from . import (
     table2_memory,
     table4_primitives,
     table5_throughput,
+    volume_throughput,
 )
 from .common import emit
 
@@ -63,6 +64,7 @@ def main() -> None:
         fig7_memory,
     ):
         mod.main()
+    volume_throughput.main([])  # explicit argv: don't re-parse run.py's
     dryrun_summary()
 
 

@@ -1,69 +1,80 @@
 """End-to-end driver (the paper's kind: INFERENCE): a sliding-window
-segmentation service over a large 3D volume.
+segmentation service over large 3D volumes.
 
-The service plans once (planner), caches kernel spectra once (the
-beyond-paper fft_cached primitive), then streams overlapping patches
-through the net and stitches dense output — measuring voxels/second, the
-paper's throughput metric.
+Plans once (planner), then serves queued volume requests through the
+volume runtime: the tiler decomposes each volume into overlapping valid
+patches, and the VolumeEngine continuously batches patches *across*
+requests into fused executor steps — measuring voxels/second, the paper's
+throughput metric, against the planner's prediction.
 
-Run:  PYTHONPATH=src python examples/serve_volume.py [--patches 4]
+Run:  PYTHONPATH=src python examples/serve_volume.py [--volumes 2] [--m 2]
 """
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
 from repro.core import convnet, planner
-from repro.core.distributed_inference import extract_patches, patch_grid
 from repro.core.hw import TPU_V5E
-from repro.data import SyntheticVolumePipeline, VolumePipelineConfig
+from repro.serving import VolumeEngine, VolumeRequest
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--patches", type=int, default=4)
+    ap.add_argument("--volumes", type=int, default=2, help="queued requests")
     ap.add_argument("--m", type=int, default=2, help="fragment size per patch")
+    ap.add_argument("--batch", type=int, default=2, help="patches per step")
     args = ap.parse_args()
 
     net = ConvNetConfig(
         "serve-net", 1,
         (L("conv", 3, 8), L("pool", 2), L("conv", 3, 8), L("pool", 2), L("conv", 3, 3)),
     )
-    plan = planner.plan_single(net, TPU_V5E, max_m=16)
-    prims = [c.prim for c in plan.choices]
-    print(f"[plan] primitives: {prims}; paper-style patch n={plan.n_in}^3 (demo uses m={args.m})")
+    plan = planner.plan_single(net, TPU_V5E, max_m=args.m, batches=(args.batch,))
+    if plan is None:
+        raise SystemExit(
+            f"no feasible plan for --m {args.m} --batch {args.batch} "
+            "(need m >= 1 and the patch to fit the memory budget)"
+        )
+    print(f"[plan] {plan.summary()}")
+    print(f"[plan] patch extent {plan.patch_extent}^3, core {plan.core}^3, "
+          f"overlap {plan.overlap}, predicted {plan.throughput:,.0f} vox/s")
 
-    m = args.m
-    n_in = net.valid_input_size(m)
-    core = net.output_size(n_in) * net.total_pooling()
     params = convnet.init_params(jax.random.PRNGKey(0), net)
+    engine = VolumeEngine(params, net, plan)
 
-    # the volume: W overlapping patches along x (overlap-save, §II)
-    W = args.patches
-    X = W * core + (net.field_of_view() - 1)
-    vol = jnp.asarray(
-        SyntheticVolumePipeline(VolumePipelineConfig(patch=1)).batch_at(0)[0, 0, :1, :1, :1]
-    )  # placeholder init; real volume below
     rng = np.random.default_rng(0)
-    vol = jnp.asarray(rng.normal(size=(1, X, n_in, n_in)).astype(np.float32))
+    core, fov = plan.core, plan.fov
+    reqs = []
+    for rid in range(args.volumes):
+        # different sizes per request, incl. a non-core-aligned remainder
+        x = (2 + rid) * core + rid + fov - 1
+        y = 2 * core + fov - 1
+        z = core + 3 + fov - 1
+        vol = rng.normal(size=(1, x, y, z)).astype(np.float32)
+        req = VolumeRequest(rid, vol)
+        engine.submit(req)
+        reqs.append(req)
+    n_patches = len(engine.queue)
 
-    run = jax.jit(lambda p: convnet.apply_plan(params, net, p[None], prims))
-
-    # warmup + serve
-    grid = patch_grid((X, n_in, n_in), net, m, W)
-    patches = extract_patches(vol, grid)
-    _ = jax.block_until_ready(run(patches[0]))
+    # warmup compile on a throwaway batch (keeps every real patch timed)
+    engine.executor.run_patch_batch(
+        np.zeros((engine.batch, 1) + (plan.patch_extent,) * 3, np.float32)
+    )
     t0 = time.perf_counter()
-    outs = [jax.block_until_ready(run(p)) for p in patches]
+    engine.run_until_drained()
     dt = time.perf_counter() - t0
-    dense = jnp.concatenate([o[0] for o in outs], axis=1)
-    vox = int(np.prod(dense.shape[1:]))
-    print(f"[serve] {W} patches -> dense output {dense.shape}; "
-          f"{vox} voxels in {dt:.2f}s = {vox / dt:,.0f} vox/s")
+
+    vox = sum(int(np.prod(r.out.shape[1:])) for r in reqs)
+    print(f"[serve] {len(reqs)} volumes, {n_patches} patches, "
+          f"{engine.ticks} fused steps (batch={engine.batch})")
+    print(f"[serve] {vox} dense voxels in {dt:.2f}s = {vox/dt:,.0f} vox/s "
+          f"(planner predicted {plan.throughput:,.0f} on {TPU_V5E.name})")
+    for r in reqs:
+        print(f"  request {r.rid}: out {r.out.shape} done={r.done}")
 
 
 if __name__ == "__main__":

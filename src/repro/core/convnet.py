@@ -60,6 +60,53 @@ def _conv_prim(prim: str, x, w, b, use_pallas: bool):
     raise ValueError(prim)
 
 
+def plan_pools(net: ConvNetConfig, plan_prims: Sequence[str]) -> List[int]:
+    """MPF pool sizes in network order for a primitive assignment."""
+    return [
+        net.layers[i].size
+        for i, prim in enumerate(plan_prims)
+        if net.layers[i].kind == "pool" and prim == "mpf"
+    ]
+
+
+def apply_layer_range(
+    params,
+    net: ConvNetConfig,
+    x: jnp.ndarray,
+    plan_prims: Sequence[str],
+    lo: int = 0,
+    hi: Optional[int] = None,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Run layers [lo, hi) with the plan's primitives, *without* recombining.
+
+    The building block for staged execution (pipeline2 splits the net at θ
+    into two such ranges).  ReLU placement follows the whole-net rule (no
+    activation after the net's final conv), so chaining ranges composes to
+    ``apply_plan(..., recombine=False)``.
+    """
+    if hi is None:
+        hi = len(net.layers)
+    last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    for i in range(lo, hi):
+        layer = net.layers[i]
+        prim = plan_prims[i]
+        if layer.kind == "conv":
+            w, b = params[i]
+            x = _conv_prim(prim, x, w, b, use_pallas)
+            if i != last_conv:
+                x = jax.nn.relu(x)
+        else:
+            if prim == "mpf":
+                x = mpf(x, layer.size, use_pallas=use_pallas)
+            elif prim == "pool":
+                x = max_pool3d(x, layer.size)
+            else:
+                raise ValueError(prim)
+    return x
+
+
 def apply_plan(
     params,
     net: ConvNetConfig,
@@ -76,24 +123,8 @@ def apply_plan(
     output (S, out_ch, dense³).
     """
     S = x.shape[0]
-    n_layers = len(net.layers)
-    pools: List[int] = []
-    last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
-    for i, layer in enumerate(net.layers):
-        prim = plan_prims[i]
-        if layer.kind == "conv":
-            w, b = params[i]
-            x = _conv_prim(prim, x, w, b, use_pallas)
-            if i != last_conv:
-                x = jax.nn.relu(x)
-        else:
-            if prim == "mpf":
-                x = mpf(x, layer.size, use_pallas=use_pallas)
-                pools.append(layer.size)
-            elif prim == "pool":
-                x = max_pool3d(x, layer.size)
-            else:
-                raise ValueError(prim)
+    x = apply_layer_range(params, net, x, plan_prims, use_pallas=use_pallas)
+    pools = plan_pools(net, plan_prims)
     if recombine and pools:
         x = recombine_fragments(x, pools, S)
     return x

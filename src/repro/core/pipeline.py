@@ -93,3 +93,27 @@ def split_net_at_theta(
     """Layer indices for stage 0 ([0, θ)) and stage 1 ([θ, L))."""
     idx = tuple(range(len(prims)))
     return idx[:theta], idx[theta:]
+
+
+def make_stage_fns(
+    params, net, prims: Sequence[str], theta: int, *, use_pallas: bool = False
+) -> Tuple[Callable, Callable]:
+    """Stage closures for a pipeline2 plan: layers [0, θ) and [θ, L).
+
+    Neither stage recombines MPF fragments — the executor folds fragments
+    back after stage 1 (recombination needs all pools, which may straddle
+    the split).  ``stage1 ∘ stage0 == apply_plan(..., recombine=False)``.
+    """
+    from .convnet import apply_layer_range
+
+    prims = tuple(prims)
+
+    def stage0(x):
+        return apply_layer_range(params, net, x, prims, 0, theta, use_pallas=use_pallas)
+
+    def stage1(x):
+        return apply_layer_range(
+            params, net, x, prims, theta, len(prims), use_pallas=use_pallas
+        )
+
+    return stage0, stage1

@@ -66,10 +66,37 @@ class Plan:
     out_voxels: float
     peak_bytes: float
     theta: int = -1  # pipeline2 split point
+    # -- runtime metadata (volume tiler/executor contract) -------------------
+    # fov:  sliding-window field of view of the net (1D extent, isotropic)
+    # core: dense output voxels per axis each patch contributes (m · P)
+    fov: int = 0
+    core: int = 0
 
     @property
     def throughput(self) -> float:
         return self.out_voxels / self.total_time
+
+    @property
+    def prims(self) -> Tuple[str, ...]:
+        """Per-layer primitive names, the executor's input."""
+        return tuple(c.prim for c in self.choices)
+
+    @property
+    def uses_mpf(self) -> bool:
+        return "mpf" in self.prims
+
+    @property
+    def overlap(self) -> int:
+        """Input voxels shared between adjacent patches (FOV - 1)."""
+        return self.fov - 1
+
+    @property
+    def patch_extent(self) -> int:
+        """Input voxels per axis a patch must span to emit ``core`` dense
+        outputs.  Equals ``n_in`` for MPF plans; plain-pool (baseline) plans
+        need ``n_in + P - 1`` because the executor sweeps all P³ shifted
+        subsamplings of the patch (the paper's naive outer loop)."""
+        return self.core + self.fov - 1
 
     def summary(self) -> str:
         lines = [
@@ -221,6 +248,7 @@ def plan_single(
             plan = Plan(
                 net.name, strategy_name, chips, S, n_in, m,
                 tuple(choices), total, vox, peak,
+                fov=net.field_of_view(), core=m * net.total_pooling(),
             )
             if best is None or plan.throughput > best.throughput:
                 best = plan
@@ -282,6 +310,7 @@ def plan_pipeline2(
                 plan = Plan(
                     net.name, "pipeline2", 2 * chips_per_stage, S, n_in, m,
                     tuple(choices), stage, vox, peak, theta=theta,
+                    fov=net.field_of_view(), core=m * net.total_pooling(),
                 )
                 if best is None or plan.throughput > best.throughput:
                     best = plan
@@ -327,6 +356,7 @@ def plan_spatial(
             plan = Plan(
                 net.name, "spatial", chips, S, n_in, m,
                 tuple(choices), total, vox, peak,
+                fov=net.field_of_view(), core=m * net.total_pooling(),
             )
             if best is None or plan.throughput > best.throughput:
                 best = plan

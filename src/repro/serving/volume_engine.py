@@ -1,0 +1,111 @@
+"""Volume serving engine: continuous batching of patches across requests.
+
+The 3D-inference analogue of ``serving/engine.py``: requests are whole
+volumes, work items are patches.  Each tick drains up to ``batch`` patches
+from the *front of the global patch queue* — patches of different queued
+volumes share one fused executor step whenever a request doesn't fill the
+batch (all patches of one plan have identical shape, so cross-request
+batching is free).  A request completes when its last patch's core has
+been written into its dense output buffer.
+
+The engine drives ``PlanExecutor.run_patch_batch`` (single fused step per
+tick).  pipeline2 plans are accepted — their primitives are identical; the
+two-stage scan schedule is an executor-level optimization used by
+``PlanExecutor.run`` for offline sweeps, not by the tick loop.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from ..configs.base import ConvNetConfig
+from ..core.planner import Plan
+from ..volume.executor import PlanExecutor
+from ..volume.tiler import VolumeTiling, extract_patch, pad_volume
+
+
+@dataclass
+class VolumeRequest:
+    rid: int
+    volume: np.ndarray  # (f, X, Y, Z)
+    out: Optional[np.ndarray] = None  # (out_ch, X-FOV+1, ...) when done
+    done: bool = False
+    # internal runtime state
+    _tiling: Optional[VolumeTiling] = field(default=None, repr=False)
+    _padded: Optional[np.ndarray] = field(default=None, repr=False)
+    _remaining: int = field(default=0, repr=False)
+
+
+class VolumeEngine:
+    """Queue volume requests; stream their patches through one executor."""
+
+    def __init__(
+        self,
+        params,
+        net: ConvNetConfig,
+        plan: Optional[Plan] = None,
+        *,
+        prims=None,
+        m: Optional[int] = None,
+        batch: Optional[int] = None,
+        use_pallas: bool = False,
+    ):
+        self.executor = PlanExecutor(
+            params, net, plan, prims=prims, m=m, batch=batch,
+            use_pallas=use_pallas,
+        )
+        self.batch = self.executor.batch
+        self.queue: Deque[Tuple[VolumeRequest, int]] = deque()
+        self.finished: List[VolumeRequest] = []
+        self.ticks = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: VolumeRequest) -> None:
+        ex = self.executor
+        tiling = ex.tiling_for(np.asarray(req.volume).shape[1:])
+        req._tiling = tiling
+        req._padded = pad_volume(np.asarray(req.volume, np.float32), tiling)
+        req._remaining = tiling.n_patches
+        req.out = np.empty((ex.out_channels,) + tiling.out_shape, np.float32)
+        for idx in range(tiling.n_patches):
+            self.queue.append((req, idx))
+
+    # -- tick ---------------------------------------------------------------
+
+    def step(self) -> int:
+        """One fused batch over the head of the patch queue; returns the
+        number of real (non-padding) patches processed."""
+        if not self.queue:
+            return 0
+        items = [self.queue.popleft() for _ in range(min(self.batch, len(self.queue)))]
+        xs = np.stack(
+            [
+                extract_patch(req._padded, req._tiling.patches[idx], req._tiling.extent)
+                for req, idx in items
+            ]
+        )
+        if len(items) < self.batch:  # ragged tail: pad, drop padded outputs
+            xs = np.concatenate(
+                [xs, np.repeat(xs[-1:], self.batch - len(items), axis=0)]
+            )
+        ys = self.executor.run_patch_batch(xs)
+        for (req, idx), y in zip(items, ys):
+            self.executor.write_core(req.out, req._tiling, req._tiling.patches[idx], y)
+            req._remaining -= 1
+            if req._remaining == 0:
+                req.done = True
+                req._padded = None  # drop the padded copy early
+                self.finished.append(req)
+        self.ticks += 1
+        return len(items)
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> List[VolumeRequest]:
+        for _ in range(max_ticks):
+            if self.step() == 0:
+                break
+        return self.finished

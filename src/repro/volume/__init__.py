@@ -1,0 +1,50 @@
+"""Volume inference runtime — run a planner Plan over arbitrary-size volumes.
+
+README / architecture
+=====================
+
+ZNNi's output is a *plan* (patch size n_in, batch S, per-layer primitives,
+strategy); this package is the runtime that turns a plan into dense output
+over a volume far larger than any single patch:
+
+┌────────────┐   PatchSpecs    ┌──────────────┐   (S, out, core³)  ┌─────────┐
+│  tiler     │ ──────────────▶ │ PlanExecutor │ ─────────────────▶ │ dense   │
+│ (geometry) │                 │ (jit cache)  │                    │ output  │
+└────────────┘                 └──────────────┘                    └─────────┘
+
+* ``tiler``     — pure geometry.  Decomposes (X, Y, Z) into overlapping
+  patches: interior starts at multiples of core = m·P, a shifted patch for
+  the edge remainder (value-identical overlap), zero padding for axes
+  shorter than one patch (exact, because valid-conv output v only reads
+  input [v, v+FOV)).  MPF divisibility is checked, never re-derived.
+* ``executor``  — ``PlanExecutor`` binds a Plan to jit-compiled
+  ``apply_plan`` calls: one compile per batch size, S patches per step.
+  MPF plans recombine fragments on device; plain-pool baseline plans sweep
+  the P³ shifted subsamplings (the paper's naive outer loop); pipeline2
+  plans stream patch chunks through ``core.pipeline.pipelined_apply`` on
+  the ``pod`` mesh axis.  ``run`` fills ``last_stats`` with measured vs.
+  planner-predicted vox/s, border waste included.
+* ``serving.volume_engine`` — ``VolumeEngine`` queues volume requests and
+  continuously batches *patches across requests* into executor steps (the
+  3D analogue of token-level continuous batching in ``serving/engine.py``).
+
+Entry points: ``examples/serve_volume.py`` (service demo) and
+``benchmarks/volume_throughput.py`` (measured vs. predicted vox/s).
+
+Test-suite conventions (repo-wide, recorded here per ISSUE 1):
+* slow tests carry ``@pytest.mark.slow`` and are deselected by default via
+  ``pytest.ini``; run them with ``-m "slow or not slow"``.
+* hypothesis is optional: property tests import from
+  ``tests/_hypothesis_compat.py``, which falls back to a deterministic
+  boundary grid when hypothesis is missing.
+"""
+
+from .executor import PlanExecutor, tiled_apply  # noqa: F401
+from .tiler import (  # noqa: F401
+    PatchSpec,
+    VolumeTiling,
+    extract_patch,
+    pad_volume,
+    tile_for_net,
+    tile_volume,
+)

@@ -1,0 +1,138 @@
+"""Volume → patch decomposition (overlap-save tiling, ZNNi §II).
+
+A plan fixes the per-patch geometry: each patch spans ``extent`` input
+voxels per axis and contributes a ``core³`` block of dense output voxels
+(core = m · P).  Adjacent patches overlap by FOV-1 input voxels — the
+paper's recomputed "border waste".  The tiler turns an arbitrary
+``(X, Y, Z)`` volume into the patch grid:
+
+* interior patches start at multiples of ``core`` (input start == dense
+  output start for valid convolution);
+* an edge remainder is handled with a *shifted* patch flush against the
+  volume end — its core overlaps the previous patch's core, and since both
+  compute the same sliding-window function of the same input window, the
+  overwrite is value-identical (up to FFT round-off);
+* an axis shorter than one patch extent is zero-padded at its far end.
+  Valid-convolution output at dense coordinate v depends only on input
+  [v, v+FOV), so outputs cropped to the true ``X - FOV + 1`` range never
+  see the padding — pad-and-crop is exact, not approximate.
+
+MPF divisibility is the *plan's* obligation (n_in = valid_input_size(m)
+satisfies (n+1) % p == 0 at every pool by construction); the tiler only
+checks it, and otherwise works purely in dense-output coordinates, which
+makes the same grid serve MPF plans (extent = n_in) and plain-pool
+baseline plans (extent = n_in + P - 1, swept at P³ offsets by the
+executor).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.base import ConvNetConfig
+
+
+@dataclass(frozen=True)
+class PatchSpec:
+    """One patch: input start == dense-output start (valid convolution)."""
+
+    start: Tuple[int, int, int]
+
+
+@dataclass(frozen=True)
+class VolumeTiling:
+    """The full patch grid plus the geometry needed to reassemble output."""
+
+    vol_shape: Tuple[int, int, int]  # true input extents (X, Y, Z)
+    out_shape: Tuple[int, int, int]  # dense output extents (X-FOV+1, ...)
+    pad: Tuple[int, int, int]  # zero padding appended per axis
+    extent: int  # input voxels per patch per axis
+    core: int  # dense output voxels per patch per axis
+    fov: int
+    patches: Tuple[PatchSpec, ...]
+
+    @property
+    def n_patches(self) -> int:
+        return len(self.patches)
+
+    @property
+    def waste_fraction(self) -> float:
+        """Fraction of patch input voxels recomputed or padded — the
+        paper's border waste, end-to-end over this volume."""
+        read = self.n_patches * self.extent**3
+        useful = math.prod(self.vol_shape)  # padding voxels are waste too
+        return 1.0 - min(useful / read, 1.0)
+
+
+def _axis_starts(size: int, core: int, fov: int, extent: int) -> List[int]:
+    """Patch start offsets along one (possibly padded) axis."""
+    size = max(size, extent)  # undersized axes are padded to one patch
+    out = size - (fov - 1)
+    n_steps = max(1, math.ceil(out / core))
+    starts = [min(i * core, out - core) for i in range(n_steps)]
+    return sorted(set(starts))
+
+
+def tile_volume(
+    vol_shape: Sequence[int], *, core: int, fov: int
+) -> VolumeTiling:
+    """Tile an (X, Y, Z) volume for patches of dense-core ``core`` per axis."""
+    if len(vol_shape) != 3:
+        raise ValueError(f"expected (X, Y, Z) spatial shape, got {vol_shape}")
+    if core < 1 or fov < 1:
+        raise ValueError(f"invalid geometry core={core} fov={fov}")
+    extent = core + fov - 1
+    for ax, x in enumerate(vol_shape):
+        if x < fov:
+            raise ValueError(
+                f"axis {ax} extent {x} < FOV {fov}: no valid output exists"
+            )
+    pad = tuple(max(0, extent - x) for x in vol_shape)
+    out_shape = tuple(x - (fov - 1) for x in vol_shape)
+    per_axis = [_axis_starts(x, core, fov, extent) for x in vol_shape]
+    patches = tuple(
+        PatchSpec(start=s) for s in itertools.product(*per_axis)
+    )
+    return VolumeTiling(
+        vol_shape=tuple(vol_shape),
+        out_shape=out_shape,
+        pad=pad,
+        extent=extent,
+        core=core,
+        fov=fov,
+        patches=patches,
+    )
+
+
+def tile_for_net(
+    vol_shape: Sequence[int], net: ConvNetConfig, m: int
+) -> VolumeTiling:
+    """Tiling for fragment size ``m`` of ``net`` (checks MPF divisibility)."""
+    n_in = net.valid_input_size(m)
+    if net.output_size(n_in) != m:
+        raise ValueError(
+            f"n_in={n_in} violates the MPF divisibility constraints of {net.name}"
+        )
+    core = m * net.total_pooling()
+    return tile_volume(vol_shape, core=core, fov=net.field_of_view())
+
+
+def pad_volume(vol: np.ndarray, tiling: VolumeTiling) -> np.ndarray:
+    """Zero-pad (f, X, Y, Z) at each axis end per the tiling (no-op if full)."""
+    if not any(tiling.pad):
+        return vol
+    widths = [(0, 0)] + [(0, p) for p in tiling.pad]
+    return np.pad(vol, widths)
+
+
+def extract_patch(
+    padded: np.ndarray, spec: PatchSpec, extent: int
+) -> np.ndarray:
+    """Slice one (f, extent³) patch out of the padded volume."""
+    x, y, z = spec.start
+    return padded[:, x : x + extent, y : y + extent, z : z + extent]

@@ -5,6 +5,7 @@ this process keeps its single CPU device.
 """
 
 import numpy as np
+import pytest
 
 from repro.core.pipeline import pipeline_schedule, split_net_at_theta
 from tests.conftest import run_with_devices
@@ -33,6 +34,7 @@ def test_split_net():
     assert a == (0, 1) and b == (2, 3)
 
 
+@pytest.mark.slow  # subprocess multi-device mesh
 def test_pipelined_apply_two_pods():
     out = run_with_devices(
         """
@@ -64,6 +66,7 @@ def test_pipelined_apply_two_pods():
     assert "PIPE OK" in out
 
 
+@pytest.mark.slow  # subprocess multi-device mesh
 def test_halo_sharded_convnet_matches_single_device():
     out = run_with_devices(
         """
@@ -101,6 +104,7 @@ def test_halo_sharded_convnet_matches_single_device():
     assert "HALO OK" in out
 
 
+@pytest.mark.slow  # subprocess multi-device mesh
 def test_ring_allgather_matmul():
     out = run_with_devices(
         """
@@ -128,6 +132,7 @@ def test_ring_allgather_matmul():
     assert "RING OK" in out
 
 
+@pytest.mark.slow  # subprocess multi-device mesh
 def test_psum_compressed_error_feedback():
     out = run_with_devices(
         """

@@ -38,8 +38,9 @@ def test_cmul_mad_sweep(S, f, fp, sp, rng):
 @pytest.mark.parametrize("S,f,fp,n,k", [
     (1, 1, 1, 6, 2),
     (2, 3, 5, 8, 3),
-    (1, 4, 9, 9, 5),   # fp not multiple of FP_BLOCK
-    (1, 2, 8, 11, 7),  # odd n' forces tx fallback
+    # heavy cases (~20s combined): fp not multiple of FP_BLOCK / odd n'
+    pytest.param(1, 4, 9, 9, 5, marks=pytest.mark.slow),
+    pytest.param(1, 2, 8, 11, 7, marks=pytest.mark.slow),
 ])
 def test_direct_conv3d_sweep(S, f, fp, n, k, rng):
     x = jnp.asarray(rng.normal(size=(S, f, n, n, n)).astype(np.float32))

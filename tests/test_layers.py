@@ -149,6 +149,7 @@ def test_ssd_chunked_matches_sequential(chunk, rng):
     np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow  # ~10s: SSD chunked-scan compiles
 def test_ssm_prefill_decode_continuity(rng):
     """prefill state + one decode step == full-sequence apply on L+1 tokens."""
     s = SSMConfig(d_state=8, d_conv=4, expand=2, headdim=8, chunk=4)

@@ -14,6 +14,8 @@ from repro.layers import stubs
 from repro.models import build_model
 from repro.optim import AdamWConfig, apply_updates, init_state
 
+pytestmark = pytest.mark.slow  # ~6 min of per-arch compiles; CI PR job runs them
+
 ARCH_IDS = list(ARCHS)
 
 

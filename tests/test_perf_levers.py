@@ -7,11 +7,14 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS
 from repro.configs.base import MoEConfig
 from repro.layers import moe as moe_mod
 from repro.models import build_model
+
+pytestmark = pytest.mark.slow  # LM lever equivalence, ~25s of compiles
 
 
 def _embed_params_into_padded(p_small, p_big, cfg_small, cfg_big):

@@ -1,0 +1,107 @@
+"""Planner invariants across every strategy in plan_all_strategies:
+budget compliance, MPF divisibility of n_in, out_voxels/m_final
+consistency, and the runtime-geometry metadata the volume executor binds
+to (ISSUE 1 satellite)."""
+
+import pytest
+
+from repro.configs import ZNNI_NETS
+from repro.core import planner
+from repro.core.hw import TPU_V5E
+
+CHIPS = 16
+
+
+@pytest.fixture(scope="module")
+def all_plans():
+    return {
+        name: planner.plan_all_strategies(net, TPU_V5E, chips=CHIPS)
+        for name, net in ZNNI_NETS.items()
+    }
+
+
+def _budget(strategy: str) -> float:
+    hbm = TPU_V5E.hbm_bytes
+    return {
+        "single": hbm,
+        "streamed": hbm * CHIPS,
+        "pipeline2": hbm * (CHIPS // 2),
+        "spatial": hbm,
+        "baseline_naive": hbm,
+        "direct_only": hbm,
+    }[strategy]
+
+
+def _iter_plans(all_plans):
+    for name, plans in all_plans.items():
+        for strategy, plan in plans.items():
+            if plan is not None:
+                yield name, strategy, plan
+
+
+def test_every_strategy_produces_a_plan(all_plans):
+    for name, plans in all_plans.items():
+        for strategy, plan in plans.items():
+            assert plan is not None, f"{name}/{strategy} infeasible"
+
+
+def test_peak_bytes_within_budget(all_plans):
+    for name, strategy, plan in _iter_plans(all_plans):
+        assert plan.peak_bytes <= _budget(strategy), (name, strategy)
+        assert plan.peak_bytes > 0, (name, strategy)
+
+
+def test_n_in_satisfies_pooling_divisibility(all_plans):
+    """Walk n_in forward through the plan's own primitives: MPF pools need
+    (n+1) % p == 0, plain pools need n % p == 0, and the final fragment
+    size must equal m_final."""
+    for name, strategy, plan in _iter_plans(all_plans):
+        net = ZNNI_NETS[name]
+        n = plan.n_in
+        for layer, prim in zip(net.layers, plan.prims):
+            if layer.kind == "conv":
+                n -= layer.size - 1
+            elif prim == "mpf":
+                assert (n + 1) % layer.size == 0, (name, strategy, n)
+                n //= layer.size
+            else:
+                assert n % layer.size == 0, (name, strategy, n)
+                n //= layer.size
+            assert n > 0, (name, strategy)
+        assert n == plan.m_final, (name, strategy)
+
+
+def test_out_voxels_consistent_with_m_final(all_plans):
+    for name, strategy, plan in _iter_plans(all_plans):
+        net = ZNNI_NETS[name]
+        P = net.total_pooling()
+        if strategy == "baseline_naive":
+            # one subsampling per pass: m³ effective voxels per call
+            want = plan.batch * float(plan.m_final) ** 3
+        elif strategy == "spatial":
+            want = plan.chips * plan.batch * float(plan.m_final * P) ** 3
+        else:
+            want = plan.batch * float(plan.m_final * P) ** 3
+        assert plan.out_voxels == pytest.approx(want), (name, strategy)
+
+
+def test_runtime_geometry_metadata(all_plans):
+    """The Plan fields the volume runtime binds to (fov/core/extent)."""
+    for name, strategy, plan in _iter_plans(all_plans):
+        net = ZNNI_NETS[name]
+        assert plan.fov == net.field_of_view(), (name, strategy)
+        assert plan.core == plan.m_final * net.total_pooling(), (name, strategy)
+        assert plan.overlap == plan.fov - 1
+        assert plan.patch_extent == plan.core + plan.fov - 1
+        if plan.uses_mpf:
+            assert plan.patch_extent == plan.n_in, (name, strategy)
+        else:
+            assert plan.patch_extent == plan.n_in + net.total_pooling() - 1
+        assert len(plan.prims) == len(net.layers)
+
+
+def test_layer_chain_shapes_are_consistent(all_plans):
+    """Each choice's out_shape is the next choice's in_shape."""
+    for name, strategy, plan in _iter_plans(all_plans):
+        for a, b in zip(plan.choices, plan.choices[1:]):
+            assert a.out_shape == b.in_shape, (name, strategy, a.index)

@@ -3,7 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ZNNI_NETS
 from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
@@ -42,6 +43,7 @@ def test_cost_model_positive_and_fft_flops_beat_direct_for_big_k(S, f, fp, n, k)
     p1=st.integers(2, 3), p2=st.integers(2, 3), m=st.integers(1, 2),
     S=st.integers(1, 2),
 )
+@pytest.mark.slow  # ~20s: one compile per sampled pool stack
 def test_fragment_recombination_permutes_fragment_values(p1, p2, m, S):
     """recombine_fragments only REARRANGES fragment voxels — the dense
     output is an exact multiset permutation of the fragment tensor."""
@@ -60,6 +62,7 @@ def test_fragment_recombination_permutes_fragment_values(p1, p2, m, S):
 
 @settings(max_examples=15, deadline=None)
 @given(B=st.integers(1, 3), S=st.integers(2, 40), V=st.integers(3, 80))
+@pytest.mark.slow  # ~25s: one compile per sampled (B, S, V)
 def test_chunked_ce_matches_direct(B, S, V):
     rng = np.random.default_rng(B * 1000 + S * 10 + V)
     lg = jnp.asarray(rng.normal(size=(B, S, V)).astype(np.float32))

@@ -6,6 +6,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ARCHS
 from repro.models import build_model
@@ -32,6 +33,7 @@ def _make_model():
     return cfg, model, params
 
 
+@pytest.mark.slow  # ~40s: per-request prefill compiles
 def test_engine_matches_unbatched_greedy():
     cfg, model, params = _make_model()
     rng = np.random.default_rng(0)

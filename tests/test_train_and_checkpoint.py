@@ -20,6 +20,7 @@ def test_training_loss_decreases(tmp_path):
     assert np.mean(losses[:5]) > np.mean(losses[-5:]), "loss did not decrease"
 
 
+@pytest.mark.slow  # ~20s: two train loops + restore
 def test_checkpoint_restart_is_deterministic(tmp_path):
     """Kill at step 20 of 30, restore, and land on the same loss curve."""
     d1 = os.path.join(tmp_path, "a")
