@@ -4,7 +4,6 @@ ratios are what the paper's table encodes)."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -8,7 +8,10 @@ output voxels divided by total wall time, the paper's §VII metric.
 The prediction column is the planner's analytic throughput for the target
 hardware model (TPU v5e by default); on the CPU container the absolute
 numbers differ but the MPF-vs-naive ordering and the waste fractions are
-the reproducible part.
+the reproducible part.  The ``fft_cached`` row exercises the CompiledPlan
+path: kernel spectra are transformed once at plan-compile time and reused
+across every patch (ISSUE 2 acceptance — compare against an ``fft_task``
+sweep of the same geometry to see the per-patch kernel FFTs disappear).
 
 Run:  PYTHONPATH=src python benchmarks/volume_throughput.py [--m 2]
 """
@@ -66,6 +69,10 @@ def main(argv=None) -> None:
 
     plans = {
         "single(mpf)": probe,
+        "fft_cached": planner.plan_single(
+            NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
+            conv_prims=("fft_cached",), strategy_name="fft_cached",
+        ),
         "baseline_naive": planner.plan_single(
             NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
             use_mpf=False, strategy_name="baseline_naive",

@@ -6,6 +6,7 @@ direct_conv  — C3: direct conv layer
 mpf          — C4: max-pooling fragments + recombination + naive baseline
 planner      — C5: memory-constrained throughput maximization (+ strategies)
 cost_model   — Tables I/II analytics feeding the planner & benchmarks
+primitives   — primitive registry (cost+setup+apply) and CompiledPlan
 sublayer     — C6: GPU+host-RAM analogue (chunked / mesh-gathered conv)
 pipeline     — C7: two-stage producer-consumer pipeline (pod axis)
 convnet      — net assembly, plan execution, dense sliding-window oracle
@@ -23,6 +24,7 @@ from . import (  # noqa: F401
     mpf,
     pipeline,
     planner,
+    primitives,
     pruned_fft,
     sublayer,
 )

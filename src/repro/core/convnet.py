@@ -4,6 +4,11 @@ Three executors:
 
 * ``apply_plan``           — run the net with the per-layer primitives a
                              Plan chose (MPF fragments multiply the batch).
+                             A thin walk over the ``core.primitives``
+                             registry; long-lived executors should use
+                             ``primitives.compile_plan`` to reuse per-layer
+                             prepared state (cached kernel spectra) across
+                             calls.
 * ``apply_dense_reference``— the dense sliding-window oracle: dilated convs
                              + dilated max filters ("max filtering" /
                              "strided kernels" — the semantics MPF must
@@ -18,7 +23,7 @@ feeds the loss/decision and is kept linear here).
 from __future__ import annotations
 
 import itertools
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +31,9 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ConvNetConfig
-from .direct_conv import direct_conv
-from .fft_conv import fft_conv_data_parallel, fft_conv_task_parallel
-from .mpf import max_pool3d, mpf, recombine_fragments
+from .mpf import recombine_fragments
 from .planner import Plan
+from .primitives import apply_prepared_range, prepare_layers
 
 
 def init_params(key, net: ConvNetConfig, dtype=jnp.float32) -> List:
@@ -48,16 +52,6 @@ def init_params(key, net: ConvNetConfig, dtype=jnp.float32) -> List:
         else:
             params.append(None)
     return params
-
-
-def _conv_prim(prim: str, x, w, b, use_pallas: bool):
-    if prim == "direct":
-        return direct_conv(x, w, b, use_pallas=use_pallas)
-    if prim == "fft_data":
-        return fft_conv_data_parallel(x, w, b, use_pallas=use_pallas)
-    if prim in ("fft_task", "fft_cached"):
-        return fft_conv_task_parallel(x, w, b, use_pallas=use_pallas)
-    raise ValueError(prim)
 
 
 def plan_pools(net: ConvNetConfig, plan_prims: Sequence[str]) -> List[int]:
@@ -85,26 +79,15 @@ def apply_layer_range(
     into two such ranges).  ReLU placement follows the whole-net rule (no
     activation after the net's final conv), so chaining ranges composes to
     ``apply_plan(..., recombine=False)``.
+
+    A thin walk over the ``core.primitives`` registry: each layer's one-time
+    setup runs here per call (eagerly constant-folded when ``params`` are
+    concrete).  Long-lived executors should compile once instead —
+    ``primitives.compile_plan`` — so cached kernel spectra persist across
+    calls and batch sizes.
     """
-    if hi is None:
-        hi = len(net.layers)
-    last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
-    for i in range(lo, hi):
-        layer = net.layers[i]
-        prim = plan_prims[i]
-        if layer.kind == "conv":
-            w, b = params[i]
-            x = _conv_prim(prim, x, w, b, use_pallas)
-            if i != last_conv:
-                x = jax.nn.relu(x)
-        else:
-            if prim == "mpf":
-                x = mpf(x, layer.size, use_pallas=use_pallas)
-            elif prim == "pool":
-                x = max_pool3d(x, layer.size)
-            else:
-                raise ValueError(prim)
-    return x
+    prepared = prepare_layers(params, net, plan_prims, x.shape[-3:], lo, hi)
+    return apply_prepared_range(net, prepared, x, use_pallas=use_pallas)
 
 
 def apply_plan(

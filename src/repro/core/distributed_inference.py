@@ -24,7 +24,6 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from ..configs.base import ConvNetConfig
@@ -118,8 +117,8 @@ def halo_sharded_apply(
     guarantees it by construction of m).  Pool layers consume exact
     multiples so no halo is needed there when nx_local ≡ per-chip fragments.
     """
-    from .convnet import _conv_prim
     from .mpf import max_pool3d, mpf, recombine_fragments
+    from .primitives import conv_apply
 
     S = x_local.shape[0]
     pools: List[int] = []
@@ -129,7 +128,7 @@ def halo_sharded_apply(
         if layer.kind == "conv":
             w, b = params[i]
             x_local = halo_exchange_x(x_local, layer.size - 1, axis_name)
-            x_local = _conv_prim(prims[i], x_local, w, b, False)
+            x_local = conv_apply(prims[i], x_local, w, b)
             if i != last_conv:
                 x_local = jax.nn.relu(x_local)
         else:

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import itertools
 from functools import partial
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 from typing import Callable, List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -95,25 +94,24 @@ def split_net_at_theta(
     return idx[:theta], idx[theta:]
 
 
-def make_stage_fns(
-    params, net, prims: Sequence[str], theta: int, *, use_pallas: bool = False
-) -> Tuple[Callable, Callable]:
+def make_stage_fns(compiled, theta: int, *, states=None) -> Tuple[Callable, Callable]:
     """Stage closures for a pipeline2 plan: layers [0, θ) and [θ, L).
 
-    Neither stage recombines MPF fragments — the executor folds fragments
-    back after stage 1 (recombination needs all pools, which may straddle
-    the split).  ``stage1 ∘ stage0 == apply_plan(..., recombine=False)``.
+    ``compiled`` is a ``primitives.CompiledPlan`` — both stages walk its
+    prepared layers, so per-layer setup (cached kernel spectra, chosen FFT
+    shapes) is shared with every other consumer of the plan and runs zero
+    times inside the scan.  Pass ``states`` (typically a traced view of
+    ``compiled.states``) to keep the prepared arrays jit *arguments*
+    instead of baked-in trace constants.  Neither stage recombines MPF
+    fragments — the executor folds fragments back after stage 1
+    (recombination needs all pools, which may straddle the split).
+    ``stage1 ∘ stage0 == compiled.apply(..., recombine=False)``.
     """
-    from .convnet import apply_layer_range
-
-    prims = tuple(prims)
 
     def stage0(x):
-        return apply_layer_range(params, net, x, prims, 0, theta, use_pallas=use_pallas)
+        return compiled.apply_range(x, 0, theta, states=states)
 
     def stage1(x):
-        return apply_layer_range(
-            params, net, x, prims, theta, len(prims), use_pallas=use_pallas
-        )
+        return compiled.apply_range(x, theta, None, states=states)
 
     return stage0, stage1

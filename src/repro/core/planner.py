@@ -11,7 +11,11 @@ Given a ConvNet, a hardware spec, and a memory budget, enumerate
   4. per-conv-layer primitive (direct / fft_data / fft_task / fft_cached),
 
 and pick the throughput-maximizing combination whose per-layer peak memory
-fits the budget.  This is exactly the paper's search; on one chip the budget
+fits the budget.  Primitive names are priced through ``cost_model`` (which
+delegates to the ``core.primitives`` registry), and the winning Plan is
+made executable by ``primitives.compile_from_plan`` — the same registry
+entry supplies the cost model, the one-time setup, and the apply function,
+so a plan is always executable exactly as costed.  This is exactly the paper's search; on one chip the budget
 is HBM (the "GPU-only" column), and three further *strategies* re-run the
 same search under different resource envelopes:
 
@@ -27,8 +31,7 @@ same search under different resource envelopes:
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from ..configs.base import ConvNetConfig

@@ -1,0 +1,445 @@
+"""Primitive registry + CompiledPlan — the ONE place primitive names mean code.
+
+ZNNi's planner picks a per-layer primitive by *cost*; the runtime must then
+execute exactly what was costed.  Before this module, three independent
+string-dispatch sites (``cost_model.conv_cost``, ``convnet._conv_prim``,
+``sublayer._conv``) could drift — most visibly, ``fft_cached`` was charged
+an amortized kernel-FFT cost but silently executed as plain task-parallel
+FFT, recomputing every kernel spectrum on every patch.
+
+Each registry entry bundles the three faces of a primitive:
+
+* ``cost``   — the analytic ``LayerCost`` the planner prices it with;
+* ``setup``  — one-time per-layer preparation: choose the pruned-FFT shape
+  for the bound patch geometry, precompute kernel spectra (``fft_cached``),
+  record the pool mode — producing a ``PreparedLayer``;
+* ``apply``  — the per-call forward, taking the prepared state.
+
+``CompiledPlan`` binds a ``planner.Plan`` (or explicit prims + patch size)
+to per-layer ``PreparedLayer``s ONCE.  The prepared states are a JAX pytree
+(``CompiledPlan.states``) that callers pass through ``jax.jit`` as
+arguments, so cached kernel spectra are computed once per plan and reused
+across every patch, batch size, and pipeline stage — the paper's
+cross-batch kernel-transform reuse extended across patches (ROADMAP "FFT
+reuse" open item).
+
+Adding a primitive (e.g. overlap-save) is a one-file change: implement
+cost/setup/apply here and register it; the planner, ``convnet``, the volume
+executor, and the serving engine pick it up by name.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ConvNetConfig
+from .cost_model import (
+    LayerCost,
+    conv_direct_cost,
+    conv_fft_cached_kernels_cost,
+    conv_fft_data_parallel_cost,
+    conv_fft_task_parallel_cost,
+    mpf_cost,
+    pool_cost,
+)
+from .direct_conv import direct_conv
+from .fft_conv import (
+    fft_conv_data_parallel,
+    fft_conv_task_parallel,
+    fft_conv_with_precomputed,
+    precompute_kernel_fft,
+)
+from .mpf import max_pool3d, mpf, recombine_fragments
+from .pruned_fft import fft_optimal_shape
+
+
+# ---------------------------------------------------------------------------
+# PreparedLayer: the product of one-time setup
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PreparedLayer:
+    """One layer's prepared execution state.
+
+    Static metadata (prim name, FFT shape, pool size) lives in the frozen
+    fields; device arrays (weights, biases, cached kernel spectra) live in
+    ``state`` — a dict pytree so jitted callers can pass it as an argument
+    instead of baking it into the trace.
+    """
+
+    index: int
+    kind: str  # conv | pool
+    prim: str  # canonical registry name
+    pool_size: int = 0
+    fft_shape: Optional[Tuple[int, int, int]] = None
+    kernel_size: Optional[Tuple[int, int, int]] = None
+    state: Any = None
+
+
+@dataclass(frozen=True)
+class Primitive:
+    """Registry entry: a primitive's cost model, setup, and apply together.
+
+    * conv — ``cost(S, f, fp, n, k)``; ``setup(w, b, n, index=...)``;
+    * pool — ``cost(S, f, n, p)``;    ``setup(p, n, index=...)``;
+    * both — ``apply(prepared, x, state, use_pallas=...)``.
+    """
+
+    name: str
+    kind: str  # conv | pool
+    cost: Callable[..., LayerCost]
+    setup: Callable[..., PreparedLayer]
+    apply: Callable[..., jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_CONV: Dict[str, Primitive] = {}
+_POOL: Dict[str, Primitive] = {}
+_CONV_ALIASES: Dict[str, str] = {}
+
+
+def register_conv_primitive(prim: Primitive, *, aliases: Sequence[str] = ()) -> Primitive:
+    if prim.kind != "conv":
+        raise ValueError(f"{prim.name}: conv registry got kind {prim.kind!r}")
+    _CONV[prim.name] = prim
+    for a in aliases:
+        _CONV_ALIASES[a] = prim.name
+    return prim
+
+
+def register_pool_primitive(prim: Primitive) -> Primitive:
+    if prim.kind != "pool":
+        raise ValueError(f"{prim.name}: pool registry got kind {prim.kind!r}")
+    _POOL[prim.name] = prim
+    return prim
+
+
+def conv_primitive(name: str) -> Primitive:
+    canonical = _CONV_ALIASES.get(name, name)
+    try:
+        return _CONV[canonical]
+    except KeyError:
+        raise ValueError(
+            f"unknown conv primitive {name!r}; registered: {sorted(_CONV)}"
+        ) from None
+
+
+def pool_primitive(name: str) -> Primitive:
+    try:
+        return _POOL[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown pool primitive {name!r}; registered: {sorted(_POOL)}"
+        ) from None
+
+
+def get_primitive(name: str) -> Primitive:
+    """Resolve a name in either registry (conv aliases included)."""
+    canonical = _CONV_ALIASES.get(name, name)
+    if canonical in _CONV:
+        return _CONV[canonical]
+    if canonical in _POOL:
+        return _POOL[canonical]
+    raise ValueError(
+        f"unknown primitive {name!r}; registered: {sorted(_CONV) + sorted(_POOL)}"
+    )
+
+
+def registered_conv_names() -> Tuple[str, ...]:
+    """Canonical conv primitive names (aliases excluded)."""
+    return tuple(_CONV)
+
+
+def registered_pool_names() -> Tuple[str, ...]:
+    return tuple(_POOL)
+
+
+def _resolve(prepared: PreparedLayer) -> Primitive:
+    return (_CONV if prepared.kind == "conv" else _POOL)[prepared.prim]
+
+
+# ---------------------------------------------------------------------------
+# Built-in primitives
+# ---------------------------------------------------------------------------
+
+
+def _ksize(w: jnp.ndarray) -> Tuple[int, int, int]:
+    kx, ky, kz = w.shape[2:]
+    return (int(kx), int(ky), int(kz))
+
+
+def _setup_direct(w, b, n, *, index: int = -1) -> PreparedLayer:
+    return PreparedLayer(
+        index, "conv", "direct", kernel_size=_ksize(w), state={"w": w, "b": b}
+    )
+
+
+def _apply_direct(pl, x, state, *, use_pallas: bool = False):
+    return direct_conv(x, state["w"], state["b"], use_pallas=use_pallas)
+
+
+def _setup_fft(name: str):
+    def setup(w, b, n, *, index: int = -1) -> PreparedLayer:
+        fft_shape = fft_optimal_shape(tuple(int(s) for s in n))
+        return PreparedLayer(
+            index, "conv", name,
+            fft_shape=fft_shape, kernel_size=_ksize(w), state={"w": w, "b": b},
+        )
+
+    return setup
+
+
+def _apply_fft_data(pl, x, state, *, use_pallas: bool = False):
+    return fft_conv_data_parallel(
+        x, state["w"], state["b"], fft_shape=pl.fft_shape, use_pallas=use_pallas
+    )
+
+
+def _apply_fft_task(pl, x, state, *, use_pallas: bool = False):
+    return fft_conv_task_parallel(
+        x, state["w"], state["b"], fft_shape=pl.fft_shape, use_pallas=use_pallas
+    )
+
+
+def _setup_fft_cached(w, b, n, *, index: int = -1) -> PreparedLayer:
+    fft_shape = fft_optimal_shape(tuple(int(s) for s in n))
+    W = precompute_kernel_fft(w, fft_shape)  # the one-time kernel transform
+    return PreparedLayer(
+        index, "conv", "fft_cached",
+        fft_shape=fft_shape, kernel_size=_ksize(w), state={"W": W, "b": b},
+    )
+
+
+def _apply_fft_cached(pl, x, state, *, use_pallas: bool = False):
+    return fft_conv_with_precomputed(
+        x, state["W"], state["b"], pl.fft_shape, pl.kernel_size,
+        use_pallas=use_pallas,
+    )
+
+
+def _setup_mpf(p, n, *, index: int = -1) -> PreparedLayer:
+    if any((int(x) + 1) % p for x in n):
+        raise ValueError(f"MPF needs (n+1)%p==0, got n={tuple(n)}, p={p}")
+    return PreparedLayer(index, "pool", "mpf", pool_size=int(p), state={})
+
+
+def _apply_mpf(pl, x, state, *, use_pallas: bool = False):
+    return mpf(x, pl.pool_size, use_pallas=use_pallas)
+
+
+def _setup_pool(p, n, *, index: int = -1) -> PreparedLayer:
+    if any(int(x) % p for x in n):
+        raise ValueError(f"plain pool needs n%p==0, got n={tuple(n)}, p={p}")
+    return PreparedLayer(index, "pool", "pool", pool_size=int(p), state={})
+
+
+def _apply_pool(pl, x, state, *, use_pallas: bool = False):
+    return max_pool3d(x, pl.pool_size)
+
+
+register_conv_primitive(
+    Primitive("direct", "conv", conv_direct_cost, _setup_direct, _apply_direct)
+)
+register_conv_primitive(
+    Primitive("fft_data", "conv", conv_fft_data_parallel_cost,
+              _setup_fft("fft_data"), _apply_fft_data)
+)
+register_conv_primitive(
+    Primitive("fft_task", "conv", conv_fft_task_parallel_cost,
+              _setup_fft("fft_task"), _apply_fft_task),
+    aliases=("fft",),  # sublayer's historical variant name
+)
+register_conv_primitive(
+    Primitive("fft_cached", "conv", conv_fft_cached_kernels_cost,
+              _setup_fft_cached, _apply_fft_cached)
+)
+register_pool_primitive(Primitive("mpf", "pool", mpf_cost, _setup_mpf, _apply_mpf))
+register_pool_primitive(Primitive("pool", "pool", pool_cost, _setup_pool, _apply_pool))
+
+
+# ---------------------------------------------------------------------------
+# One-shot apply (setup folded into the call — sublayer / halo paths)
+# ---------------------------------------------------------------------------
+
+
+def conv_apply(name: str, x, w, b=None, *, use_pallas: bool = False):
+    """Apply a conv primitive without retained state (setup inlined).
+
+    For callers that re-chunk weights per call (``sublayer``'s streamed
+    variants, halo-sharded inference) and therefore can't reuse prepared
+    state across calls.  ``name`` may be an alias (e.g. ``"fft"``).
+    """
+    prim = conv_primitive(name)
+    pl = prim.setup(w, b, tuple(int(s) for s in x.shape[-3:]))
+    return prim.apply(pl, x, pl.state, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Plan compilation: Plan -> PreparedLayers, walked per call
+# ---------------------------------------------------------------------------
+
+
+def plan_input_size(net: ConvNetConfig, prims: Sequence[str], m: int) -> int:
+    """Input size per apply call for fragment size ``m``, walked backwards.
+
+    Generalizes ``net.valid_input_size`` / ``planner._n_in_for_m`` to
+    per-layer primitive assignments (those assume all pools are MPF or none
+    are)."""
+    n = m
+    for i in reversed(range(len(net.layers))):
+        layer = net.layers[i]
+        if layer.kind == "conv":
+            n = n + layer.size - 1
+        elif prims[i] == "mpf":
+            n = layer.size * n + layer.size - 1
+        else:
+            n = layer.size * n
+    return n
+
+
+def prepare_layers(
+    params,
+    net: ConvNetConfig,
+    prims: Sequence[str],
+    n,
+    lo: int = 0,
+    hi: Optional[int] = None,
+) -> Tuple[PreparedLayer, ...]:
+    """Run each layer's one-time setup for layers [lo, hi).
+
+    ``n`` is the spatial input extent at layer ``lo`` — an int (isotropic)
+    or a per-axis tuple.  FFT shapes are chosen here, once, from the actual
+    per-layer input sizes (no ``fft_shape=None`` re-derivation inside jit).
+    """
+    if hi is None:
+        hi = len(net.layers)
+    n = tuple(int(s) for s in (n if isinstance(n, (tuple, list)) else (n,) * 3))
+    prepared = []
+    for i in range(lo, hi):
+        layer = net.layers[i]
+        if layer.kind == "conv":
+            prim = conv_primitive(prims[i])
+            w, b = params[i]
+            prepared.append(prim.setup(w, b, n, index=i))
+            n = tuple(x - layer.size + 1 for x in n)
+        else:
+            prim = pool_primitive(prims[i])
+            prepared.append(prim.setup(layer.size, n, index=i))
+            n = tuple(x // layer.size for x in n)
+    return tuple(prepared)
+
+
+def apply_prepared_range(
+    net: ConvNetConfig,
+    prepared: Sequence[PreparedLayer],
+    x,
+    *,
+    states: Optional[Sequence[Any]] = None,
+    use_pallas: bool = False,
+):
+    """Walk prepared layers over ``x``: the thin core of plan execution.
+
+    ReLU follows the whole-net rule (no activation after the net's final
+    conv), so chaining ranges composes to a full forward pass.  ``states``
+    (when given) substitutes each layer's pytree state — the hook jitted
+    callers use to pass cached spectra as arguments rather than constants.
+    """
+    last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    if states is None:
+        states = [pl.state for pl in prepared]
+    for pl, st in zip(prepared, states):
+        x = _resolve(pl).apply(pl, x, st, use_pallas=use_pallas)
+        if pl.kind == "conv" and pl.index != last_conv:
+            x = jax.nn.relu(x)
+    return x
+
+
+@dataclass
+class CompiledPlan:
+    """A Plan bound to per-layer prepared state — setup done exactly once.
+
+    ``layers[i]`` is layer ``i``'s ``PreparedLayer``; ``states`` is the
+    matching pytree of device arrays.  ``apply``/``apply_range`` walk the
+    prepared layers; pass ``states=...`` inside jit to keep the spectra as
+    call arguments (shared across every compiled batch size).
+    """
+
+    net: ConvNetConfig
+    prims: Tuple[str, ...]
+    layers: Tuple[PreparedLayer, ...]
+    n_in: int
+    use_pallas: bool = False
+    plan: Optional[object] = None  # the planner.Plan this was compiled from
+
+    @property
+    def states(self):
+        return [pl.state for pl in self.layers]
+
+    @property
+    def mpf_pools(self) -> Tuple[int, ...]:
+        """MPF pool sizes in network order (recombination schedule)."""
+        return tuple(
+            pl.pool_size for pl in self.layers
+            if pl.kind == "pool" and pl.prim == "mpf"
+        )
+
+    def apply_range(self, x, lo: int = 0, hi: Optional[int] = None, *, states=None):
+        if hi is None:
+            hi = len(self.layers)
+        if states is not None:
+            states = states[lo:hi]
+        return apply_prepared_range(
+            self.net, self.layers[lo:hi], x,
+            states=states, use_pallas=self.use_pallas,
+        )
+
+    def apply(self, x, *, states=None, recombine: bool = True):
+        """Full forward over a patch batch; recombine MPF fragments if asked."""
+        S = x.shape[0]
+        x = self.apply_range(x, states=states)
+        pools = self.mpf_pools
+        if recombine and pools:
+            x = recombine_fragments(x, pools, S)
+        return x
+
+
+def compile_plan(
+    params,
+    net: ConvNetConfig,
+    *,
+    prims: Sequence[str],
+    n_in: Optional[int] = None,
+    m: Optional[int] = None,
+    use_pallas: bool = False,
+    plan: Optional[object] = None,
+) -> CompiledPlan:
+    """Bind primitives to prepared per-layer state for one patch geometry.
+
+    Give either ``n_in`` (input voxels per axis per apply call) or the
+    fragment size ``m`` (``n_in`` is then derived via ``plan_input_size``).
+    """
+    prims = tuple(prims)
+    if len(prims) != len(net.layers):
+        raise ValueError(f"{len(prims)} prims for {len(net.layers)} layers")
+    if n_in is None:
+        if m is None:
+            raise ValueError("need n_in or m")
+        n_in = plan_input_size(net, prims, m)
+    layers = prepare_layers(params, net, prims, n_in)
+    return CompiledPlan(net, prims, layers, int(n_in), use_pallas, plan)
+
+
+def compile_from_plan(params, net: ConvNetConfig, plan, *, use_pallas: bool = False):
+    """CompiledPlan for a ``planner.Plan`` (geometry read off the plan)."""
+    return compile_plan(
+        params, net, prims=plan.prims, n_in=plan.n_in,
+        use_pallas=use_pallas, plan=plan,
+    )

@@ -28,7 +28,6 @@ import math
 from typing import Sequence, Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 # ---------------------------------------------------------------------------
 # FFT-friendly sizes

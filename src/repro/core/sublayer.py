@@ -23,20 +23,19 @@ they are testable on one device) plus the distributed variant:
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .direct_conv import direct_conv
-from .fft_conv import fft_conv_task_parallel
+from .primitives import conv_apply
 
 
 def _conv(variant: str, x, w, b, use_pallas: bool):
-    if variant == "direct":
-        return direct_conv(x, w, b, use_pallas=use_pallas)
-    return fft_conv_task_parallel(x, w, b, use_pallas=use_pallas)
+    # registry lookup ("fft" is an alias for fft_task); setup is inlined
+    # because the streamed variants re-chunk weights on every call.
+    return conv_apply(variant, x, w, b, use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("chunk", "variant", "use_pallas"))

@@ -7,9 +7,8 @@ These are the shard_map-level building blocks behind DESIGN.md §3's
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

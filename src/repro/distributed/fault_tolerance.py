@@ -20,14 +20,12 @@ What "fault tolerance" means here, concretely:
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
 
 
 # ---------------------------------------------------------------------------

@@ -12,14 +12,11 @@ Run:  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b \
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import checkpoint as ckpt_lib
 from ..configs import get_config

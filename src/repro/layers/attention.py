@@ -19,7 +19,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from .. import flags
 from ..configs.base import AttnConfig

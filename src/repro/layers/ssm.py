@@ -23,7 +23,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from .. import flags
 from ..configs.base import SSMConfig

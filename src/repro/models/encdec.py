@@ -11,7 +11,7 @@ once at prefill (keyed off the encoder output, static during decode).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from ..core.hw import HardwareSpec, TPU_V5E
 

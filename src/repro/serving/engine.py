@@ -12,15 +12,13 @@ exactly the decode-shape inputs the dry-run shards over the mesh.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
 from ..models.api import Model
 
 

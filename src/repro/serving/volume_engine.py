@@ -89,9 +89,15 @@ class VolumeEngine:
                 for req, idx in items
             ]
         )
-        if len(items) < self.batch:  # ragged tail: pad, drop padded outputs
+        # a drained-queue tail runs at the executor's bucketed batch size
+        # (next power of two, or exactly len(items) if already compiled):
+        # continuous serving can see arbitrary ready-counts per tick, so
+        # bucketing bounds XLA compiles at O(log batch) while avoiding most
+        # padded-and-discarded work; the prepared states are shared anyway.
+        S_run = self.executor.padded_batch_size(len(items))
+        if S_run > len(items):
             xs = np.concatenate(
-                [xs, np.repeat(xs[-1:], self.batch - len(items), axis=0)]
+                [xs, np.repeat(xs[-1:], S_run - len(items), axis=0)]
             )
         ys = self.executor.run_patch_batch(xs)
         for (req, idx), y in zip(items, ys):

@@ -7,26 +7,34 @@ ZNNi's output is a *plan* (patch size n_in, batch S, per-layer primitives,
 strategy); this package is the runtime that turns a plan into dense output
 over a volume far larger than any single patch:
 
-┌────────────┐   PatchSpecs    ┌──────────────┐   (S, out, core³)  ┌─────────┐
-│  tiler     │ ──────────────▶ │ PlanExecutor │ ─────────────────▶ │ dense   │
-│ (geometry) │                 │ (jit cache)  │                    │ output  │
-└────────────┘                 └──────────────┘                    └─────────┘
+┌────────────┐  PatchSpecs  ┌──────────────────────────────┐  (S,out,core³)
+│  tiler     │ ───────────▶ │ PlanExecutor                 │ ──▶ dense
+│ (geometry) │              │  CompiledPlan + jit-per-S    │     output
+└────────────┘              └──────────────────────────────┘
 
 * ``tiler``     — pure geometry.  Decomposes (X, Y, Z) into overlapping
   patches: interior starts at multiples of core = m·P, a shifted patch for
   the edge remainder (value-identical overlap), zero padding for axes
   shorter than one patch (exact, because valid-conv output v only reads
   input [v, v+FOV)).  MPF divisibility is checked, never re-derived.
-* ``executor``  — ``PlanExecutor`` binds a Plan to jit-compiled
-  ``apply_plan`` calls: one compile per batch size, S patches per step.
-  MPF plans recombine fragments on device; plain-pool baseline plans sweep
-  the P³ shifted subsamplings (the paper's naive outer loop); pipeline2
-  plans stream patch chunks through ``core.pipeline.pipelined_apply`` on
-  the ``pod`` mesh axis.  ``run`` fills ``last_stats`` with measured vs.
-  planner-predicted vox/s, border waste included.
+* ``executor``  — ``PlanExecutor`` compiles the plan ONCE into a
+  ``core.primitives.CompiledPlan`` (per-layer one-time setup via the
+  primitive registry: cached kernel spectra for ``fft_cached``, per-layer
+  pruned-FFT shapes, pool modes), then jits one prepared-layer walk per
+  batch size — the prepared states are jit *arguments*, shared by all
+  compiled sizes, so kernel FFTs run once per plan rather than once per
+  patch.  Ragged tail batches run through a smaller compiled batch (no
+  padded-and-discarded work; ``last_stats["padded_patches"]`` counts any
+  remaining pipeline-stream padding).  MPF plans recombine fragments on
+  device; plain-pool baseline plans sweep the P³ shifted subsamplings (the
+  paper's naive outer loop); pipeline2 plans stream patch chunks through
+  ``core.pipeline.pipelined_apply`` on the ``pod`` mesh axis, both stages
+  walking the same CompiledPlan.  ``run`` fills ``last_stats`` with
+  measured vs. planner-predicted vox/s, border waste included.
 * ``serving.volume_engine`` — ``VolumeEngine`` queues volume requests and
   continuously batches *patches across requests* into executor steps (the
-  3D analogue of token-level continuous batching in ``serving/engine.py``).
+  3D analogue of token-level continuous batching in ``serving/engine.py``);
+  every request shares the executor's one CompiledPlan.
 
 Entry points: ``examples/serve_volume.py`` (service demo) and
 ``benchmarks/volume_throughput.py`` (measured vs. predicted vox/s).

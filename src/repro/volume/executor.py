@@ -1,12 +1,19 @@
 """Plan-driven patch executor: run a planner ``Plan`` over a whole volume.
 
-``PlanExecutor`` binds a plan (per-layer primitives + patch geometry) to
-jit-compiled ``apply_plan`` calls and sweeps an arbitrary-size volume:
+``PlanExecutor`` compiles a plan (per-layer primitives + patch geometry)
+into a ``primitives.CompiledPlan`` — one-time per-layer setup: cached
+kernel spectra for ``fft_cached`` layers, per-layer pruned-FFT shapes,
+pool modes — and sweeps an arbitrary-size volume with jitted walks over
+the prepared layers:
 
 * patches come from the tiler (FOV overlap, shifted edge patches, zero
   padding for undersized axes);
 * ``batch`` patches are stacked per compiled step (one XLA compile per
-  batch size, cached — patch shape is fixed by the plan);
+  batch size, cached — patch shape is fixed by the plan); the prepared
+  states are jit arguments, shared by every batch size, so kernel FFTs
+  run once per plan, not once per patch or compile; ragged tail batches
+  run through a smaller compiled batch instead of padded-and-discarded
+  work;
 * MPF plans emit their full ``core³`` dense block per patch in one call
   (fragments recombined on device);
 * plain-pool baseline plans sweep the P³ shifted subsamplings of each
@@ -33,10 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ConvNetConfig
-from ..core.convnet import apply_plan, plan_pools
 from ..core.mpf import recombine_fragments
 from ..core.pipeline import make_stage_fns, pipelined_apply
 from ..core.planner import Plan
+from ..core.primitives import CompiledPlan, compile_plan, plan_input_size
 from .tiler import VolumeTiling, extract_patch, pad_volume, tile_volume
 
 
@@ -84,64 +91,79 @@ class PlanExecutor:
         )
         self.out_channels = [l for l in net.layers if l.kind == "conv"][-1].out_channels
 
-        self._compiled: Dict[int, jax.stages.Wrapped] = {}
+        # one-time setup for every layer (cached kernel spectra, per-layer
+        # FFT shapes, pool modes) — shared by every compiled batch size and
+        # by the pipeline2 stage functions.
+        self.compiled: CompiledPlan = compile_plan(
+            params, net, prims=self.prims, n_in=self.n_in,
+            use_pallas=use_pallas, plan=plan,
+        )
+
+        recombine = self.uses_mpf
+
+        def _walk(states, xs):
+            return self.compiled.apply(xs, states=states, recombine=recombine)
+
+        # one jitted walk; jax.jit specializes (retraces) per patch-batch
+        # shape, while the prepared states stay shared call arguments.
+        self._jit_walk = jax.jit(_walk)
+        self._seen_batch_sizes: set = set()
         self._pipeline_fn = None
         self.last_stats: Dict[str, float] = {}
 
     # -- geometry ------------------------------------------------------------
 
     def _n_in(self) -> int:
-        """Input size per apply_plan call, from the net walked backwards.
+        """Input size per apply call, from the net walked backwards.
 
-        Generalizes ``net.valid_input_size`` / ``planner._n_in_for_m`` to
-        per-layer primitive assignments (those assume all pools are MPF or
-        none are); the ``extent`` assertion in __init__ cross-checks the
-        three walks against the shared core/FOV identity.
+        ``primitives.plan_input_size`` generalizes ``net.valid_input_size``
+        / ``planner._n_in_for_m`` to per-layer primitive assignments (those
+        assume all pools are MPF or none are); the ``extent`` assertion in
+        __init__ cross-checks the walks against the shared core/FOV
+        identity.
         """
-        n = self.m
-        for i in reversed(range(len(self.net.layers))):
-            layer = self.net.layers[i]
-            if layer.kind == "conv":
-                n = n + layer.size - 1
-            elif self.prims[i] == "mpf":
-                n = layer.size * n + layer.size - 1
-            else:
-                n = layer.size * n
-        return n
+        return plan_input_size(self.net, self.prims, self.m)
 
     def tiling_for(self, vol_shape: Sequence[int]) -> VolumeTiling:
         return tile_volume(vol_shape, core=self.core, fov=self.fov)
 
     # -- compiled patch-batch kernels ---------------------------------------
 
-    def _fn(self, S: int):
-        """Jitted apply_plan for a batch of S patches (cached per S)."""
-        if S not in self._compiled:
-            recombine = self.uses_mpf
+    def padded_batch_size(self, n: int) -> int:
+        """Batch size to run for ``n`` ready patches without compile churn.
 
-            def f(xs):
-                return apply_plan(
-                    self.params, self.net, xs, self.prims,
-                    use_pallas=self.use_pallas, recombine=recombine,
-                )
-
-            self._compiled[S] = jax.jit(f)
-        return self._compiled[S]
+        ``n`` itself when it is full or already compiled; otherwise the next
+        power of two (capped at ``batch``), bounding the distinct compiled
+        sizes a continuous-serving caller can trigger to O(log batch) while
+        still avoiding most padded-and-discarded work.
+        """
+        if n >= self.batch or n in self._seen_batch_sizes:
+            return min(n, self.batch)
+        s = 1
+        while s < n:
+            s *= 2
+        return min(s, self.batch)
 
     def run_patch_batch(self, xs: np.ndarray) -> np.ndarray:
-        """(S, f, extent³) patches -> (S, out_ch, core³) dense cores."""
+        """(S, f, extent³) patches -> (S, out_ch, core³) dense cores.
+
+        The per-layer states (weights, cached kernel spectra) are jit
+        *arguments*, so every batch-size specialization shares the same
+        prepared buffers — kernel FFTs ran once, in ``compile_plan``.
+        """
         S = xs.shape[0]
+        self._seen_batch_sizes.add(S)
+        states = self.compiled.states
         if self.uses_mpf:
-            return np.asarray(self._fn(S)(jnp.asarray(xs)))
+            return np.asarray(self._jit_walk(states, jnp.asarray(xs)))
         # baseline: all-subsamplings outer loop (P³ shifted passes)
         out = np.empty(
             (S, self.out_channels) + (self.core,) * 3, np.float32
         )
-        fn = self._fn(S)
         n = self.n_in
         for ox, oy, oz in itertools.product(range(self.P), repeat=3):
             sub = xs[:, :, ox : ox + n, oy : oy + n, oz : oz + n]
-            y = np.asarray(fn(jnp.asarray(sub)))  # (S, out_ch, m³)
+            y = np.asarray(self._jit_walk(states, jnp.asarray(sub)))
             out[:, :, ox :: self.P, oy :: self.P, oz :: self.P] = y
         return out
 
@@ -156,15 +178,19 @@ class PlanExecutor:
 
         t0 = time.perf_counter()
         if self.theta >= 0:
-            n_batches = self._run_pipeline(padded, tiling, out)
+            n_batches, padded_patches = self._run_pipeline(padded, tiling, out)
         else:
-            n_batches = self._run_batched(padded, tiling, out)
+            n_batches, padded_patches = self._run_batched(padded, tiling, out)
         dt = time.perf_counter() - t0
 
         vox = float(np.prod(out.shape[1:]))
         self.last_stats = {
             "patches": tiling.n_patches,
             "batches": n_batches,
+            # compute-then-discarded padding slots (pipeline stream padding;
+            # the batched path routes ragged tails through a smaller compiled
+            # batch instead of padding, so it reports 0)
+            "padded_patches": padded_patches,
             "seconds": dt,
             "out_voxels": vox,
             "measured_voxps": vox / dt if dt > 0 else float("inf"),
@@ -186,7 +212,7 @@ class PlanExecutor:
             :, : sl[0].stop - x, : sl[1].stop - yy, : sl[2].stop - z
         ]
 
-    def _run_batched(self, padded, tiling, out) -> int:
+    def _run_batched(self, padded, tiling, out):
         S = self.batch
         specs = tiling.patches
         n_batches = 0
@@ -195,17 +221,16 @@ class PlanExecutor:
             xs = np.stack(
                 [extract_patch(padded, s, tiling.extent) for s in chunk]
             )
-            if len(chunk) < S:  # ragged tail: pad by repeating, drop outputs
-                xs = np.concatenate(
-                    [xs, np.repeat(xs[-1:], S - len(chunk), axis=0)]
-                )
+            # a ragged tail runs through a smaller compiled batch (one extra
+            # compile, cached per size) instead of computing-and-discarding
+            # repeated padding patches.
             ys = self.run_patch_batch(xs)
             for spec, y in zip(chunk, ys):
                 self.write_core(out, tiling, spec, y)
             n_batches += 1
-        return n_batches
+        return n_batches, 0
 
-    def _run_pipeline(self, padded, tiling, out) -> int:
+    def _run_pipeline(self, padded, tiling, out):
         """pipeline2: stream patch chunks through the two-stage scan."""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
@@ -229,34 +254,40 @@ class PlanExecutor:
                 xs_all[t, j] = extract_patch(padded, spec, tiling.extent)
 
         if self._pipeline_fn is None:
-            stage0, stage1 = make_stage_fns(
-                self.params, self.net, self.prims, self.theta,
-                use_pallas=self.use_pallas,
-            )
             mesh = Mesh(devices, ("pod",))
 
-            def local(xs):  # xs (T_local, S, f, n³) — this pod's stream
+            def local(states, xs):  # xs (T_local, S, f, n³) — this pod's stream
+                # prepared states arrive as (replicated) jit arguments, not
+                # trace constants, matching the batched path's convention
+                stage0, stage1 = make_stage_fns(
+                    self.compiled, self.theta, states=states
+                )
                 return pipelined_apply(stage0, stage1, xs, axis_name="pod")
 
             self._pipeline_fn = jax.jit(
-                shard_map(local, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
+                shard_map(
+                    local, mesh=mesh,
+                    in_specs=(P(), P("pod")), out_specs=P("pod"),
+                )
             )
 
-        ys = np.asarray(self._pipeline_fn(jnp.asarray(xs_all)))
+        ys = np.asarray(
+            self._pipeline_fn(self.compiled.states, jnp.asarray(xs_all))
+        )
         # ring hand-off: pod p's local outputs are pod p-1's patches; roll
         # the pod-major chunk axis by one local-stream length to realign.
         if n_pods > 1:
             ys = np.roll(
                 ys.reshape((n_pods, T // n_pods) + ys.shape[1:]), -1, axis=0
             ).reshape((T,) + ys.shape[1:])
-        pools = plan_pools(self.net, self.prims)
+        pools = list(self.compiled.mpf_pools)
         for t, chunk in enumerate(chunk_specs):
             y = ys[t]
             if pools:
                 y = np.asarray(recombine_fragments(jnp.asarray(y), pools, S))
             for j, spec in enumerate(chunk[:S]):
                 self.write_core(out, tiling, spec, y[j])
-        return T
+        return T, T * S - tiling.n_patches
 
 
 def tiled_apply(

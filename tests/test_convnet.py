@@ -1,7 +1,6 @@
 """ConvNet assembly (C8): plan execution equals the dense sliding-window
 oracle; paper net geometry (Table III) is self-consistent."""
 
-import itertools
 
 import jax
 import jax.numpy as jnp
@@ -73,7 +72,6 @@ def test_paper_net_geometry(name):
 
 def test_paper_nets_tiny_forward(rng):
     """Run n337 structure (reduced channels) end-to-end once."""
-    import dataclasses
 
     net = ZNNI_NETS["n337"]
     small = ConvNetConfig(

@@ -4,7 +4,6 @@ Real multi-device cases run in a subprocess with forced host devices so
 this process keeps its single CPU device.
 """
 
-import numpy as np
 import pytest
 
 from repro.core.pipeline import pipeline_schedule, split_net_at_theta

@@ -1,6 +1,5 @@
 """C2: FFT-based conv layers equal direct convolution (all variants)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

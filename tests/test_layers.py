@@ -1,6 +1,5 @@
 """Layer-zoo unit tests: RoPE/M-RoPE, norms, MoE routing, Mamba2 SSD."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

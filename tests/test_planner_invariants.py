@@ -105,3 +105,31 @@ def test_layer_chain_shapes_are_consistent(all_plans):
     for name, strategy, plan in _iter_plans(all_plans):
         for a, b in zip(plan.choices, plan.choices[1:]):
             assert a.out_shape == b.in_shape, (name, strategy, a.index)
+
+
+def test_cost_model_names_and_runtime_registry_agree():
+    """No string drift: every name the planner enumerates resolves in the
+    runtime registry, and every registered primitive is enumerable — the
+    bug class where a costed primitive silently executes as another one
+    (ISSUE 2) cannot reappear."""
+    from repro.core import cost_model, primitives
+
+    assert set(cost_model.CONV_PRIMS) == set(primitives.registered_conv_names())
+    assert set(cost_model.POOL_PRIMS) == set(primitives.registered_pool_names())
+    for name in cost_model.CONV_PRIMS:
+        p = primitives.conv_primitive(name)
+        assert p.kind == "conv" and p.name == name
+        assert callable(p.cost) and callable(p.setup) and callable(p.apply)
+    for name in cost_model.POOL_PRIMS:
+        p = primitives.pool_primitive(name)
+        assert p.kind == "pool" and p.name == name
+        assert callable(p.cost) and callable(p.setup) and callable(p.apply)
+
+
+def test_every_planned_prim_resolves_in_registry(all_plans):
+    from repro.core import primitives
+
+    for name, strategy, plan in _iter_plans(all_plans):
+        for choice in plan.choices:
+            prim = primitives.get_primitive(choice.prim)
+            assert prim.kind == choice.kind, (name, strategy, choice.index)

@@ -1,19 +1,15 @@
 """Sharding-rule unit tests (no multi-device mesh needed — rules are pure)."""
 
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_shape
-from repro.distributed.sharding import batch_shardings, param_shardings
 from repro.models import build_model
 
 
 def _mesh16():
     # a 16x16 LOGICAL mesh shape is what the rules key on; build it on one
     # device by reusing the device — rules only read mesh.shape/axis_names.
-    import jax.sharding as shd
 
     class FakeMesh:
         axis_names = ("data", "model")
