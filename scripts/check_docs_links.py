@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in README.md and docs/*.md (CI docs job).
+
+Checks every markdown inline link ``[text](target)`` whose target is
+relative (no URL scheme, not a bare in-page anchor): the referenced file
+must exist relative to the markdown file's directory.  External URLs are
+not fetched — this guards repo-internal references only, so doc-only PRs
+get a deterministic, offline check.
+
+Usage: python scripts/check_docs_links.py [repo_root]
+Exit status 1 lists every broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style links are not used in this repo.
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = [p for p in (root / "docs").glob("*.md")] if (root / "docs").is_dir() else []
+    readme = root / "README.md"
+    if readme.is_file():
+        files.append(readme)
+    return sorted(files)
+
+
+def broken_links(root: Path) -> list[str]:
+    problems = []
+    for md in doc_files(root):
+        text = md.read_text(encoding="utf-8")
+        for match in _LINK.finditer(text):
+            target = match.group(1)
+            if _SCHEME.match(target) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path(__file__).resolve().parents[1]
+    files = doc_files(root)
+    if not files:
+        print("no markdown files found to check", file=sys.stderr)
+        return 1
+    problems = broken_links(root)
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"checked {len(files)} files: {len(problems)} broken links")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,39 @@
+"""The one bias-broadcast rule shared by every conv primitive.
+
+Each primitive used to inline its own ``b.reshape(1, fp, 1, 1, 1)``, with
+``fp`` read from a different tensor per path (``w.shape[0]``,
+``W.shape[0]``, the post-crop output) — so a bias of the wrong shape could
+fail on one primitive and silently broadcast on another, and the registry
+``apply`` and the one-shot ``conv_apply`` path could disagree.  All paths
+now add bias through :func:`add_channel_bias`, which validates against the
+*output* tensor (the one shape every path agrees on) and broadcasts from
+the right so any number of leading batch axes works.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def add_channel_bias(o: jnp.ndarray, b: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Add per-output-channel bias to o (..., f', x, y, z).
+
+    ``b`` may be None (no-op), a scalar (uniform shift), or a 1-D vector of
+    length f' == o.shape[-4].  Anything else is rejected loudly instead of
+    broadcasting differently per primitive.
+    """
+    if b is None:
+        return o
+    b = jnp.asarray(b)
+    if b.ndim == 0:
+        return o + b
+    if b.ndim == 1:
+        fp = o.shape[-4]
+        if b.shape[0] != fp:
+            raise ValueError(
+                f"bias has {b.shape[0]} channels, output has {fp}"
+            )
+        return o + b.reshape((fp, 1, 1, 1))
+    raise ValueError(f"bias must be None, scalar, or (f',); got shape {b.shape}")

@@ -153,6 +153,86 @@ def conv_fft_cached_kernels_cost(
     return LayerCost(c.flops - ker_fft, c.hbm_bytes - w_bytes, c.peak_bytes)
 
 
+def conv_overlap_save_cost(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
+    """Overlap-save: segmented small FFTs + cross-patch input-spectra reuse.
+
+    The input is segmented along axis 0 into windows of ``seg_core + k - 1``
+    voxels stepping by ``seg_core`` (``core.overlap_save``); kernel spectra
+    are cached at setup like ``fft_cached``.  Two departures from the
+    task-parallel model:
+
+    * input-FFT work is priced at *core voxels only* — n'/seg_core
+      (fractional) segment transforms instead of the ceil'd segment count,
+      because segments shared with the adjacent patch come from the
+      executor's sweep cache rather than being recomputed;
+    * peak memory holds ONE segment's input/output spectra (plus the
+      resident kernel-spectra grid and the dense in/out tensors) — the
+      paper's Table-II overhead shrinks by ~seg_extent/n, which is what
+      lets larger patches fit the budget (ZNNi's condition for FFT
+      dominance).
+
+    The MAD and inverse-FFT terms keep the full (ceil'd, overlapped)
+    segment count — that recompute is genuinely paid per patch.
+
+    Known approximations (ROADMAP open item: thread plan geometry into
+    primitive costs):
+
+    * this prices the primitive's *default* local grid
+      (``overlap_save.cost_spec``); the volume executor pins the LAYER-0
+      grid to the patch core instead (``compile_plan(overlap_seg=core)``),
+      which the ``cost(S, f, fp, n, k)`` signature cannot see;
+    * the amortized input-FFT term assumes the executor's sweep cache is
+      actually reusing spectra — true for a first-layer assignment under a
+      volume sweep, optimistic for deeper layers and one-shot
+      ``conv_apply`` calls, which recompute every (ceil'd, overlapped)
+      segment per call;
+    * the one-live-output-column peak term relies on XLA freeing each
+      segment's output spectra after its inverse (in-order per-segment
+      chain in ``os_apply_from_spectra``); a scheduler that overlapped
+      segments could hold up to n_seg columns.
+    """
+    from .overlap_save import cost_spec  # lazy: overlap_save imports pruned_fft
+
+    spec = cost_spec(n, k)
+    nt = _nt(spec.fft_shape)
+    n_seg = spec.n_segments
+    npr = tuple(x - k + 1 for x in n)
+    vol_n, vol_np = _vol(n), _vol(npr)
+    seg_in = (spec.seg_extent, n[1], n[2])
+    seg_out = (spec.seg_core, npr[1], npr[2])
+    amort_segs = npr[0] / spec.seg_core  # each core voxel transformed once
+    img_fft = S * f * amort_segs * pruned_fft_flops(seg_in, spec.fft_shape)
+    inv_fft = S * fp * n_seg * pruned_fft_flops(seg_out, spec.fft_shape)
+    mad = 8.0 * S * fp * f * nt * n_seg
+    flops = img_fft + inv_fft + mad  # kernel FFT amortized at setup
+    hbm = (
+        S * f * vol_n * F32  # input streamed once
+        + S * f * nt * C64 * (amort_segs + n_seg)  # write amortized, read per MAD
+        + fp * f * nt * C64  # resident kernel spectra re-read
+        + 2 * S * fp * nt * C64 * n_seg  # output spectra write + inverse read
+        + S * fp * vol_np * F32
+    )
+    # Stage maxima matching the implementation's staging: ALL input
+    # segment spectra are live (n_seg·ñ — they are the cross-patch reuse
+    # currency), while the MAD + inverse form an unrolled per-segment
+    # chain whose buffer liveness frees each output-spectra column after
+    # its inverse (``os_apply_from_spectra``), so ~ONE column is charged —
+    # the paper's staged-memory discipline, by graph staging rather than
+    # hard sequencing (third known approximation above).  Output-side
+    # spectra shrink by ~seg_extent/n versus the task-parallel model
+    # (kernel-spectra residency not charged, per the fft_cached
+    # convention; T live kernel buffers are).
+    peak = max(
+        S * f * (vol_n * F32 + n_seg * nt * C64),  # dense input + all seg spectra
+        (S * (n_seg * f + fp) + TASK_T) * nt * C64
+        + S * fp * vol_np * F32,  # MAD: one output column + dense accumulator
+        S * fp * (vol_np * F32 + nt * C64),  # inverse + dense output
+    )
+    return LayerCost(flops, hbm, peak)
+
+
 # ---------------------------------------------------------------------------
 # Pooling primitives
 # ---------------------------------------------------------------------------
@@ -181,7 +261,7 @@ def mpf_cost(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
 # one place only: the ``core.primitives`` registry, which must stay in 1:1
 # correspondence with these tuples (test_planner_invariants asserts it).
 
-CONV_PRIMS = ("direct", "fft_data", "fft_task", "fft_cached")
+CONV_PRIMS = ("direct", "fft_data", "fft_task", "fft_cached", "overlap_save")
 POOL_PRIMS = ("mpf", "pool")
 
 

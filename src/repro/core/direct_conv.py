@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.direct_conv3d import ops as conv3d_ops
+from .bias import add_channel_bias
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
@@ -30,6 +31,4 @@ def direct_conv(
 ) -> jnp.ndarray:
     """'valid' cross-correlation. x (S,f,n³) f32, w (f',f,k³) -> (S,f',n'³)."""
     o = conv3d_ops.conv3d(x, w, use_pallas=use_pallas)
-    if b is not None:
-        o = o + b.reshape(1, w.shape[0], 1, 1, 1)
-    return o
+    return add_channel_bias(o, b)

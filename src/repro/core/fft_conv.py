@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.cmul_mad import ops as cmul_ops
+from .bias import add_channel_bias
 from .pruned_fft import (
     fft_optimal_shape,
     kernel_rfftn,
@@ -91,9 +92,7 @@ def fft_conv_data_parallel(
 
     o = jax.lax.map(one_chunk, w_chunks)  # (n_chunk, S, chunk, out)
     o = jnp.moveaxis(o, 1, 0).reshape(S, fp + pad_fp, *out)[:, :fp]
-    if b is not None:
-        o = o + b.reshape(1, fp, 1, 1, 1)
-    return o
+    return add_channel_bias(o, b)
 
 
 @partial(jax.jit, static_argnames=("fft_shape", "use_pallas"))
@@ -111,8 +110,6 @@ def fft_conv_task_parallel(
     the single einsum has enough parallel work to fill the chip; memory is
     the full (f', f, ñ) kernel-spectrum grid, exactly Table II's trade.
     """
-    S, f = x.shape[:2]
-    fp = w.shape[0]
     n, k = x.shape[2:], w.shape[2:]
     if fft_shape is None:
         fft_shape = fft_optimal_shape(n)
@@ -122,9 +119,7 @@ def fft_conv_task_parallel(
     W = precompute_kernel_fft(w, fft_shape)  # (f', f, ñ)
     O = cmul_ops.cmul_mad(X, W, use_pallas=use_pallas)  # (S, f', ñ)
     o = pruned_irfftn(O, fft_shape, (0, 0, 0), out)
-    if b is not None:
-        o = o + b.reshape(1, fp, 1, 1, 1)
-    return o
+    return add_channel_bias(o, b)
 
 
 def fft_conv_with_precomputed(
@@ -142,6 +137,4 @@ def fft_conv_with_precomputed(
     X = pruned_rfftn(x, fft_shape)
     O = cmul_ops.cmul_mad(X, W, use_pallas=use_pallas)
     o = pruned_irfftn(O, fft_shape, (0, 0, 0), out)
-    if b is not None:
-        o = o + b.reshape(1, W.shape[0], 1, 1, 1)
-    return o
+    return add_channel_bias(o, b)

@@ -1,0 +1,257 @@
+"""Overlap-save FFT convolution with reusable input segment spectra.
+
+ZNNi's FFT primitives transform each patch's *entire* input, even though
+adjacent patches overlap by FOV-1 voxels — the overlap region's spectra are
+recomputed for every patch (the paper's border waste, §II, paid again in
+the transform).  Overlap-save is the classical fix: segment the input along
+the sweep axis into windows of ``seg_core + k - 1`` voxels stepping by
+``seg_core``, transform each window with a *small* pruned FFT (shape sized
+to the segment, not the patch), multiply with the cached kernel spectra,
+inverse-transform, and keep each window's ``seg_core`` valid outputs.
+
+Two wins, both on the memory side the paper says decides FFT dominance:
+
+* the per-segment FFT shape is ``seg_core + k - 1`` instead of the full
+  patch extent ``core + FOV - 1`` — spectra live memory shrinks by about
+  the same ratio, so larger patches fit the budget (less border waste);
+* segments are addressed by *absolute* input coordinates, so the windows
+  an adjacent patch shares (the FOV halo) have identical spectra — the
+  volume executor caches them across patches within a sweep and only
+  transforms each aligned segment once (``volume/executor.py``).
+
+The segmentation is fixed at setup time (``plan_overlap_save``) and carried
+on the prepared layer as a frozen ``OverlapSaveSpec`` — a static jit
+argument, like the pruned-FFT shape of the other FFT primitives.
+
+Correctness: a circular transform of size >= seg_extent has no wrap-around
+for output offsets [0, seg_core) of the window (same argument as
+``pruned_fft.fft_correlate_valid``), and a trailing segment shifted flush
+to the input end recomputes outputs the previous segment already produced
+— value-identical, so the overlapping write is exact (the same shifted-
+edge-patch argument as ``volume/tiler.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.cmul_mad import ops as cmul_ops
+from .bias import add_channel_bias
+from .pruned_fft import fft_optimal_shape, pruned_irfftn, pruned_rfftn
+
+
+@dataclass(frozen=True)
+class OverlapSaveSpec:
+    """Static overlap-save segmentation for one conv layer.
+
+    The segment grid is *aligned*: segment j produces outputs
+    ``[j·seg_core, (j+1)·seg_core)`` from inputs
+    ``[j·seg_core, j·seg_core + seg_extent)``.  The last segment's input
+    window may extend up to ``input_pad`` voxels past ``n`` — the volume
+    executor reads those voxels from the padded volume (the x-neighbour's
+    data, which is exactly what makes the grid patch-independent and its
+    spectra shareable); the self-contained path zero-pads instead, which is
+    exact because outputs past ``out`` are cropped (``tail_len``) and
+    output v only reads input [v, v+k).
+
+    Frozen + tuple-valued so it is hashable: jitted appliers take it as a
+    static argument, and ``functools.lru_cache`` memoizes planning.
+    """
+
+    n: Tuple[int, int, int]  # layer input extent
+    k: Tuple[int, int, int]  # kernel extent
+    out: Tuple[int, int, int]  # valid-conv output extent (n - k + 1)
+    seg_core: int  # output voxels per segment along axis 0
+    seg_extent: int  # input voxels per segment (= seg_core + k0 - 1)
+    starts: Tuple[int, ...]  # aligned segment starts (input == output)
+    tail_len: int  # valid outputs of the last segment (<= seg_core)
+    input_pad: int  # axis-0 voxels the grid reads past n
+    fft_shape: Tuple[int, int, int]  # per-segment pruned-FFT shape
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.starts)
+
+    @property
+    def span(self) -> int:
+        """Axis-0 input voxels the whole grid reads (= n + input_pad)."""
+        return self.starts[-1] + self.seg_extent
+
+
+@functools.lru_cache(maxsize=None)
+def plan_overlap_save(
+    n: Tuple[int, int, int],
+    k: Tuple[int, int, int],
+    seg_core: Optional[int] = None,
+) -> OverlapSaveSpec:
+    """Choose the segment grid for input ``n`` and kernel ``k``.
+
+    ``seg_core`` is the output voxels per segment along axis 0; the volume
+    executor passes the plan's patch core so the layer-0 segment grid of
+    adjacent patches lands on the same absolute coordinates (cache hits).
+    Callers without a grid to align to get a small default (short segments
+    amortize best but pay more MAD overhead per voxel).  ``seg_core`` is
+    clamped to the output extent, so undersized inputs degrade to a single
+    segment.
+    """
+    n = tuple(int(s) for s in n)
+    k = tuple(int(s) for s in k)
+    out = tuple(x - ki + 1 for x, ki in zip(n, k))
+    if min(out) < 1:
+        raise ValueError(f"kernel {k} larger than input {n}")
+    n_out = out[0]
+    if seg_core is None:
+        seg_core = max(2 * (k[0] - 1), 4)
+    seg_core = max(1, min(int(seg_core), n_out))
+    n_seg = -(-n_out // seg_core)
+    starts = tuple(j * seg_core for j in range(n_seg))
+    tail_len = n_out - (n_seg - 1) * seg_core
+    seg_extent = seg_core + k[0] - 1
+    input_pad = starts[-1] + seg_extent - n[0]
+    fft_shape = fft_optimal_shape((seg_extent, n[1], n[2]))
+    return OverlapSaveSpec(
+        n, k, out, seg_core, seg_extent, starts, tail_len, input_pad, fft_shape
+    )
+
+
+# ---------------------------------------------------------------------------
+# The segmented transform - multiply - accumulate - inverse pipeline
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def segment_spectrum(seg: jnp.ndarray, spec: OverlapSaveSpec) -> jnp.ndarray:
+    """Pruned rfftn of input segments (..., f, seg_extent, ny, nz)."""
+    return pruned_rfftn(seg, spec.fft_shape)
+
+
+def slice_segment_spectra(
+    vol: jnp.ndarray,
+    starts: jnp.ndarray,
+    spec: OverlapSaveSpec,
+    extent: int,
+) -> jnp.ndarray:
+    """Slice + transform segments of a device-resident volume (traceable).
+
+    ``vol`` (f, X', Y', Z') is the padded volume (pre-extended so every
+    slice is in bounds); ``starts`` (M, 3) are absolute (x, y, z) segment
+    origins.  Returns (M, f, ña, ñb, ñc).  The executor's unit of
+    cross-patch reuse: each sweep-cache miss passes through here exactly
+    once (tests count the segments to assert the reuse actually happens),
+    and keeping slice + FFT on device means a miss costs no host copies.
+    """
+    def one(st):
+        seg = jax.lax.dynamic_slice(
+            vol, (0, st[0], st[1], st[2]),
+            (vol.shape[0], spec.seg_extent, extent, extent),
+        )
+        return pruned_rfftn(seg, spec.fft_shape)
+
+    return jax.vmap(one)(starts)
+
+
+segment_spectra_at = jax.jit(
+    slice_segment_spectra, static_argnames=("spec", "extent")
+)
+
+
+def os_input_spectra(x: jnp.ndarray, spec: OverlapSaveSpec) -> jnp.ndarray:
+    """All segment spectra of ``x`` (..., f, nx, ny, nz).
+
+    Returns (..., n_seg, f, na, nb, nc//2+1) — the segment axis is inserted
+    in front of the channel axis so batched and unbatched inputs stack the
+    same way.  The tail segment's out-of-range voxels are zero-padded;
+    exact, because its outputs past ``spec.out`` are cropped at reassembly.
+    """
+    if spec.input_pad:
+        pad = [(0, 0)] * (x.ndim - 3) + [(0, spec.input_pad), (0, 0), (0, 0)]
+        x = jnp.pad(x, pad)
+    segs = jnp.stack(
+        [x[..., st : st + spec.seg_extent, :, :] for st in spec.starts],
+        axis=x.ndim - 4,
+    )
+    return segment_spectrum(segs, spec)  # leading dims pass through rfftn
+
+
+def os_apply_from_spectra(
+    F: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec: OverlapSaveSpec,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """MAD + inverse + reassembly from precomputed input segment spectra.
+
+    F (S, n_seg, f, na, nb, nc''), W (f', f, na, nb, nc'') cached conjugate
+    kernel spectra (``fft_conv.precompute_kernel_fft`` at the segment FFT
+    shape) -> (S, f', *spec.out).  The MAD + inverse run as an unrolled
+    per-segment chain: each segment's output spectra are consumed by its
+    own inverse transform, so XLA's in-order scheduling and buffer
+    liveness keep ~ONE output-spectra column live at a time — the paper's
+    staged-memory discipline, the same graph-staging argument
+    ``fft_conv``'s module docstring records, and what
+    ``cost_model.conv_overlap_save_cost`` charges to peak (a scheduler
+    that overlapped segments could hold more; see the cost docstring's
+    known approximations).  The input segment spectra F are all live by
+    design: they are the executor's reuse currency.
+    """
+    n_seg = F.shape[1]
+    s = spec.seg_core
+    crop = (s,) + spec.out[1:]
+    # Per-segment MAD -> inverse -> crop, unrolled: each segment's output
+    # spectra are consumed by its own inverse transform before the next
+    # segment's MAD runs, so buffer liveness keeps ONE output-spectra
+    # column live at a time (the same staged-memory argument as
+    # ``fft_conv_data_parallel``'s output-channel chunking; what the crop
+    # keeps is the small spatial core).
+    parts = []
+    for j in range(n_seg):
+        O = cmul_ops.cmul_mad(F[:, j], W, use_pallas=use_pallas)
+        seg = pruned_irfftn(O, spec.fft_shape, (0, 0, 0), crop)
+        # aligned grid: segment j owns outputs [j·s, (j+1)·s); the tail's
+        # outputs past the true extent came from padding and are dropped.
+        parts.append(seg if j < n_seg - 1 else seg[:, :, : spec.tail_len])
+    return add_channel_bias(jnp.concatenate(parts, axis=2), b)
+
+
+def overlap_save_conv(
+    x: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec: OverlapSaveSpec,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Self-contained segmented 'valid' cross-correlation (no spectra reuse).
+
+    The registry ``apply`` for layers the executor cannot amortize (deeper
+    layers, one-shot ``conv_apply`` callers, the plain-pool subsampling
+    sweep).  x (S, f, *spec.n) -> (S, f', *spec.out).
+    """
+    return os_apply_from_spectra(
+        os_input_spectra(x, spec), W, b, spec, use_pallas=use_pallas
+    )
+
+
+def shared_segments(spec: OverlapSaveSpec, core: int) -> int:
+    """How many segments two x-adjacent patches (stride ``core``) share.
+
+    A segment at relative start r of patch x0 coincides with a segment of
+    patch x0+core iff r - core is also a relative start.  This is the
+    amortization the cost model prices and the executor cache realizes.
+    """
+    s = set(spec.starts)
+    return sum(1 for r in spec.starts if r - core in s)
+
+
+def cost_spec(n: Sequence[int], k: int) -> OverlapSaveSpec:
+    """The segmentation the analytic cost model prices (default grid)."""
+    n3 = tuple(int(s) for s in n)
+    return plan_overlap_save(n3, (int(k),) * 3)

@@ -258,6 +258,88 @@ def plan_single(
     return best
 
 
+def plan_fixed(
+    net: ConvNetConfig,
+    hw: HardwareSpec,
+    prims: Sequence[str],
+    *,
+    m: int,
+    batch: int = 1,
+    chips: int = 1,
+    mem_bytes: Optional[float] = None,
+    strategy_name: str = "fixed",
+) -> Optional[Plan]:
+    """Price a FIXED per-layer primitive assignment (no search).
+
+    The executor accepts explicit per-layer prims — including mixes the
+    enumeration searches cannot express, e.g. ``overlap_save`` at the
+    input layer (where the volume sweep can reuse segment spectra across
+    patches) with ``fft_cached`` deeper.  This walks the same registry
+    cost model over that assignment so such plans carry predicted
+    throughput, peak bytes, and the runtime geometry metadata like any
+    searched plan.  Raises ValueError on divisibility violations; returns
+    None when some layer's peak exceeds the memory budget (default: one
+    chip's HBM), the same feasibility rule every search applies.
+    """
+    mem = hw.hbm_bytes if mem_bytes is None else mem_bytes
+    from .primitives import plan_input_size  # lazy: primitives imports us
+
+    prims = tuple(prims)
+    if len(prims) != len(net.layers):
+        raise ValueError(f"{len(prims)} prims for {len(net.layers)} layers")
+    n_in = plan_input_size(net, prims, m)
+    choices: List[LayerChoice] = []
+    S_cur, f_cur, n_cur = batch, net.in_channels, n_in
+    P_mpf = 1
+    for i, layer in enumerate(net.layers):
+        n3 = (n_cur,) * 3
+        if layer.kind == "conv":
+            fp = layer.out_channels
+            c = conv_cost(prims[i], S_cur, f_cur, fp, n3, layer.size)
+            n_next = n_cur - layer.size + 1
+            choices.append(
+                LayerChoice(i, "conv", prims[i], (S_cur, f_cur, n3),
+                            (S_cur, fp, (n_next,) * 3), c, c.time(hw, chips))
+            )
+            f_cur, n_cur = fp, n_next
+        elif prims[i] == "mpf":
+            if (n_cur + 1) % layer.size:
+                raise ValueError(f"layer {i}: MPF needs (n+1)%p==0, n={n_cur}")
+            c = mpf_cost(S_cur, f_cur, n3, layer.size)
+            n_next, S_next = n_cur // layer.size, S_cur * layer.size**3
+            choices.append(
+                LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3),
+                            (S_next, f_cur, (n_next,) * 3), c, c.time(hw, chips))
+            )
+            S_cur, n_cur = S_next, n_next
+            P_mpf *= layer.size
+        else:
+            if prims[i] != "pool":
+                raise ValueError(
+                    f"layer {i}: unknown pool primitive {prims[i]!r} "
+                    "(expected 'mpf' or 'pool')"
+                )
+            if n_cur % layer.size:
+                raise ValueError(f"layer {i}: plain pool needs n%p==0, n={n_cur}")
+            c = pool_cost(S_cur, f_cur, n3, layer.size)
+            choices.append(
+                LayerChoice(i, "pool", "pool", (S_cur, f_cur, n3),
+                            (S_cur, f_cur, (n_cur // layer.size,) * 3), c,
+                            c.time(hw, chips))
+            )
+            n_cur //= layer.size
+    total = sum(c.time_s for c in choices)
+    vox = batch * float(m * P_mpf) ** 3
+    peak = max(c.cost.peak_bytes for c in choices)
+    if peak > mem:
+        return None
+    return Plan(
+        net.name, strategy_name, chips, batch, n_in, m,
+        tuple(choices), total, vox, peak,
+        fov=net.field_of_view(), core=m * net.total_pooling(),
+    )
+
+
 def plan_streamed(
     net: ConvNetConfig,
     hw: HardwareSpec,

@@ -23,9 +23,11 @@ across every patch, batch size, and pipeline stage — the paper's
 cross-batch kernel-transform reuse extended across patches (ROADMAP "FFT
 reuse" open item).
 
-Adding a primitive (e.g. overlap-save) is a one-file change: implement
-cost/setup/apply here and register it; the planner, ``convnet``, the volume
-executor, and the serving engine pick it up by name.
+Adding a primitive is a small, local change: implement cost/setup/apply,
+register it here, and append the name to ``cost_model``'s list; the
+planner, ``convnet``, the volume executor, and the serving engine pick it
+up by name (recipe: docs/architecture.md — ``overlap_save`` is the worked
+example).
 """
 
 from __future__ import annotations
@@ -43,6 +45,7 @@ from .cost_model import (
     conv_fft_cached_kernels_cost,
     conv_fft_data_parallel_cost,
     conv_fft_task_parallel_cost,
+    conv_overlap_save_cost,
     mpf_cost,
     pool_cost,
 )
@@ -54,6 +57,7 @@ from .fft_conv import (
     precompute_kernel_fft,
 )
 from .mpf import max_pool3d, mpf, recombine_fragments
+from .overlap_save import OverlapSaveSpec, overlap_save_conv, plan_overlap_save
 from .pruned_fft import fft_optimal_shape
 
 
@@ -78,6 +82,7 @@ class PreparedLayer:
     pool_size: int = 0
     fft_shape: Optional[Tuple[int, int, int]] = None
     kernel_size: Optional[Tuple[int, int, int]] = None
+    os_spec: Optional[OverlapSaveSpec] = None  # overlap_save segmentation
     state: Any = None
 
 
@@ -225,6 +230,29 @@ def _apply_fft_cached(pl, x, state, *, use_pallas: bool = False):
     )
 
 
+def _setup_overlap_save(w, b, n, *, index: int = -1, seg_core=None) -> PreparedLayer:
+    """Segment grid + cached kernel spectra at the SEGMENT FFT shape.
+
+    ``seg_core`` aligns the layer's segment grid to an external stride (the
+    volume executor passes the plan's patch core so x-adjacent patches
+    share segment spectra); default is a small local grid.
+    """
+    k = _ksize(w)
+    spec = plan_overlap_save(tuple(int(s) for s in n), k, seg_core)
+    W = precompute_kernel_fft(w, spec.fft_shape)
+    return PreparedLayer(
+        index, "conv", "overlap_save",
+        fft_shape=spec.fft_shape, kernel_size=k, os_spec=spec,
+        state={"W": W, "b": b},
+    )
+
+
+def _apply_overlap_save(pl, x, state, *, use_pallas: bool = False):
+    return overlap_save_conv(
+        x, state["W"], state["b"], pl.os_spec, use_pallas=use_pallas
+    )
+
+
 def _setup_mpf(p, n, *, index: int = -1) -> PreparedLayer:
     if any((int(x) + 1) % p for x in n):
         raise ValueError(f"MPF needs (n+1)%p==0, got n={tuple(n)}, p={p}")
@@ -260,6 +288,10 @@ register_conv_primitive(
 register_conv_primitive(
     Primitive("fft_cached", "conv", conv_fft_cached_kernels_cost,
               _setup_fft_cached, _apply_fft_cached)
+)
+register_conv_primitive(
+    Primitive("overlap_save", "conv", conv_overlap_save_cost,
+              _setup_overlap_save, _apply_overlap_save)
 )
 register_pool_primitive(Primitive("mpf", "pool", mpf_cost, _setup_mpf, _apply_mpf))
 register_pool_primitive(Primitive("pool", "pool", pool_cost, _setup_pool, _apply_pool))
@@ -312,12 +344,20 @@ def prepare_layers(
     n,
     lo: int = 0,
     hi: Optional[int] = None,
+    *,
+    overlap_seg: Optional[int] = None,
 ) -> Tuple[PreparedLayer, ...]:
     """Run each layer's one-time setup for layers [lo, hi).
 
     ``n`` is the spatial input extent at layer ``lo`` — an int (isotropic)
     or a per-axis tuple.  FFT shapes are chosen here, once, from the actual
     per-layer input sizes (no ``fft_shape=None`` re-derivation inside jit).
+
+    ``overlap_seg`` pins the segment core of a FIRST-layer ``overlap_save``
+    conv (the volume executor passes the plan's patch core so the layer-0
+    segment grid of x-adjacent patches coincides and spectra can be reused
+    across patches); deeper overlap_save layers keep their local default —
+    only the net's input has a cross-patch identity to exploit.
     """
     if hi is None:
         hi = len(net.layers)
@@ -328,7 +368,10 @@ def prepare_layers(
         if layer.kind == "conv":
             prim = conv_primitive(prims[i])
             w, b = params[i]
-            prepared.append(prim.setup(w, b, n, index=i))
+            if i == 0 and prim.name == "overlap_save" and overlap_seg:
+                prepared.append(prim.setup(w, b, n, index=i, seg_core=overlap_seg))
+            else:
+                prepared.append(prim.setup(w, b, n, index=i))
             n = tuple(x - layer.size + 1 for x in n)
         else:
             prim = pool_primitive(prims[i])
@@ -420,11 +463,14 @@ def compile_plan(
     m: Optional[int] = None,
     use_pallas: bool = False,
     plan: Optional[object] = None,
+    overlap_seg: Optional[int] = None,
 ) -> CompiledPlan:
     """Bind primitives to prepared per-layer state for one patch geometry.
 
     Give either ``n_in`` (input voxels per axis per apply call) or the
     fragment size ``m`` (``n_in`` is then derived via ``plan_input_size``).
+    ``overlap_seg`` (see ``prepare_layers``) aligns a first-layer
+    ``overlap_save`` segment grid with the volume patch grid.
     """
     prims = tuple(prims)
     if len(prims) != len(net.layers):
@@ -433,7 +479,7 @@ def compile_plan(
         if m is None:
             raise ValueError("need n_in or m")
         n_in = plan_input_size(net, prims, m)
-    layers = prepare_layers(params, net, prims, n_in)
+    layers = prepare_layers(params, net, prims, n_in, overlap_seg=overlap_seg)
     return CompiledPlan(net, prims, layers, int(n_in), use_pallas, plan)
 
 
@@ -442,4 +488,5 @@ def compile_from_plan(params, net: ConvNetConfig, plan, *, use_pallas: bool = Fa
     return compile_plan(
         params, net, prims=plan.prims, n_in=plan.n_in,
         use_pallas=use_pallas, plan=plan,
+        overlap_seg=plan.core if plan.prims[0] == "overlap_save" else None,
     )

@@ -20,17 +20,22 @@ over a volume far larger than any single patch:
 * ``executor``  — ``PlanExecutor`` compiles the plan ONCE into a
   ``core.primitives.CompiledPlan`` (per-layer one-time setup via the
   primitive registry: cached kernel spectra for ``fft_cached``, per-layer
-  pruned-FFT shapes, pool modes), then jits one prepared-layer walk per
-  batch size — the prepared states are jit *arguments*, shared by all
-  compiled sizes, so kernel FFTs run once per plan rather than once per
-  patch.  Ragged tail batches run through a smaller compiled batch (no
-  padded-and-discarded work; ``last_stats["padded_patches"]`` counts any
-  remaining pipeline-stream padding).  MPF plans recombine fragments on
-  device; plain-pool baseline plans sweep the P³ shifted subsamplings (the
-  paper's naive outer loop); pipeline2 plans stream patch chunks through
+  pruned-FFT shapes, overlap-save segment grids, pool modes), then jits
+  one prepared-layer walk per batch size — the prepared states are jit
+  *arguments*, shared by all compiled sizes, so kernel FFTs run once per
+  plan rather than once per patch.  Ragged tail batches run through a
+  smaller compiled batch (no padded-and-discarded work;
+  ``last_stats["padded_patches"]`` counts any remaining pipeline-stream
+  padding).  MPF plans recombine fragments on device; plain-pool baseline
+  plans sweep the P³ shifted subsamplings (the paper's naive outer loop);
+  pipeline2 plans stream patch chunks through
   ``core.pipeline.pipelined_apply`` on the ``pod`` mesh axis, both stages
-  walking the same CompiledPlan.  ``run`` fills ``last_stats`` with
-  measured vs. planner-predicted vox/s, border waste included.
+  walking the same CompiledPlan.  Plans whose first conv is
+  ``overlap_save`` additionally reuse layer-0 input segment spectra
+  between x-adjacent patches within a sweep (the FOV overlap transformed
+  once — see ``core/overlap_save.py`` and docs/architecture.md).  ``run``
+  fills ``last_stats`` with measured vs. planner-predicted vox/s, border
+  waste included, plus ``os_seg_fft``/``os_seg_hits`` reuse counters.
 * ``serving.volume_engine`` — ``VolumeEngine`` queues volume requests and
   continuously batches *patches across requests* into executor steps (the
   3D analogue of token-level continuous batching in ``serving/engine.py``);

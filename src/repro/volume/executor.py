@@ -23,6 +23,25 @@ the prepared layers:
   ``core.pipeline.pipelined_apply`` (lax.scan over patches, stage hand-off
   across the ``pod`` mesh axis; queue depth 1 per §VII-C).
 
+Patch-geometry invariants this module relies on (see ``tiler``): every
+patch spans ``extent = core + FOV - 1`` input voxels and contributes a
+``core³`` dense block; adjacent patches overlap by FOV-1 input voxels;
+edge patches are *shifted* (value-identical overlap), and the patch stream
+is x-major with non-decreasing x.
+
+Overlap-save input-spectra reuse: when the plan's FIRST conv layer is
+``overlap_save``, the layer-0 segment grid is pinned to the patch core
+(``compile_plan(overlap_seg=core)``) so the segments of x-adjacent patches
+land on identical absolute input coordinates.  Within one sweep the
+executor caches segment spectra keyed by ``tiler.segment_keys`` — the
+FOV-overlap a neighbour shares is transformed once, not once per patch
+(ZNNi's border waste removed from the transform).  The cache is scoped to
+a *sweep* (``begin_sweep``/``end_sweep``): volume edges (shifted patches,
+different y/z rows) and new requests simply miss and recompute; eviction
+rides the tiler's non-decreasing-x guarantee.  ``last_stats`` reports
+``os_seg_fft`` (input segment FFTs actually run) and ``os_seg_hits``
+(segments served from the cache).
+
 ``run`` returns the dense (out_ch, X-FOV+1, ...) output and records
 ``last_stats`` (patch/batch counts, wall seconds, measured vox/s including
 border waste, and the planner's predicted vox/s for comparison).
@@ -33,18 +52,38 @@ from __future__ import annotations
 import itertools
 import math
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ConvNetConfig
+from ..core import overlap_save as os_mod
 from ..core.mpf import recombine_fragments
 from ..core.pipeline import make_stage_fns, pipelined_apply
 from ..core.planner import Plan
 from ..core.primitives import CompiledPlan, compile_plan, plan_input_size
-from .tiler import VolumeTiling, extract_patch, pad_volume, tile_volume
+from .tiler import HaloSpec, VolumeTiling, extract_patch, pad_volume, tile_volume
+
+
+class _PendingMiss(NamedTuple):
+    """Sweep-cache placeholder: this key's spectrum is being computed in
+    the current batch as miss row ``idx`` (dedups within-batch repeats)."""
+
+    idx: int
+
+
+class _SpectrumRef(NamedTuple):
+    """Sweep-cache entry: row ``idx`` of a batch's miss-FFT output array.
+
+    Rows are never copied out — the fused step receives the parent arrays
+    as jit arguments and selects rows at trace time, so a cache hit costs
+    no host work at all.
+    """
+
+    parent: Any  # (M, f, ña, ñb, ñc) device array
+    idx: int
 
 
 class PlanExecutor:
@@ -93,10 +132,13 @@ class PlanExecutor:
 
         # one-time setup for every layer (cached kernel spectra, per-layer
         # FFT shapes, pool modes) — shared by every compiled batch size and
-        # by the pipeline2 stage functions.
+        # by the pipeline2 stage functions.  A first-layer overlap_save conv
+        # gets its segment grid pinned to the patch core so x-adjacent
+        # patches share segment spectra (cross-patch input-FFT reuse).
         self.compiled: CompiledPlan = compile_plan(
             params, net, prims=self.prims, n_in=self.n_in,
             use_pallas=use_pallas, plan=plan,
+            overlap_seg=self.core if self.prims[0] == "overlap_save" else None,
         )
 
         recombine = self.uses_mpf
@@ -110,6 +152,27 @@ class PlanExecutor:
         self._seen_batch_sizes: set = set()
         self._pipeline_fn = None
         self.last_stats: Dict[str, float] = {}
+
+        # -- overlap-save input-spectra reuse state --------------------------
+        # active when the patch walk starts with an overlap_save conv over
+        # the full patch extent (MPF plans; the plain-pool subsampling sweep
+        # slices shifted sub-windows, which breaks segment alignment).
+        self._os_reuse = self.prims[0] == "overlap_save" and self.uses_mpf
+        self._sweeps: Dict[int, Dict[Tuple[int, int, int], jnp.ndarray]] = {}
+        self._sweep_vols: Dict[int, jnp.ndarray] = {}
+        self._sweep_counter = 0
+        self._os_misses = 0
+        self._os_hits = 0
+        if self._os_reuse:
+            spec0 = self.compiled.layers[0].os_spec
+            self._jit_os_walk = jax.jit(self._os_walk)
+            # the fused per-batch step retraces per miss/hit *pattern*; the
+            # tiler produces only a handful (first row, interior row,
+            # shifted edge row) per batch size
+            self._jit_os_step = jax.jit(self._os_step, static_argnames=("pattern",))
+            self.halo = HaloSpec(spec0.seg_core, spec0.seg_extent, spec0.starts)
+        else:
+            self.halo = None
 
     # -- geometry ------------------------------------------------------------
 
@@ -125,7 +188,182 @@ class PlanExecutor:
         return plan_input_size(self.net, self.prims, self.m)
 
     def tiling_for(self, vol_shape: Sequence[int]) -> VolumeTiling:
-        return tile_volume(vol_shape, core=self.core, fov=self.fov)
+        return tile_volume(
+            vol_shape, core=self.core, fov=self.fov, halo=self.halo
+        )
+
+    # -- overlap-save sweep cache -------------------------------------------
+
+    def begin_sweep(self, padded: np.ndarray) -> int:
+        """Open a fresh spectra-reuse scope (one volume sweep / request).
+
+        Scoping the cache to a sweep is what makes reuse safe: segment keys
+        are absolute coordinates *within one padded volume*, so spectra
+        must never leak across requests.  The padded volume is uploaded to
+        the device once here — misses then slice and transform on device
+        (no per-segment host copies) — extended along x so the aligned
+        grid's tail segments stay in bounds (the extra voxels are zeros;
+        exact, because the outputs they influence are cropped).
+        """
+        spec0 = self.compiled.layers[0].os_spec
+        max_x0 = max(0, padded.shape[1] - self.extent)
+        short = max(0, max_x0 + spec0.span - padded.shape[1])
+        vol = jnp.asarray(padded)
+        if short:
+            vol = jnp.pad(vol, ((0, 0), (0, short), (0, 0), (0, 0)))
+        self._sweep_counter += 1
+        self._sweeps[self._sweep_counter] = {}
+        self._sweep_vols[self._sweep_counter] = vol
+        return self._sweep_counter
+
+    def end_sweep(self, token: Optional[int]) -> None:
+        self._sweeps.pop(token, None)
+        self._sweep_vols.pop(token, None)
+
+    def _os_walk(self, states, F):
+        """Jitted forward from precomputed layer-0 segment spectra.
+
+        F (S, n_seg, f, ña, ñb, ñc) — the stacked per-patch spectra the
+        sweep cache assembled; layers 1.. walk the shared prepared states
+        exactly like the plain batched path.
+        """
+        pl0 = self.compiled.layers[0]
+        x = os_mod.os_apply_from_spectra(
+            F, states[0]["W"], states[0]["b"], pl0.os_spec,
+            use_pallas=self.use_pallas,
+        )
+        last_conv = max(
+            i for i, l in enumerate(self.net.layers) if l.kind == "conv"
+        )
+        if last_conv != 0:
+            x = jax.nn.relu(x)
+        x = self.compiled.apply_range(x, lo=1, states=states)
+        if self.uses_mpf:
+            x = recombine_fragments(x, list(self.compiled.mpf_pools), F.shape[0])
+        return x
+
+    def _os_step(self, states, vol, starts, parents, *, pattern):
+        """ONE jitted call per patch batch: miss FFTs + assembly + walk.
+
+        ``pattern`` is the batch's static miss/hit layout — slot i of the
+        (S·n_seg)-row spectra stack is ``(-1, j)`` (row j of the miss FFTs
+        computed here from ``starts``) or ``(p, j)`` (row j of
+        ``parents[p]``, a previous batch's miss-FFT output held by the
+        sweep cache).  Fusing the miss transforms into the walk's jit lets
+        XLA schedule them with the MAD instead of paying a host round-trip
+        per batch, and selecting cached rows at trace time means reuse
+        costs no host copies; the miss spectra are returned so the sweep
+        cache can serve them to the next x-row.
+        """
+        spec0 = self.compiled.layers[0].os_spec
+        Fm = None
+        if starts is not None:
+            Fm = os_mod.slice_segment_spectra(vol, starts, spec0, self.extent)
+        rows = [Fm[j] if p < 0 else parents[p][j] for p, j in pattern]
+        S = len(pattern) // spec0.n_segments
+        F_all = jnp.stack(rows).reshape(
+            (S, spec0.n_segments) + rows[0].shape
+        )
+        return self._os_walk(states, F_all), Fm
+
+    def _run_os_batch(self, meta) -> np.ndarray:
+        """Patch batch with layer-0 segment spectra served from the cache.
+
+        ``meta[i] = (sweep_token, segment_keys)`` for patch i; keys come
+        from ``tiler.segment_keys`` and pair 1:1 (same order) with the
+        prepared layer-0 ``os_spec.starts``.  The segment grid is
+        volume-global (segments read the padded volume directly, past the
+        patch's own extent if needed), so an interior patch transforms only
+        the ``core/seg_core`` segments the sweep newly entered — everything
+        else is a hit.  Single-sweep batches (the volume sweep, and serving
+        ticks that drained one request) run the fused ``_os_step``;
+        mixed-sweep batches fall back to one ``segment_spectra_at`` call
+        per sweep plus the spectra-stack walk.
+        """
+        spec0 = self.compiled.layers[0].os_spec
+        # pass 1: resolve every (patch, segment) against the sweep caches;
+        # group the misses per sweep for batched device slicing.
+        slots: List[List] = []  # per patch: (key, _SpectrumRef | _PendingMiss)
+        miss_keys: Dict[int, List[Tuple[int, int, int]]] = {}
+        for token, keys in meta:
+            cache = self._sweeps.setdefault(token, {})
+            # the patch stream is x-major with non-decreasing x (tiler
+            # invariant): segments strictly left of this patch are dead.
+            x_lo = keys[0][0]
+            for dead in [k for k in cache if k[0] < x_lo]:
+                del cache[dead]
+            per_seg = []
+            for key in keys:
+                F = cache.get(key)
+                if F is None:
+                    # the pending marker in the cache also dedups repeated
+                    # keys within this batch (bucketed tail repeats)
+                    misses = miss_keys.setdefault(token, [])
+                    F = _PendingMiss(len(misses))
+                    cache[key] = F
+                    misses.append(key)
+                    self._os_misses += 1
+                else:
+                    self._os_hits += 1
+                per_seg.append((key, F))
+            slots.append(per_seg)
+        tokens = {m[0] for m in meta}
+        if len(tokens) == 1:
+            # fused path: the whole batch — miss FFTs, assembly, walk — is
+            # one jit call specialized on the (small, recurring) pattern.
+            token = next(iter(tokens))
+            cache = self._sweeps[token]
+            misses = miss_keys.get(token, [])
+            pattern: List[Tuple[int, int]] = []
+            parents: List = []
+            parent_pos: Dict[int, int] = {}
+            for per_seg in slots:
+                for key, F in per_seg:
+                    if isinstance(F, _PendingMiss):
+                        pattern.append((-1, F.idx))
+                    else:
+                        pos = parent_pos.get(id(F.parent))
+                        if pos is None:
+                            pos = parent_pos[id(F.parent)] = len(parents)
+                            parents.append(F.parent)
+                        pattern.append((pos, F.idx))
+            starts = (
+                jnp.asarray(np.asarray(misses, np.int32)) if misses else None
+            )
+            out, F_m = self._jit_os_step(
+                self.compiled.states, self._sweep_vols[token],
+                starts, tuple(parents), pattern=tuple(pattern),
+            )
+            for i, key in enumerate(misses):
+                cache[key] = _SpectrumRef(F_m, i)
+            return np.asarray(out)
+
+        # fallback (cross-request serving batches): one batched FFT per
+        # sweep, then the spectra-stack walk.
+        F_miss: Dict[int, jnp.ndarray] = {}
+        for token, keys_m in miss_keys.items():
+            # pad the miss count to a power of two so the distinct compiled
+            # FFT batch sizes stay O(log(S·n_seg))
+            M = len(keys_m)
+            Mp = 1
+            while Mp < M:
+                Mp *= 2
+            starts = np.asarray(keys_m + [keys_m[-1]] * (Mp - M), np.int32)
+            F_miss[token] = os_mod.segment_spectra_at(
+                self._sweep_vols[token], jnp.asarray(starts), spec0, self.extent
+            )
+        # pass 2: materialize rows; ONE stack builds the batch.
+        flat = []
+        for (token, _), per_seg in zip(meta, slots):
+            cache = self._sweeps[token]
+            for key, F in per_seg:
+                if isinstance(F, _PendingMiss):
+                    cache[key] = F = _SpectrumRef(F_miss[token], F.idx)
+                flat.append(F.parent[F.idx])
+        F_all = jnp.stack(flat).reshape(
+            (len(slots), spec0.n_segments) + flat[0].shape
+        )  # (S, n_seg, f, ña, ñb, ñc)
+        return np.asarray(self._jit_os_walk(self.compiled.states, F_all))
 
     # -- compiled patch-batch kernels ---------------------------------------
 
@@ -144,13 +382,27 @@ class PlanExecutor:
             s *= 2
         return min(s, self.batch)
 
-    def run_patch_batch(self, xs: np.ndarray) -> np.ndarray:
+    def run_patch_batch(
+        self, xs: Optional[np.ndarray], *, meta=None
+    ) -> np.ndarray:
         """(S, f, extent³) patches -> (S, out_ch, core³) dense cores.
 
         The per-layer states (weights, cached kernel spectra) are jit
         *arguments*, so every batch-size specialization shares the same
         prepared buffers — kernel FFTs ran once, in ``compile_plan``.
+
+        ``meta`` (overlap-save reuse only): per-patch ``(sweep_token,
+        segment_keys)`` naming each patch's layer-0 segments by absolute
+        volume coordinates, so input spectra shared with an x-adjacent
+        patch are served from the sweep cache instead of recomputed; ``xs``
+        may then be None (the walk starts from spectra of the sweep's
+        device-resident volume, never from the raw patch).  Callers without
+        sweep context (tests, raw batches) omit ``meta`` and get the
+        self-contained walk.
         """
+        if self._os_reuse and meta is not None:
+            self._seen_batch_sizes.add(len(meta))
+            return self._run_os_batch(meta)
         S = xs.shape[0]
         self._seen_batch_sizes.add(S)
         states = self.compiled.states
@@ -176,11 +428,24 @@ class PlanExecutor:
         padded = pad_volume(vol, tiling)
         out = np.empty((self.out_channels,) + tiling.out_shape, np.float32)
 
+        self._os_misses = self._os_hits = 0
         t0 = time.perf_counter()
-        if self.theta >= 0:
-            n_batches, padded_patches = self._run_pipeline(padded, tiling, out)
-        else:
-            n_batches, padded_patches = self._run_batched(padded, tiling, out)
+        # the sweep's device upload is real per-volume work the other
+        # execution modes pay per batch (patch extraction + transfer), so
+        # it belongs inside the timed region for fair measured vox/s
+        sweep = (
+            self.begin_sweep(padded)
+            if self._os_reuse and self.theta < 0 else None
+        )
+        try:
+            if self.theta >= 0:
+                n_batches, padded_patches = self._run_pipeline(padded, tiling, out)
+            else:
+                n_batches, padded_patches = self._run_batched(
+                    padded, tiling, out, sweep
+                )
+        finally:
+            self.end_sweep(sweep)
         dt = time.perf_counter() - t0
 
         vox = float(np.prod(out.shape[1:]))
@@ -196,6 +461,10 @@ class PlanExecutor:
             "measured_voxps": vox / dt if dt > 0 else float("inf"),
             "predicted_voxps": self.plan.throughput if self.plan else float("nan"),
             "waste_fraction": tiling.waste_fraction,
+            # overlap-save input-spectra reuse (0/0 when not active):
+            # segment FFTs actually run vs. segments served from the cache
+            "os_seg_fft": self._os_misses,
+            "os_seg_hits": self._os_hits,
         }
         return out
 
@@ -212,19 +481,25 @@ class PlanExecutor:
             :, : sl[0].stop - x, : sl[1].stop - yy, : sl[2].stop - z
         ]
 
-    def _run_batched(self, padded, tiling, out):
+    def _run_batched(self, padded, tiling, out, sweep=None):
         S = self.batch
         specs = tiling.patches
         n_batches = 0
         for i in range(0, len(specs), S):
             chunk = specs[i : i + S]
-            xs = np.stack(
-                [extract_patch(padded, s, tiling.extent) for s in chunk]
-            )
             # a ragged tail runs through a smaller compiled batch (one extra
             # compile, cached per size) instead of computing-and-discarding
             # repeated padding patches.
-            ys = self.run_patch_batch(xs)
+            if sweep is not None:
+                # overlap-save: the walk starts from cached/computed segment
+                # spectra of the device-resident volume — no patch extraction
+                meta = [(sweep, tiling.segment_keys(s)) for s in chunk]
+                ys = self.run_patch_batch(None, meta=meta)
+            else:
+                xs = np.stack(
+                    [extract_patch(padded, s, tiling.extent) for s in chunk]
+                )
+                ys = self.run_patch_batch(xs)
             for spec, y in zip(chunk, ys):
                 self.write_core(out, tiling, spec, y)
             n_batches += 1

@@ -1,21 +1,26 @@
 """Volume → patch decomposition (overlap-save tiling, ZNNi §II).
 
-A plan fixes the per-patch geometry: each patch spans ``extent`` input
-voxels per axis and contributes a ``core³`` block of dense output voxels
-(core = m · P).  Adjacent patches overlap by FOV-1 input voxels — the
-paper's recomputed "border waste".  The tiler turns an arbitrary
-``(X, Y, Z)`` volume into the patch grid:
+Patch-geometry invariants (the contract every consumer relies on —
+executor, serving engine, and the overlap-save spectra cache):
 
-* interior patches start at multiples of ``core`` (input start == dense
-  output start for valid convolution);
-* an edge remainder is handled with a *shifted* patch flush against the
-  volume end — its core overlaps the previous patch's core, and since both
-  compute the same sliding-window function of the same input window, the
-  overwrite is value-identical (up to FFT round-off);
-* an axis shorter than one patch extent is zero-padded at its far end.
-  Valid-convolution output at dense coordinate v depends only on input
-  [v, v+FOV), so outputs cropped to the true ``X - FOV + 1`` range never
-  see the padding — pad-and-crop is exact, not approximate.
+* **core** — each patch contributes a ``core³`` block of dense output
+  voxels (core = m · P), and interior patches start at multiples of
+  ``core``; input start == dense-output start for valid convolution.
+* **FOV overlap** — a patch spans ``extent = core + FOV - 1`` input voxels
+  per axis, so adjacent patches share FOV-1 input voxels (the paper's
+  recomputed "border waste"; the overlap-save mode below turns the shared
+  region into reusable spectra instead).
+* **shifted edge patches** — an edge remainder is handled with a patch
+  shifted flush against the volume end; its core overlaps the previous
+  patch's core, and since both compute the same sliding-window function of
+  the same input window, the overwrite is value-identical (up to FFT
+  round-off).  Per-axis starts are sorted ascending, and patches enumerate
+  with axis 0 outermost — consumers may assume the x-coordinate of the
+  patch stream is non-decreasing (the overlap-save cache evicts on it).
+* **zero padding** — an axis shorter than one patch extent is zero-padded
+  at its far end.  Valid-convolution output at dense coordinate v depends
+  only on input [v, v+FOV), so outputs cropped to the true ``X - FOV + 1``
+  range never see the padding — pad-and-crop is exact, not approximate.
 
 MPF divisibility is the *plan's* obligation (n_in = valid_input_size(m)
 satisfies (n+1) % p == 0 at every pool by construction); the tiler only
@@ -23,6 +28,14 @@ checks it, and otherwise works purely in dense-output coordinates, which
 makes the same grid serve MPF plans (extent = n_in) and plain-pool
 baseline plans (extent = n_in + P - 1, swept at P³ offsets by the
 executor).
+
+Overlap-save mode: ``tile_volume(..., halo=HaloSpec(...))`` additionally
+describes the layer-0 overlap-save segment grid each patch carries — the
+patch *core* plus the halo segmentation shared with its x-neighbours.
+``VolumeTiling.segment_keys`` names each segment by its absolute input
+coordinates; x-adjacent patches produce identical keys for the segments
+they share, which is what lets the executor reuse their input spectra
+(ZNNi's border waste paid once instead of per patch).
 """
 
 from __future__ import annotations
@@ -30,7 +43,7 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,6 +58,23 @@ class PatchSpec:
 
 
 @dataclass(frozen=True)
+class HaloSpec:
+    """Layer-0 overlap-save segmentation a patch shares with x-neighbours.
+
+    ``rel_starts`` are segment starts along axis 0 relative to the patch
+    start (mirroring ``core.overlap_save.OverlapSaveSpec.starts``); each
+    segment spans ``seg_extent`` input voxels and the full patch extent on
+    the y/z axes.  When ``seg_core`` divides the tiling ``core``, the
+    aligned segments of x-adjacent patches land on identical absolute
+    coordinates — the shared halo the executor's spectra cache exploits.
+    """
+
+    seg_core: int
+    seg_extent: int
+    rel_starts: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
 class VolumeTiling:
     """The full patch grid plus the geometry needed to reassemble output."""
 
@@ -55,10 +85,25 @@ class VolumeTiling:
     core: int  # dense output voxels per patch per axis
     fov: int
     patches: Tuple[PatchSpec, ...]
+    halo: Optional[HaloSpec] = None  # overlap-save mode (None: plain tiling)
 
     @property
     def n_patches(self) -> int:
         return len(self.patches)
+
+    def segment_keys(self, spec: PatchSpec) -> Tuple[Tuple[int, int, int], ...]:
+        """Absolute identities of a patch's layer-0 overlap-save segments.
+
+        Key = (absolute x start of the segment, patch y start, patch z
+        start): a segment is the input window
+        ``[x, x+seg_extent) × [y, y+extent) × [z, z+extent)``, so equal keys
+        mean equal input windows — and therefore equal spectra — across
+        patches of the same (padded) volume.
+        """
+        if self.halo is None:
+            raise ValueError("tiling was not built in overlap-save mode")
+        x0, y0, z0 = spec.start
+        return tuple((x0 + r, y0, z0) for r in self.halo.rel_starts)
 
     @property
     def waste_fraction(self) -> float:
@@ -79,9 +124,15 @@ def _axis_starts(size: int, core: int, fov: int, extent: int) -> List[int]:
 
 
 def tile_volume(
-    vol_shape: Sequence[int], *, core: int, fov: int
+    vol_shape: Sequence[int], *, core: int, fov: int,
+    halo: Optional[HaloSpec] = None,
 ) -> VolumeTiling:
-    """Tile an (X, Y, Z) volume for patches of dense-core ``core`` per axis."""
+    """Tile an (X, Y, Z) volume for patches of dense-core ``core`` per axis.
+
+    ``halo`` switches on overlap-save mode: the tiling then also hands the
+    executor each patch's core plus the layer-0 segment grid shared with
+    its x-neighbours (see ``VolumeTiling.segment_keys``).
+    """
     if len(vol_shape) != 3:
         raise ValueError(f"expected (X, Y, Z) spatial shape, got {vol_shape}")
     if core < 1 or fov < 1:
@@ -106,6 +157,7 @@ def tile_volume(
         core=core,
         fov=fov,
         patches=patches,
+        halo=halo,
     )
 
 

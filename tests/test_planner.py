@@ -31,12 +31,14 @@ def test_mpf_beats_naive_baseline(plans):
 
 
 def test_fft_wins_for_large_kernels(plans):
-    """Table IV structure: interior k>=5 layers (f=f'=80) pick FFT; the
+    """Table IV structure: interior k>=5 layers (f=f'=80) pick an
+    FFT-family primitive (fft_* or the segmented overlap_save variant); the
     first (f=1) and last (f'=3) layers may legitimately pick direct — the
     same per-layer variation the paper's Table IV shows."""
+    FFT_FAMILY = ("fft_data", "fft_task", "fft_cached", "overlap_save")
     for name in ("n537", "n726", "n926"):
         convs = [c for c in plans[name]["single"].choices if c.kind == "conv"]
-        assert all(c.prim.startswith("fft") for c in convs[1:-1]), name
+        assert all(c.prim in FFT_FAMILY for c in convs[1:-1]), name
         # and the FFT plan strictly beats a direct-only plan
         assert plans[name]["single"].throughput > plans[name]["direct_only"].throughput
 

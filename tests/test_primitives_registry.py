@@ -148,6 +148,50 @@ def test_padded_batch_size_bounds_serving_compiles():
     assert ex.padded_batch_size(5) == 5
 
 
+# -- bias broadcasting: one rule for every registered conv primitive --------
+
+
+@pytest.mark.parametrize("name", primitives.registered_conv_names())
+def test_conv_apply_bias_matches_dense_oracle_on_ragged_patch(name, rng):
+    """ISSUE 3 satellite: the one-shot path and the registry apply agree on
+    bias broadcasting for EVERY registered conv primitive, pinned to the
+    dense oracle on a ragged patch — anisotropic spatial extent and f'=5
+    channels, multiples of neither the Pallas FP_BLOCK nor the x-tile."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    x = jnp.asarray(rng.normal(size=(2, 3, 9, 8, 7)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(5, 3, 3, 3, 3)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    want = lax.conv_general_dilated(
+        x, w, (1, 1, 1), "VALID",
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    ) + b.reshape(1, 5, 1, 1, 1)
+    got = primitives.conv_apply(name, x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+    # one-shot path == registry setup+apply (the same prepared state walk)
+    prim = primitives.conv_primitive(name)
+    pl = prim.setup(w, b, (9, 8, 7))
+    got2 = prim.apply(pl, x, pl.state)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(got), atol=0)
+
+
+@pytest.mark.parametrize("name", primitives.registered_conv_names())
+def test_conv_apply_bias_contract_is_uniform(name, rng):
+    """Scalar bias broadcasts, wrong-length bias raises — identically for
+    every primitive (the pre-fix state let each apply re-derive f' from a
+    different tensor, so mismatches failed differently per primitive)."""
+    import jax.numpy as jnp
+
+    x = jnp.asarray(rng.normal(size=(1, 2, 7, 7, 7)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 2, 3, 3, 3)).astype(np.float32))
+    none = np.asarray(primitives.conv_apply(name, x, w, None))
+    scalar = np.asarray(primitives.conv_apply(name, x, w, jnp.float32(0.5)))
+    np.testing.assert_allclose(scalar, none + 0.5, atol=1e-5)
+    with pytest.raises(ValueError):
+        primitives.conv_apply(name, x, w, jnp.zeros((4,), jnp.float32))
+
+
 # -- one-shot registry apply (sublayer / halo paths) ------------------------
 
 
