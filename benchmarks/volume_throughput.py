@@ -10,17 +10,24 @@ hardware model (TPU v5e by default); on the CPU container the absolute
 numbers differ but the MPF-vs-naive ordering and the waste fractions are
 the reproducible part.  The ``fft_cached`` row exercises the CompiledPlan
 path: kernel spectra are transformed once at plan-compile time and reused
-across every patch (ISSUE 2 acceptance — compare against an ``fft_task``
-sweep of the same geometry to see the per-patch kernel FFTs disappear).
-The ``overlap_save`` row additionally reuses *input* segment spectra
-across x-adjacent patches (ISSUE 3): its line reports how many input
-segment FFTs actually ran vs. how many a reuse-free sweep would run
-(``fft_cached`` transforms every patch's full input every time).
+across every patch (ISSUE 2).  The ``overlap_save`` row additionally
+reuses *input* segment spectra across x-adjacent patches (ISSUE 3), and
+the ``overlap_save+deep`` row extends the reuse below layer 0 (ISSUE 4):
+interior patches run the strip path — tail-segment MAD at layer 0,
+activation-halo assembly deeper — and the row prints the planner's
+predicted sweep counters next to the measured ones (they must agree
+exactly; ``tests/test_sweep_accounting.py`` pins it).
 
 Run:  PYTHONPATH=src python benchmarks/volume_throughput.py [--m 2]
+      [--quick] [--json out.json]
+
+``--json`` writes per-row vox/s + predicted vox/s + reuse counters so the
+perf trajectory can be tracked across PRs (CI uploads it as an artifact);
+``--quick`` shrinks the geometry and repetitions for a CI-sized run.
 """
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -38,6 +45,11 @@ NET = ConvNetConfig(
     (L("conv", 3, 8), L("pool", 2), L("conv", 3, 8), L("pool", 2), L("conv", 3, 3)),
 )
 
+REUSE_KEYS = (
+    "os_seg_fft", "os_seg_hits", "os_mad_segments",
+    "deep_strip_patches", "deep_full_patches", "retraces",
+)
+
 
 def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
     """Run all plans in interleaved rounds; report each plan's best sweep.
@@ -49,8 +61,8 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
     needs on CPU.
     """
     exs, best = {}, {}
-    for name, plan in plans.items():
-        ex = PlanExecutor(params, NET, plan)
+    for name, (plan, deep) in plans.items():
+        ex = PlanExecutor(params, NET, plan, deep_reuse=deep)
         out = ex.run(vol)  # warmup: compiles + first sweep
         assert out.shape[0] == 3
         exs[name] = ex
@@ -59,28 +71,66 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
             ex.run(vol)
             if name not in best or ex.last_stats["seconds"] < best[name]["seconds"]:
                 best[name] = ex.last_stats
-    measured = {}
+    rows = {}
     for name, s in best.items():
-        plan = plans[name]
+        plan, _deep = plans[name]
         extra = ""
         if s["os_seg_fft"]:
             total = s["os_seg_fft"] + s["os_seg_hits"]
             extra = f"  input-FFTs={s['os_seg_fft']:.0f}/{total:.0f} segs"
+            if s["deep_strip_patches"]:
+                extra += (
+                    f"  MAD-segs={s['os_mad_segments']:.0f}"
+                    f"  strip={s['deep_strip_patches']:.0f}/{s['patches']:.0f}"
+                )
+            if plan.sweep is not None:
+                c = plan.sweep
+                ok = (
+                    c.seg_fft == s["os_seg_fft"]
+                    and c.mad_segments == s["os_mad_segments"]
+                    and c.strip_patches == s["deep_strip_patches"]
+                )
+                extra += f"  planner-predicted={'match' if ok else 'MISMATCH'}"
         print(
-            f"{name:<16s} n_in={plan.n_in:>3d} S={plan.batch} "
+            f"{name:<18s} n_in={plan.n_in:>3d} S={plan.batch} "
             f"patches={s['patches']:>3.0f} waste={s['waste_fraction']:.2f}  "
             f"measured={s['measured_voxps']:>12,.0f} vox/s  "
             f"predicted={s['predicted_voxps']:>14,.0f} vox/s{extra}"
         )
-        measured[name] = s["measured_voxps"]
-    return measured
+        row = {
+            "n_in": plan.n_in,
+            "batch": plan.batch,
+            "measured_voxps": s["measured_voxps"],
+            "predicted_voxps": s["predicted_voxps"],
+            "waste_fraction": s["waste_fraction"],
+            "patches": s["patches"],
+            "seconds": s["seconds"],
+        }
+        row.update({k: s[k] for k in REUSE_KEYS})
+        if plan.sweep is not None:
+            row["planner_sweep"] = {
+                "seg_fft": plan.sweep.seg_fft,
+                "seg_hits": plan.sweep.seg_hits,
+                "mad_segments": plan.sweep.mad_segments,
+                "strip_patches": plan.sweep.strip_patches,
+                "full_patches": plan.sweep.full_patches,
+            }
+        rows[name] = row
+    return rows
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=2)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write machine-readable per-row results here")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: m=1, batch=1, small volume, 1 rep")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.m, args.batch, args.reps = 1, 1, 1
 
     params = convnet.init_params(jax.random.PRNGKey(0), NET)
     probe = planner.plan_single(NET, TPU_V5E, max_m=args.m, batches=(args.batch,))
@@ -94,55 +144,82 @@ def main(argv=None) -> None:
     # > 1 patch per axis, non-aligned remainder on x; x is long enough (4
     # cores + remainder) that the sweep has interior x-rows — the regime a
     # real volume sweep lives in and the one overlap-save reuse targets
-    shape = (4 * core + 3 + fov - 1, 2 * core + fov - 1, 2 * core + fov - 1)
+    xc = 3 if args.quick else 4
+    shape = (xc * core + 3 + fov - 1, 2 * core + fov - 1, 2 * core + fov - 1)
     vol = rng.normal(size=(NET.in_channels,) + shape).astype(np.float32)
     print(f"volume {shape} -> dense {tuple(s - fov + 1 for s in shape)}  "
           f"(patch extent {probe.patch_extent}^3, core {core}^3)")
 
-    # the overlap_save row is the configuration the volume runtime deploys:
-    # overlap_save at the input layer (the one layer whose input windows
-    # have a cross-patch identity for the sweep cache to exploit),
-    # fft_cached deeper — a per-layer mix plan_fixed prices directly.
+    # the overlap_save rows are the configuration the volume runtime
+    # deploys: overlap_save at the input layer (the one layer whose input
+    # windows have a cross-patch identity for the sweep cache to exploit),
+    # fft_cached deeper — a per-layer mix plan_fixed prices directly, in
+    # the sweep's PlanGeometry so predicted counters are exact.
     first_conv = next(i for i, l in enumerate(NET.layers) if l.kind == "conv")
     os_prims = [
         "overlap_save" if i == first_conv
         else ("fft_cached" if l.kind == "conv" else "mpf")
         for i, l in enumerate(NET.layers)
     ]
+    # (plan, deep_reuse) per row: the plain overlap_save row is the PR-3
+    # baseline (input-spectra reuse only) for the paired A/B measurement
     plans = {
-        "single(mpf)": probe,
-        "fft_cached": planner.plan_single(
+        "single(mpf)": (probe, True),
+        "fft_cached": (planner.plan_single(
             NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
             conv_prims=("fft_cached",), strategy_name="fft_cached",
-        ),
-        "overlap_save": planner.plan_fixed(
+        ), True),
+        "overlap_save": (planner.plan_fixed(
             NET, TPU_V5E, os_prims, m=args.m, batch=args.batch,
-            strategy_name="overlap_save",
-        ),
-        "baseline_naive": planner.plan_single(
+            strategy_name="overlap_save", volume_shape=shape,
+            deep_reuse=False,
+        ), False),
+        "overlap_save+deep": (planner.plan_fixed(
+            NET, TPU_V5E, os_prims, m=args.m, batch=args.batch,
+            strategy_name="overlap_save_deep", volume_shape=shape,
+        ), True),
+        "baseline_naive": (planner.plan_single(
             NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
             use_mpf=False, strategy_name="baseline_naive",
-        ),
-        "direct_only": planner.plan_single(
+        ), True),
+        "direct_only": (planner.plan_single(
             NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
             conv_prims=("direct",), strategy_name="direct_only",
-        ),
-        "pipeline2": planner.plan_pipeline2(
+        ), True),
+        "pipeline2": (planner.plan_pipeline2(
             NET, TPU_V5E, chips_per_stage=1, max_m=args.m,
             batches=(args.batch,),
-        ),
+        ), True),
     }
     feasible = {}
-    for name, plan in plans.items():
+    for name, (plan, deep) in plans.items():
         if plan is None:
-            print(f"{name:<16s} infeasible under budget")
+            print(f"{name:<18s} infeasible under budget")
         else:
-            feasible[name] = plan
-    measured = bench_plans(feasible, params, vol)
-    if {"overlap_save", "fft_cached"} <= measured.keys():
-        r = measured["overlap_save"] / measured["fft_cached"]
+            feasible[name] = (plan, deep)
+    rows = bench_plans(feasible, params, vol, reps=args.reps)
+    if {"overlap_save", "fft_cached"} <= rows.keys():
+        r = rows["overlap_save"]["measured_voxps"] / rows["fft_cached"]["measured_voxps"]
         print(f"overlap_save / fft_cached: {r:.2f}x "
               "(cross-patch input-spectra reuse at the input layer)")
+    if {"overlap_save+deep", "overlap_save"} <= rows.keys():
+        r = (rows["overlap_save+deep"]["measured_voxps"]
+             / rows["overlap_save"]["measured_voxps"])
+        print(f"overlap_save+deep / overlap_save: {r:.2f}x "
+              "(deeper-layer activation reuse across patches)")
+    if args.json:
+        payload = {
+            "net": NET.name,
+            "volume_shape": list(shape),
+            "m": args.m,
+            "batch": args.batch,
+            "reps": args.reps,
+            "quick": args.quick,
+            "rows": rows,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -11,18 +11,156 @@ constant factor while all *ratios* (the paper's actual claims) match.
 Table II's memory maxima are reproduced per-primitive as the max live bytes
 of each execution stage of OUR implementations (which stage the same way:
 input spectra → MAD per output-channel chunk → inverse).
+
+Every cost function takes an optional ``PlanGeometry`` context — the
+execution geometry (patch core, sweep patch count, interior/edge mix,
+layer-0 segment grid, deep activation reuse) the executor will actually
+run.  ``PlanGeometry.local()`` (the default) prices the primitive
+self-contained; the planner passes sweep geometries so plans are priced
+against sweep-level amortization, ZNNi's actual throughput argument.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 from .hw import HardwareSpec
 from .pruned_fft import fft_optimal_shape, pruned_fft_flops
 
 F32 = 4
 C64 = 8
+
+
+# ---------------------------------------------------------------------------
+# PlanGeometry: the execution-geometry context a cost is evaluated in
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlanGeometry:
+    """Execution geometry a sweep-aware cost function may price against.
+
+    ZNNi's lesson is that throughput is decided by amortization across the
+    whole sweep, not per-patch FLOPs — so a primitive's cost depends on
+    *how the executor will run it*: the patch core the layer-0 segment
+    grid is pinned to, how many patches the sweep has, what fraction of
+    them are interior (and therefore served by the cross-patch caches),
+    and whether deep activation reuse shrinks deeper layers to strips.
+
+    ``PlanGeometry.local()`` is the no-context default: standalone costing
+    (one-shot ``conv_apply``, Table I/II benchmarks) prices the primitive
+    self-contained, with every transform paid per call.  The planner
+    builds sweep geometries via ``planner.sweep_geometry`` (which
+    simulates the executor's caches over a concrete tiling, so predicted
+    sweep counters match measured ones exactly).
+
+    What a cost function may assume (the contract, see
+    docs/architecture.md):
+
+    * ``core``/``fov`` describe the patch grid; ``core == 0`` means "no
+      sweep context" (``is_sweep`` is False) and every sweep field must be
+      ignored.
+    * ``seg_core`` (layer 0 only): the executor pins the layer-0
+      overlap-save segment grid to this stride — a cost function must
+      price THAT grid, not its local default.
+    * ``interior_frac`` of the sweep's patches are interior (strip-path)
+      patches; per-patch costs are sweep averages over interior and edge
+      patches.
+    * ``seg_fft_per_patch`` (>= 0 when provided) is the exact
+      sweep-average input-segment-FFT count per patch from the cache
+      simulation; a cost function must prefer it over re-deriving.
+    * ``layer``/``new_x`` are per-layer: ``new_x`` is the newly computed
+      x-columns at this layer for an interior patch (0: no strip at this
+      layer); deeper layers under ``deep_reuse`` price interior patches
+      at extent ``new_x + k - 1`` instead of the full patch extent.
+    """
+
+    core: int = 0
+    fov: int = 0
+    batch: int = 1
+    n_patches: int = 1
+    interior_frac: float = 0.0
+    seg_core: int = 0
+    deep_reuse: bool = False
+    layer: int = -1
+    new_x: int = 0
+    seg_fft_per_patch: float = -1.0
+
+    @classmethod
+    def local(cls) -> "PlanGeometry":
+        """The no-context default: price the primitive self-contained."""
+        return _LOCAL_GEOMETRY
+
+    @property
+    def is_sweep(self) -> bool:
+        return self.core > 0
+
+    def at_layer(self, index: int, *, new_x: int = 0) -> "PlanGeometry":
+        """Per-layer view: tag the layer index and its strip width."""
+        return dataclasses.replace(self, layer=index, new_x=new_x)
+
+
+_LOCAL_GEOMETRY = PlanGeometry()
+
+
+def _strip_blend(full: "LayerCost", strip: "LayerCost", frac: float) -> "LayerCost":
+    """Sweep-average of interior (strip) and edge (full) patch costs.
+
+    flops/hbm/coll average linearly over the patch mix; peak must fit the
+    WORST patch, so it takes the max.
+    """
+    if frac <= 0.0:
+        return full
+    w = 1.0 - frac
+    return LayerCost(
+        w * full.flops + frac * strip.flops,
+        w * full.hbm_bytes + frac * strip.hbm_bytes,
+        max(full.peak_bytes, strip.peak_bytes),
+        w * full.coll_bytes + frac * strip.coll_bytes,
+    )
+
+
+def _deep_strip_cost(base_fn, S, f, fp, n, k, geom: Optional[PlanGeometry]):
+    """Shared deep-reuse wrapper: blend full-extent and interior-strip cost.
+
+    Under ``deep_reuse`` an interior patch runs this layer on an x-strip
+    of ``new_x + k - 1`` input columns (new columns + cached halo) instead
+    of the full patch extent; edge patches still pay the full extent.
+    """
+    full = base_fn(S, f, fp, n, k)
+    if (
+        geom is None
+        or not (geom.is_sweep and geom.deep_reuse)
+        or geom.layer <= 0
+        or geom.new_x <= 0
+        or geom.interior_frac <= 0.0
+    ):
+        return full
+    sx = geom.new_x + k - 1
+    if sx >= n[0]:
+        return full
+    strip = base_fn(S, f, fp, (sx, n[1], n[2]), k)
+    return _strip_blend(full, strip, geom.interior_frac)
+
+
+def _deep_strip_pool_cost(base_fn, S, f, n, p, geom: Optional[PlanGeometry]):
+    """Pool-layer analogue of ``_deep_strip_cost`` (halo is p - 1)."""
+    full = base_fn(S, f, n, p)
+    if (
+        geom is None
+        or not (geom.is_sweep and geom.deep_reuse)
+        or geom.layer <= 0
+        or geom.new_x <= 0
+        or geom.interior_frac <= 0.0
+    ):
+        return full
+    sx = geom.new_x + p - 1
+    if sx >= n[0]:
+        return full
+    strip = base_fn(S, f, (sx, n[1], n[2]), p)
+    return _strip_blend(full, strip, geom.interior_frac)
 
 
 def _vol(n: Sequence[int]) -> int:
@@ -57,7 +195,7 @@ class LayerCost:
 # ---------------------------------------------------------------------------
 
 
-def conv_direct_cost(S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> LayerCost:
+def _conv_direct_base(S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> LayerCost:
     npr = tuple(x - k + 1 for x in n)
     flops = 2.0 * S * fp * f * _vol(npr) * k**3  # Table I: S f' f n'³ k³ MACs
     w_bytes = fp * f * k**3 * F32
@@ -66,6 +204,13 @@ def conv_direct_cost(S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> Lay
     hbm = io + w_bytes
     peak = io + w_bytes
     return LayerCost(flops, hbm, peak)
+
+
+def conv_direct_cost(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
+    geom: Optional[PlanGeometry] = None,
+) -> LayerCost:
+    return _deep_strip_cost(_conv_direct_base, S, f, fp, n, k, geom)
 
 
 def _fft_common(
@@ -84,10 +229,17 @@ def _fft_common(
 
 
 def conv_fft_data_parallel_cost(
-    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
+    geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
     """Table II "FFT algorithm 1" (data parallel, Alg. 2): one kernel-spectrum
     buffer and one output-channel spectrum column live at a time."""
+    return _deep_strip_cost(_conv_fft_data_base, S, f, fp, n, k, geom)
+
+
+def _conv_fft_data_base(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
     fft_shape, nt, vol_n, vol_np, img_fft, ker_fft, mad = _fft_common(S, f, fp, n, k)
     flops = img_fft + ker_fft + mad
     stage_in = S * f * (vol_n * F32 + nt * C64)
@@ -112,13 +264,20 @@ TASK_T = 8
 
 
 def conv_fft_task_parallel_cost(
-    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
+    geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
     """Table II "FFT algorithm 2" (task parallel): ALL input and output
     spectra live at once — max{S f (n+ñ), S (f+f') ñ + T ñ, S f' (n'+ñ)} —
     kernel spectra only T at a time.  Every spectrum is touched once: the
     fused MAD reads X once while streaming kernel chunks (the paper's
     "higher cache locality"; on TPU: one pass over HBM)."""
+    return _deep_strip_cost(_conv_fft_task_base, S, f, fp, n, k, geom)
+
+
+def _conv_fft_task_base(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
     fft_shape, nt, vol_n, vol_np, img_fft, ker_fft, mad = _fft_common(S, f, fp, n, k)
     flops = img_fft + ker_fft + mad
     peak = max(
@@ -138,7 +297,8 @@ def conv_fft_task_parallel_cost(
 
 
 def conv_fft_cached_kernels_cost(
-    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
+    geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
     """Task-parallel with kernel spectra precomputed once per *plan*, not
     per patch (beyond-paper: cross-patch kernel-spectrum reuse; executed by
@@ -146,7 +306,13 @@ def conv_fft_cached_kernels_cost(
     FFT flops and the raw kernel-weights HBM read (spectra are resident,
     the f'·f·k³ weights are never re-read at run time); spectra storage is
     still charged to peak."""
-    c = conv_fft_task_parallel_cost(S, f, fp, n, k)
+    return _deep_strip_cost(_conv_fft_cached_base, S, f, fp, n, k, geom)
+
+
+def _conv_fft_cached_base(
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+) -> LayerCost:
+    c = _conv_fft_task_base(S, f, fp, n, k)
     fft_shape = fft_optimal_shape(n)
     ker_fft = fp * f * pruned_fft_flops((k, k, k), fft_shape)
     w_bytes = fp * f * k**3 * F32
@@ -154,64 +320,95 @@ def conv_fft_cached_kernels_cost(
 
 
 def conv_overlap_save_cost(
-    S: int, f: int, fp: int, n: Tuple[int, ...], k: int
+    S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
+    geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
     """Overlap-save: segmented small FFTs + cross-patch input-spectra reuse.
 
     The input is segmented along axis 0 into windows of ``seg_core + k - 1``
     voxels stepping by ``seg_core`` (``core.overlap_save``); kernel spectra
-    are cached at setup like ``fft_cached``.  Two departures from the
-    task-parallel model:
+    are cached at setup like ``fft_cached``.  The cost is evaluated in the
+    ``PlanGeometry`` context the executor will actually run:
 
-    * input-FFT work is priced at *core voxels only* — n'/seg_core
-      (fractional) segment transforms instead of the ceil'd segment count,
-      because segments shared with the adjacent patch come from the
-      executor's sweep cache rather than being recomputed;
-    * peak memory holds ONE segment's input/output spectra (plus the
-      resident kernel-spectra grid and the dense in/out tensors) — the
-      paper's Table-II overhead shrinks by ~seg_extent/n, which is what
-      lets larger patches fit the budget (ZNNi's condition for FFT
-      dominance).
+    * under a sweep geometry AT THE INPUT LAYER (``geom.layer <= 0`` — the
+      only layer whose input windows have a cross-patch identity for the
+      executor's cache; a deeper overlap_save layer is priced
+      self-contained regardless of sweep context), the segment grid is the
+      executor's core-pinned grid (``geom.seg_core``, i.e.
+      ``compile_plan(overlap_seg=core)``), and input-FFT work is the exact
+      sweep-average segment-transform count per patch
+      (``geom.seg_fft_per_patch``, from the planner's cache simulation;
+      falling back to the interior/edge mix ``interior_frac * new +
+      (1 - interior_frac) * n_seg``) — interior patches pay only the
+      ``new_segments`` their left neighbour doesn't already own
+      (``core/seg_core`` on an aligned grid);
+    * under ``deep_reuse`` the MAD + inverse terms also shrink for
+      interior patches to the ``tail_segments`` covering the patch's new
+      core columns — the leading columns are assembled from the deep
+      activation cache, not recomputed;
+    * with no geometry (``PlanGeometry.local()``), every segment is
+      transformed and MAD'd per call — the honest price of the
+      self-contained apply (one-shot ``conv_apply``, deeper layers without
+      sweep amortization);
+    * peak memory holds the per-segment spectra (the reuse currency) plus
+      the dense in/out tensors — the paper's Table-II overhead shrinks by
+      ~seg_extent/n versus whole-patch FFT, which is what lets larger
+      patches fit the budget (ZNNi's condition for FFT dominance).
 
-    The MAD and inverse-FFT terms keep the full (ceil'd, overlapped)
-    segment count — that recompute is genuinely paid per patch.
-
-    Known approximations (ROADMAP open item: thread plan geometry into
-    primitive costs):
-
-    * this prices the primitive's *default* local grid
-      (``overlap_save.cost_spec``); the volume executor pins the LAYER-0
-      grid to the patch core instead (``compile_plan(overlap_seg=core)``),
-      which the ``cost(S, f, fp, n, k)`` signature cannot see;
-    * the amortized input-FFT term assumes the executor's sweep cache is
-      actually reusing spectra — true for a first-layer assignment under a
-      volume sweep, optimistic for deeper layers and one-shot
-      ``conv_apply`` calls, which recompute every (ceil'd, overlapped)
-      segment per call;
-    * the one-live-output-column peak term relies on XLA freeing each
-      segment's output spectra after its inverse (in-order per-segment
-      chain in ``os_apply_from_spectra``); a scheduler that overlapped
-      segments could hold up to n_seg columns.
+    Known approximation: the one-live-output-column peak term relies on
+    XLA freeing each segment's output spectra after its inverse (in-order
+    per-segment chain in ``os_apply_from_spectra``); a scheduler that
+    overlapped segments could hold up to n_seg columns.
     """
-    from .overlap_save import cost_spec  # lazy: overlap_save imports pruned_fft
+    from .overlap_save import (  # lazy: overlap_save imports pruned_fft
+        new_segments,
+        plan_overlap_save,
+        tail_segments,
+    )
 
-    spec = cost_spec(n, k)
+    g = geom if geom is not None else PlanGeometry.local()
+    # the sweep's segment cache exists ONLY at the net's input layer (the
+    # one layer whose input windows have a cross-patch identity); a deeper
+    # overlap_save layer runs self-contained on its default grid, whatever
+    # the sweep context.  A geometry with no layer tag (-1) is taken to be
+    # pricing the input layer.
+    at_input = g.is_sweep and g.layer <= 0
+    n3 = tuple(int(x) for x in n)
+    seg_core = g.seg_core if (at_input and g.seg_core > 0) else None
+    spec = plan_overlap_save(n3, (int(k),) * 3, seg_core)
     nt = _nt(spec.fft_shape)
     n_seg = spec.n_segments
     npr = tuple(x - k + 1 for x in n)
     vol_n, vol_np = _vol(n), _vol(npr)
     seg_in = (spec.seg_extent, n[1], n[2])
     seg_out = (spec.seg_core, npr[1], npr[2])
-    amort_segs = npr[0] / spec.seg_core  # each core voxel transformed once
-    img_fft = S * f * amort_segs * pruned_fft_flops(seg_in, spec.fft_shape)
-    inv_fft = S * fp * n_seg * pruned_fft_flops(seg_out, spec.fft_shape)
-    mad = 8.0 * S * fp * f * nt * n_seg
+    # input-segment transforms per patch (sweep-average)
+    if at_input:
+        if g.seg_fft_per_patch >= 0:
+            in_segs = g.seg_fft_per_patch
+        else:
+            in_segs = (
+                g.interior_frac * new_segments(spec, g.core)
+                + (1.0 - g.interior_frac) * n_seg
+            )
+    else:
+        in_segs = float(n_seg)
+    # MAD + inverse segments per patch: interior patches under deep reuse
+    # pay only the trailing segments covering their new core columns
+    if at_input and g.deep_reuse:
+        q = tail_segments(spec, g.core)
+        mad_segs = g.interior_frac * q + (1.0 - g.interior_frac) * n_seg
+    else:
+        mad_segs = float(n_seg)
+    img_fft = S * f * in_segs * pruned_fft_flops(seg_in, spec.fft_shape)
+    inv_fft = S * fp * mad_segs * pruned_fft_flops(seg_out, spec.fft_shape)
+    mad = 8.0 * S * fp * f * nt * mad_segs
     flops = img_fft + inv_fft + mad  # kernel FFT amortized at setup
     hbm = (
         S * f * vol_n * F32  # input streamed once
-        + S * f * nt * C64 * (amort_segs + n_seg)  # write amortized, read per MAD
+        + S * f * nt * C64 * (in_segs + mad_segs)  # write amortized, read per MAD
         + fp * f * nt * C64  # resident kernel spectra re-read
-        + 2 * S * fp * nt * C64 * n_seg  # output spectra write + inverse read
+        + 2 * S * fp * nt * C64 * mad_segs  # output spectra write + inverse read
         + S * fp * vol_np * F32
     )
     # Stage maxima matching the implementation's staging: ALL input
@@ -238,19 +435,33 @@ def conv_overlap_save_cost(
 # ---------------------------------------------------------------------------
 
 
-def pool_cost(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
+def _pool_base(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
     vol = _vol(n)
     flops = 1.0 * S * f * vol  # Table I: S f n³ comparisons
     hbm = 2 * S * f * vol * F32
     return LayerCost(flops, hbm, hbm)
 
 
-def mpf_cost(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
+def pool_cost(
+    S: int, f: int, n: Tuple[int, ...], p: int,
+    geom: Optional[PlanGeometry] = None,
+) -> LayerCost:
+    return _deep_strip_pool_cost(_pool_base, S, f, n, p, geom)
+
+
+def _mpf_base(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
     vol = _vol(n)
     flops = 1.0 * S * f * vol * p**3  # Table I: S f n³ p³
     m3 = _vol(tuple(x // p for x in n)) * p**3
     hbm = (S * f * vol + S * f * m3) * F32
     return LayerCost(flops, hbm, hbm)
+
+
+def mpf_cost(
+    S: int, f: int, n: Tuple[int, ...], p: int,
+    geom: Optional[PlanGeometry] = None,
+) -> LayerCost:
+    return _deep_strip_pool_cost(_mpf_base, S, f, n, p, geom)
 
 
 # ---------------------------------------------------------------------------
@@ -265,15 +476,25 @@ CONV_PRIMS = ("direct", "fft_data", "fft_task", "fft_cached", "overlap_save")
 POOL_PRIMS = ("mpf", "pool")
 
 
-def conv_cost(prim: str, S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> LayerCost:
-    """Cost of a conv primitive by name, via the runtime registry."""
+def conv_cost(
+    prim: str, S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
+    geom: Optional[PlanGeometry] = None,
+) -> LayerCost:
+    """Cost of a conv primitive by name, via the runtime registry.
+
+    ``geom`` is the ``PlanGeometry`` context the cost is evaluated in;
+    omit it (→ ``PlanGeometry.local()``) for standalone costing.
+    """
     from .primitives import conv_primitive  # lazy: primitives imports us
 
-    return conv_primitive(prim).cost(S, f, fp, n, k)
+    return conv_primitive(prim).cost(S, f, fp, n, k, geom)
 
 
-def pool_cost_by_name(prim: str, S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
+def pool_cost_by_name(
+    prim: str, S: int, f: int, n: Tuple[int, ...], p: int,
+    geom: Optional[PlanGeometry] = None,
+) -> LayerCost:
     """Cost of a pool primitive by name, via the runtime registry."""
     from .primitives import pool_primitive
 
-    return pool_primitive(prim).cost(S, f, n, p)
+    return pool_primitive(prim).cost(S, f, n, p, geom)

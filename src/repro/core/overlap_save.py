@@ -36,7 +36,7 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -221,6 +221,56 @@ def os_apply_from_spectra(
     return add_channel_bias(jnp.concatenate(parts, axis=2), b)
 
 
+def tail_segments(spec: OverlapSaveSpec, out_cols: int) -> int:
+    """How many TRAILING segments cover the last ``out_cols`` output columns.
+
+    The volume executor's deep-reuse path runs MAD + inverse only on these
+    segments for an interior patch (its leading output columns are served
+    from the activation cache), and ``cost_model.conv_overlap_save_cost``
+    prices exactly this count under a deep-reuse ``PlanGeometry``.
+    """
+    if out_cols >= spec.out[0]:
+        return spec.n_segments
+    j0 = (spec.out[0] - out_cols) // spec.seg_core
+    return spec.n_segments - min(j0, spec.n_segments - 1)
+
+
+def os_apply_tail_from_spectra(
+    F: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec: OverlapSaveSpec,
+    out_cols: int,
+    *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """MAD + inverse + reassembly of the TRAILING ``out_cols`` output columns.
+
+    F (S, q, f, na, nb, nc'') holds spectra of the last
+    ``q = tail_segments(spec, out_cols)`` segments only (same order as
+    ``spec.starts[-q:]``); returns (S, f', out_cols, *spec.out[1:]).  The
+    executor's strip path uses this for interior patches: their leading
+    output columns are assembled from the deep activation cache, so only
+    the trailing segments' MAD + inverse work is paid per patch.
+    """
+    n_seg = spec.n_segments
+    q = tail_segments(spec, out_cols)
+    j0 = n_seg - q
+    s = spec.seg_core
+    crop = (s,) + spec.out[1:]
+    parts = []
+    for jj in range(q):
+        j = j0 + jj
+        O = cmul_ops.cmul_mad(F[:, jj], W, use_pallas=use_pallas)
+        seg = pruned_irfftn(O, spec.fft_shape, (0, 0, 0), crop)
+        parts.append(seg if j < n_seg - 1 else seg[:, :, : spec.tail_len])
+    x = jnp.concatenate(parts, axis=2)
+    lead = (spec.out[0] - out_cols) - j0 * s
+    if lead > 0:
+        x = x[:, :, lead:]
+    return add_channel_bias(x, b)
+
+
 def overlap_save_conv(
     x: jnp.ndarray,
     W: jnp.ndarray,
@@ -251,7 +301,7 @@ def shared_segments(spec: OverlapSaveSpec, core: int) -> int:
     return sum(1 for r in spec.starts if r - core in s)
 
 
-def cost_spec(n: Sequence[int], k: int) -> OverlapSaveSpec:
-    """The segmentation the analytic cost model prices (default grid)."""
-    n3 = tuple(int(s) for s in n)
-    return plan_overlap_save(n3, (int(k),) * 3)
+def new_segments(spec: OverlapSaveSpec, core: int) -> int:
+    """Segments an x-interior patch must transform itself (grid minus the
+    segments its left neighbour at stride ``core`` already owns)."""
+    return spec.n_segments - shared_segments(spec, core)

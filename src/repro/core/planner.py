@@ -38,6 +38,7 @@ from ..configs.base import ConvNetConfig
 from .cost_model import (
     CONV_PRIMS,
     LayerCost,
+    PlanGeometry,
     conv_cost,
     mpf_cost,
     pool_cost,
@@ -74,6 +75,13 @@ class Plan:
     # core: dense output voxels per axis each patch contributes (m · P)
     fov: int = 0
     core: int = 0
+    # -- sweep-aware pricing metadata ----------------------------------------
+    # geometry: the PlanGeometry the layer costs were evaluated in (None:
+    #   context-free local costing); sweep: the exact predicted sweep-level
+    #   reuse counters (segment FFTs/hits, MAD segments, strip patches) the
+    #   executor's last_stats must reproduce 1:1 for the target volume.
+    geometry: Optional[PlanGeometry] = None
+    sweep: Optional[object] = None  # volume.tiler.SweepCounts
 
     @property
     def throughput(self) -> float:
@@ -119,6 +127,66 @@ class Plan:
 
 
 # ---------------------------------------------------------------------------
+# Sweep geometry: the execution context costs are evaluated in
+# ---------------------------------------------------------------------------
+
+
+def sweep_geometry(
+    net: ConvNetConfig,
+    m: int,
+    volume_shape: Sequence[int],
+    *,
+    batch: int = 1,
+    deep_reuse: bool = True,
+):
+    """``(PlanGeometry, SweepCounts)`` for sweeping ``volume_shape``.
+
+    Builds the exact tiling the executor will run (core-pinned layer-0
+    segment grid, x-major patch stream in chunks of ``batch``) and
+    simulates its caches, so the geometry carries the true sweep-average
+    segment-FFT count per patch and the interior/edge patch mix — the
+    context ``cost_model`` prices primitives in, and the predicted
+    counters the executor's ``last_stats`` must match exactly.
+    """
+    from ..volume.tiler import (  # lazy: keep core importable without volume
+        HaloSpec,
+        predict_sweep_counts,
+        tile_volume,
+    )
+    from .overlap_save import plan_overlap_save, tail_segments
+
+    P = net.total_pooling()
+    fov = net.field_of_view()
+    core = m * P
+    extent = core + fov - 1
+    k0 = next(l.size for l in net.layers if l.kind == "conv")
+    spec = plan_overlap_save((extent, extent, extent), (k0,) * 3, core)
+    halo = HaloSpec(spec.seg_core, spec.seg_extent, spec.starts)
+    tiling = tile_volume(tuple(volume_shape), core=core, fov=fov, halo=halo)
+    counts = predict_sweep_counts(
+        tiling, batch=batch, deep_reuse=deep_reuse,
+        strip_segments=tail_segments(spec, core),
+    )
+    n = tiling.n_patches
+    geom = PlanGeometry(
+        core=core, fov=fov, batch=batch, n_patches=n,
+        interior_frac=counts.strip_patches / n,
+        seg_core=core, deep_reuse=deep_reuse,
+        seg_fft_per_patch=counts.seg_fft / n,
+    )
+    return geom, counts
+
+
+def _layer_geom(
+    geom: Optional[PlanGeometry], i: int, P_cur: int
+) -> Optional[PlanGeometry]:
+    """Per-layer geometry view: new x-columns at this layer = core/P_cur."""
+    if geom is None:
+        return None
+    return geom.at_layer(i, new_x=geom.core // P_cur if P_cur else 0)
+
+
+# ---------------------------------------------------------------------------
 # Single-strategy layer walk
 # ---------------------------------------------------------------------------
 
@@ -133,20 +201,31 @@ def _walk(
     chips: int = 1,
     conv_prims: Sequence[str] = CONV_PRIMS,
     stream_collectives: bool = False,
+    geom: Optional[PlanGeometry] = None,
 ) -> Optional[List[LayerChoice]]:
     """Greedy per-layer fastest-feasible-primitive walk (§VI-A step 3).
 
+    ``geom`` (when given) is the sweep geometry layer costs are evaluated
+    in; the executor only realizes sweep reuse behind a first-layer
+    ``overlap_save`` conv, so if the first conv chooses another primitive
+    the remaining layers fall back to context-free costing.
+
     Returns None if some layer cannot fit the budget with any primitive.
     """
+    if not use_mpf:
+        geom = None  # plain-pool plans sweep subsamplings: no reuse grid
     choices: List[LayerChoice] = []
     S_cur, f_cur, n_cur = S, net.in_channels, n_in
+    P_cur = 1
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
     for i, layer in enumerate(net.layers):
         n3 = (n_cur,) * 3
+        g = _layer_geom(geom, i, P_cur)
         if layer.kind == "conv":
             fp = layer.out_channels
             best: Optional[Tuple[float, str, LayerCost]] = None
             for prim in conv_prims:
-                c = conv_cost(prim, S_cur, f_cur, fp, n3, layer.size)
+                c = conv_cost(prim, S_cur, f_cur, fp, n3, layer.size, g)
                 if stream_collectives:
                     # sub-layer streaming: weights+spectra sharded over the
                     # mesh; each chip gathers its chunk once per layer.
@@ -160,6 +239,8 @@ def _walk(
             if best is None:
                 return None
             t, prim, c = best
+            if i == first_conv and prim != "overlap_save":
+                geom = None  # executor runs no sweep reuse behind this mix
             n_next = n_cur - layer.size + 1
             choices.append(
                 LayerChoice(i, "conv", prim, (S_cur, f_cur, n3), (S_cur, fp, (n_next,) * 3), c, t)
@@ -170,7 +251,7 @@ def _walk(
             if use_mpf:
                 if (n_cur + 1) % p != 0:
                     return None
-                c = mpf_cost(S_cur, f_cur, n3, p)
+                c = mpf_cost(S_cur, f_cur, n3, p, g)
                 if stream_collectives:
                     c = LayerCost(c.flops, c.hbm_bytes, c.peak_bytes / chips, 0.0)
                 if c.peak_bytes > mem_budget:
@@ -182,6 +263,7 @@ def _walk(
                     LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3), (S_next, f_cur, (n_next,) * 3), c, t)
                 )
                 S_cur, n_cur = S_next, n_next
+                P_cur *= p
             else:
                 if n_cur % p != 0:
                     return None
@@ -231,27 +313,58 @@ def plan_single(
     strategy_name: str = "single",
     chips: int = 1,
     stream_collectives: bool = False,
+    volume_shape: Optional[Sequence[int]] = None,
+    deep_reuse: bool = True,
 ) -> Optional[Plan]:
-    """Best single-worker plan (the paper's CPU-only/GPU-only search)."""
+    """Best single-worker plan (the paper's CPU-only/GPU-only search).
+
+    ``volume_shape`` switches on sweep-aware costing: every (S, m)
+    candidate is priced in the ``PlanGeometry`` of actually sweeping that
+    volume (core-pinned layer-0 segment grid, exact cache-simulated
+    segment-FFT amortization, deep activation reuse when ``deep_reuse``),
+    and the winning plan records the predicted sweep counters the
+    executor must reproduce.  Without it the search is context-free, as
+    before.
+    """
     mem = hw.hbm_bytes if mem_bytes is None else mem_bytes
     best: Optional[Plan] = None
+    fov = net.field_of_view()
     for S in batches:
         for m in range(1, max_m + 1):
             n_in = _n_in_for_m(net, m, use_mpf)
+            geom = counts = None
+            # the cache simulation only matters if the walk CAN choose the
+            # reuse-capable mix; don't pay it when overlap_save is excluded
+            if (
+                volume_shape is not None
+                and use_mpf
+                and "overlap_save" in conv_prims
+            ):
+                if min(volume_shape) < fov:
+                    continue  # no valid output for this volume at all
+                geom, counts = sweep_geometry(
+                    net, m, volume_shape, batch=S, deep_reuse=deep_reuse
+                )
             choices = _walk(
                 net, S, n_in, use_mpf, hw, mem,
                 chips=chips, conv_prims=conv_prims,
-                stream_collectives=stream_collectives,
+                stream_collectives=stream_collectives, geom=geom,
             )
             if choices is None:
                 continue
+            first_conv = next(
+                i for i, l in enumerate(net.layers) if l.kind == "conv"
+            )
+            os_mix = choices[first_conv].prim == "overlap_save"
             total = sum(c.time_s for c in choices)
             vox = _out_voxels(net, S, m, use_mpf, n_in)
             peak = max(c.cost.peak_bytes for c in choices)
             plan = Plan(
                 net.name, strategy_name, chips, S, n_in, m,
                 tuple(choices), total, vox, peak,
-                fov=net.field_of_view(), core=m * net.total_pooling(),
+                fov=fov, core=m * net.total_pooling(),
+                geometry=geom if os_mix else None,
+                sweep=counts if os_mix else None,
             )
             if best is None or plan.throughput > best.throughput:
                 best = plan
@@ -268,6 +381,8 @@ def plan_fixed(
     chips: int = 1,
     mem_bytes: Optional[float] = None,
     strategy_name: str = "fixed",
+    volume_shape: Optional[Sequence[int]] = None,
+    deep_reuse: bool = True,
 ) -> Optional[Plan]:
     """Price a FIXED per-layer primitive assignment (no search).
 
@@ -277,9 +392,13 @@ def plan_fixed(
     patches) with ``fft_cached`` deeper.  This walks the same registry
     cost model over that assignment so such plans carry predicted
     throughput, peak bytes, and the runtime geometry metadata like any
-    searched plan.  Raises ValueError on divisibility violations; returns
-    None when some layer's peak exceeds the memory budget (default: one
-    chip's HBM), the same feasibility rule every search applies.
+    searched plan.  ``volume_shape`` prices the assignment in the sweep's
+    ``PlanGeometry`` (exact cache-simulated amortization; only active for
+    the reuse-capable mix — first conv ``overlap_save``, MPF pools) and
+    records the predicted counters on ``Plan.sweep``.  Raises ValueError
+    on divisibility violations; returns None when some layer's peak
+    exceeds the memory budget (default: one chip's HBM), the same
+    feasibility rule every search applies.
     """
     mem = hw.hbm_bytes if mem_bytes is None else mem_bytes
     from .primitives import plan_input_size  # lazy: primitives imports us
@@ -287,15 +406,26 @@ def plan_fixed(
     prims = tuple(prims)
     if len(prims) != len(net.layers):
         raise ValueError(f"{len(prims)} prims for {len(net.layers)} layers")
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    geom = counts = None
+    if (
+        volume_shape is not None
+        and prims[first_conv] == "overlap_save"
+        and "mpf" in prims
+    ):
+        geom, counts = sweep_geometry(
+            net, m, volume_shape, batch=batch, deep_reuse=deep_reuse
+        )
     n_in = plan_input_size(net, prims, m)
     choices: List[LayerChoice] = []
     S_cur, f_cur, n_cur = batch, net.in_channels, n_in
     P_mpf = 1
     for i, layer in enumerate(net.layers):
         n3 = (n_cur,) * 3
+        g = _layer_geom(geom, i, P_mpf)
         if layer.kind == "conv":
             fp = layer.out_channels
-            c = conv_cost(prims[i], S_cur, f_cur, fp, n3, layer.size)
+            c = conv_cost(prims[i], S_cur, f_cur, fp, n3, layer.size, g)
             n_next = n_cur - layer.size + 1
             choices.append(
                 LayerChoice(i, "conv", prims[i], (S_cur, f_cur, n3),
@@ -305,7 +435,7 @@ def plan_fixed(
         elif prims[i] == "mpf":
             if (n_cur + 1) % layer.size:
                 raise ValueError(f"layer {i}: MPF needs (n+1)%p==0, n={n_cur}")
-            c = mpf_cost(S_cur, f_cur, n3, layer.size)
+            c = mpf_cost(S_cur, f_cur, n3, layer.size, g)
             n_next, S_next = n_cur // layer.size, S_cur * layer.size**3
             choices.append(
                 LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3),
@@ -337,6 +467,7 @@ def plan_fixed(
         net.name, strategy_name, chips, batch, n_in, m,
         tuple(choices), total, vox, peak,
         fov=net.field_of_view(), core=m * net.total_pooling(),
+        geometry=geom, sweep=counts,
     )
 
 
@@ -449,10 +580,17 @@ def plan_spatial(
 
 
 def plan_all_strategies(
-    net: ConvNetConfig, hw: HardwareSpec, *, chips: int = 256
+    net: ConvNetConfig,
+    hw: HardwareSpec,
+    *,
+    chips: int = 256,
+    volume_shape: Optional[Sequence[int]] = None,
 ) -> dict:
+    """All strategy searches; ``volume_shape`` makes the single-worker
+    search sweep-aware (the multi-chip strategies execute through other
+    schedules and keep context-free costing)."""
     return {
-        "single": plan_single(net, hw),
+        "single": plan_single(net, hw, volume_shape=volume_shape),
         "streamed": plan_streamed(net, hw, chips=chips),
         "pipeline2": plan_pipeline2(net, hw, chips_per_stage=chips // 2),
         "spatial": plan_spatial(net, hw, chips=chips),

@@ -90,9 +90,14 @@ class PreparedLayer:
 class Primitive:
     """Registry entry: a primitive's cost model, setup, and apply together.
 
-    * conv — ``cost(S, f, fp, n, k)``; ``setup(w, b, n, index=...)``;
-    * pool — ``cost(S, f, n, p)``;    ``setup(p, n, index=...)``;
+    * conv — ``cost(S, f, fp, n, k, geom=None)``; ``setup(w, b, n, index=...)``;
+    * pool — ``cost(S, f, n, p, geom=None)``;     ``setup(p, n, index=...)``;
     * both — ``apply(prepared, x, state, use_pallas=...)``.
+
+    ``geom`` is an optional ``cost_model.PlanGeometry`` — the execution
+    geometry (sweep patch mix, pinned layer-0 segment grid, deep
+    activation reuse) the cost is evaluated in.  ``None`` means
+    ``PlanGeometry.local()``: price the primitive self-contained.
     """
 
     name: str
@@ -169,6 +174,13 @@ def registered_pool_names() -> Tuple[str, ...]:
 
 def _resolve(prepared: PreparedLayer) -> Primitive:
     return (_CONV if prepared.kind == "conv" else _POOL)[prepared.prim]
+
+
+def resolve_primitive(prepared: PreparedLayer) -> Primitive:
+    """Public resolve: the registry entry a ``PreparedLayer`` executes as
+    (used by executors that walk prepared layers with custom interleaving,
+    e.g. the volume executor's halo-capturing and strip walks)."""
+    return _resolve(prepared)
 
 
 # ---------------------------------------------------------------------------

@@ -2,11 +2,28 @@
 
 The 3D-inference analogue of ``serving/engine.py``: requests are whole
 volumes, work items are patches.  Each tick drains up to ``batch`` patches
-from the *front of the global patch queue* — patches of different queued
+from a *priority-ordered* patch queue — patches of different queued
 volumes share one fused executor step whenever a request doesn't fill the
 batch (all patches of one plan have identical shape, so cross-request
 batching is free).  A request completes when its last patch's core has
 been written into its dense output buffer.
+
+Scheduling: requests carry a ``priority`` (higher first); within a
+priority level, submission order (FIFO).  Starvation is bounded by aging —
+a waiting request gains one effective priority level every ``age_ticks``
+ticks, so any request eventually outranks a steady stream of
+higher-priority arrivals.  Patches of the currently highest-ranked
+request drain in tiler order (the executor's reuse caches depend on it).
+
+Shape bucketing: request volumes are zero-padded up to the executor's
+patch-grid buckets (``PlanExecutor.bucket_shape``) before tiling, so the
+fused per-batch jit step — keyed on the device-resident volume shape —
+does not retrace for every distinct request size, and every patch start
+is core-aligned (no shifted edge patches, maximum cross-patch reuse).
+Outputs are written only over the true dense range, so bucketing is exact
+(the pad-and-crop argument in ``volume/tiler.py``).  Watch
+``executor.last_stats["retraces"]`` to see the distinct jit
+specializations stay flat as differently-sized requests stream through.
 
 The engine drives ``PlanExecutor.run_patch_batch`` (single fused step per
 tick).  pipeline2 plans are accepted — their primitives are identical; the
@@ -32,13 +49,17 @@ from ..volume.tiler import VolumeTiling, extract_patch, pad_volume
 class VolumeRequest:
     rid: int
     volume: np.ndarray  # (f, X, Y, Z)
+    priority: int = 0  # higher = served first (ages up while waiting)
     out: Optional[np.ndarray] = None  # (out_ch, X-FOV+1, ...) when done
     done: bool = False
     # internal runtime state
     _tiling: Optional[VolumeTiling] = field(default=None, repr=False)
     _padded: Optional[np.ndarray] = field(default=None, repr=False)
+    _patches: Optional[Deque[int]] = field(default=None, repr=False)
     _remaining: int = field(default=0, repr=False)
     _sweep: Optional[int] = field(default=None, repr=False)  # spectra scope
+    _seq: int = field(default=0, repr=False)  # submission order
+    _submit_tick: int = field(default=0, repr=False)  # aging anchor
 
 
 class VolumeEngine:
@@ -54,66 +75,116 @@ class VolumeEngine:
         m: Optional[int] = None,
         batch: Optional[int] = None,
         use_pallas: bool = False,
+        deep_reuse: bool = True,
+        bucket_shapes: bool = True,
+        age_ticks: int = 8,
     ):
         self.executor = PlanExecutor(
             params, net, plan, prims=prims, m=m, batch=batch,
-            use_pallas=use_pallas,
+            use_pallas=use_pallas, deep_reuse=deep_reuse,
         )
         self.batch = self.executor.batch
-        self.queue: Deque[Tuple[VolumeRequest, int]] = deque()
+        self.bucket_shapes = bucket_shapes
+        self.age_ticks = max(1, age_ticks)
+        self.active: List[VolumeRequest] = []
         self.finished: List[VolumeRequest] = []
         self.ticks = 0
+        self._seq = 0
 
     # -- admission ----------------------------------------------------------
 
     def submit(self, req: VolumeRequest) -> None:
         ex = self.executor
-        tiling = ex.tiling_for(np.asarray(req.volume).shape[1:])
+        vol = np.asarray(req.volume, np.float32)
+        true_shape = vol.shape[1:]
+        if self.bucket_shapes:
+            shape = ex.bucket_shape(true_shape)
+            pad = [(0, 0)] + [(0, b - x) for b, x in zip(shape, true_shape)]
+            padded = np.pad(vol, pad) if any(p for _, p in pad) else vol
+        else:
+            shape, padded = true_shape, vol
+        tiling = ex.tiling_for(shape)
         req._tiling = tiling
-        req._padded = pad_volume(np.asarray(req.volume, np.float32), tiling)
+        req._padded = pad_volume(padded, tiling)
+        req._patches = deque(range(tiling.n_patches))
         req._remaining = tiling.n_patches
         req._sweep = None  # resubmission must not revive a freed scope
-        req.out = np.empty((ex.out_channels,) + tiling.out_shape, np.float32)
+        self._seq += 1
+        req._seq = self._seq
+        req._submit_tick = self.ticks
+        req.done = False
+        # the output buffer has the TRUE dense shape; patches over the
+        # bucket padding write only their in-range columns (write_core
+        # crops), so bucketing never leaks padded voxels into the result
+        out_shape = tuple(x - ex.fov + 1 for x in true_shape)
+        req.out = np.empty((ex.out_channels,) + out_shape, np.float32)
         # overlap-save reuse: one spectra scope per request — patches of one
         # volume share boundary spectra, requests never do (their segment
         # coordinates name different data).  The scope (and its device-
         # resident volume) is opened lazily at the first tick that touches
         # the request, so device residency scales with in-flight sweeps,
         # not with the queue.
-        for idx in range(tiling.n_patches):
-            self.queue.append((req, idx))
+        self.active.append(req)
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _effective_priority(self, req: VolumeRequest) -> int:
+        """Static priority plus aging: +1 level per ``age_ticks`` waited."""
+        return req.priority + (self.ticks - req._submit_tick) // self.age_ticks
+
+    def _ranked(self) -> List[VolumeRequest]:
+        """Active requests, highest effective priority first, FIFO within."""
+        return sorted(
+            (r for r in self.active if r._patches),
+            key=lambda r: (-self._effective_priority(r), r._seq),
+        )
+
+    @property
+    def queue(self) -> List[Tuple[VolumeRequest, int]]:
+        """Pending (request, patch index) pairs in current pop order."""
+        return [(r, idx) for r in self._ranked() for idx in r._patches]
 
     # -- tick ---------------------------------------------------------------
 
     def step(self) -> int:
-        """One fused batch over the head of the patch queue; returns the
-        number of real (non-padding) patches processed."""
-        if not self.queue:
+        """One fused batch over the priority-ordered patch queue; returns
+        the number of real (non-padding) patches processed."""
+        items: List[Tuple[VolumeRequest, int]] = []
+        for req in self._ranked():
+            while req._patches and len(items) < self.batch:
+                items.append((req, req._patches.popleft()))
+            if len(items) >= self.batch:
+                break
+        if not items:
             return 0
-        items = [self.queue.popleft() for _ in range(min(self.batch, len(self.queue)))]
+        ex = self.executor
         # a drained-queue tail runs at the executor's bucketed batch size
         # (next power of two, or exactly len(items) if already compiled):
         # continuous serving can see arbitrary ready-counts per tick, so
         # bucketing bounds XLA compiles at O(log batch) while avoiding most
         # padded-and-discarded work; the prepared states are shared anyway.
-        S_run = self.executor.padded_batch_size(len(items))
-        if self.executor._os_reuse:
-            # per-patch (sweep, segment keys): cross-request batches mix
-            # scopes safely; bucketing's repeated tail patch re-presents
+        S_run = ex.padded_batch_size(len(items))
+        if ex._os_reuse:
+            # per-patch (sweep, segment keys, start): cross-request batches
+            # mix scopes safely; bucketing's repeated tail patch re-presents
             # the same keys and is served from the cache it just filled.
             for req, _ in items:
                 if req._sweep is None:
-                    req._sweep = self.executor.begin_sweep(req._padded)
+                    req._sweep = ex.begin_sweep(req._padded)
                     # the sweep owns a device-resident copy now and this
                     # mode never extracts host-side patches: the host
                     # padded copy is dead — free it early
                     req._padded = None
             meta = [
-                (req._sweep, req._tiling.segment_keys(req._tiling.patches[idx]))
+                (
+                    req._sweep,
+                    req._tiling.segment_keys(req._tiling.patches[idx]),
+                    req._tiling.patches[idx].start,
+                )
                 for req, idx in items
             ]
             meta += [meta[-1]] * (S_run - len(items))
-            ys = self.executor.run_patch_batch(None, meta=meta)
+            ys = ex.run_patch_batch(None, meta=meta)
         else:
             xs = np.stack(
                 [
@@ -125,16 +196,20 @@ class VolumeEngine:
                 xs = np.concatenate(
                     [xs, np.repeat(xs[-1:], S_run - len(items), axis=0)]
                 )
-            ys = self.executor.run_patch_batch(xs)
+            ys = ex.run_patch_batch(xs)
         for (req, idx), y in zip(items, ys):
-            self.executor.write_core(req.out, req._tiling, req._tiling.patches[idx], y)
+            ex.write_core(req.out, req._tiling, req._tiling.patches[idx], y)
             req._remaining -= 1
             if req._remaining == 0:
                 req.done = True
                 req._padded = None  # drop the padded copy early
-                self.executor.end_sweep(req._sweep)  # free boundary spectra
+                ex.end_sweep(req._sweep)  # free boundary spectra + halos
+                # remove by IDENTITY: dataclass equality would compare the
+                # ndarray fields and raise on duplicate rids
+                self.active = [r for r in self.active if r is not req]
                 self.finished.append(req)
         self.ticks += 1
+        ex.last_stats["retraces"] = len(ex._trace_keys)
         return len(items)
 
     def run_until_drained(self, max_ticks: int = 100_000) -> List[VolumeRequest]:

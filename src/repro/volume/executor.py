@@ -42,6 +42,27 @@ rides the tiler's non-decreasing-x guarantee.  ``last_stats`` reports
 ``os_seg_fft`` (input segment FFTs actually run) and ``os_seg_hits``
 (segments served from the cache).
 
+Deep activation reuse (``deep_reuse``, default on for reuse-capable
+plans): the sweep cache extends BELOW layer 0.  Every patch stores, per
+layer l >= 1, the trailing ``size_l - 1`` x-columns of that layer's input
+(the activation halo), keyed by the x-successor patch start — per-layer
+coordinate frames stay aligned across patches because the patch stride
+``core`` is divisible by every cumulative pooling factor, fragment
+offsets included.  An *interior* patch (core-aligned x start whose left
+neighbour completed in an earlier chunk) then runs the STRIP path: layer
+0 pays MAD + inverse only for the ``tail_segments`` covering its new core
+columns, and each deeper layer runs on ``new_x + size - 1`` assembled
+columns (cached halo + newly computed strip) instead of the full patch
+extent — the FOV-1 overlap is never recomputed at any depth.  Interior
+and edge patches of one chunk run as two fused jit calls; eligibility is
+decided against the halo cache as of the chunk start, so batches never
+race on intra-chunk dependencies.  ``last_stats`` adds
+``os_mad_segments`` (per-segment MAD+inverse passes actually run),
+``deep_strip_patches``/``deep_full_patches``, and ``retraces`` (distinct
+jit specializations seen).  ``predict_counts`` returns the planner-side
+``SweepCounts`` for a volume shape — by construction these equal the
+measured counters exactly (the sweep-aware planning acceptance property).
+
 ``run`` returns the dense (out_ch, X-FOV+1, ...) output and records
 ``last_stats`` (patch/batch counts, wall seconds, measured vox/s including
 border waste, and the planner's predicted vox/s for comparison).
@@ -63,8 +84,24 @@ from ..core import overlap_save as os_mod
 from ..core.mpf import recombine_fragments
 from ..core.pipeline import make_stage_fns, pipelined_apply
 from ..core.planner import Plan
-from ..core.primitives import CompiledPlan, compile_plan, plan_input_size
-from .tiler import HaloSpec, VolumeTiling, extract_patch, pad_volume, tile_volume
+from ..core.primitives import (
+    CompiledPlan,
+    PreparedLayer,
+    compile_plan,
+    conv_primitive,
+    plan_input_size,
+    pool_primitive,
+    resolve_primitive,
+)
+from .tiler import (
+    HaloSpec,
+    SweepCounts,
+    VolumeTiling,
+    extract_patch,
+    pad_volume,
+    predict_sweep_counts,
+    tile_volume,
+)
 
 
 class _PendingMiss(NamedTuple):
@@ -100,6 +137,7 @@ class PlanExecutor:
         batch: Optional[int] = None,
         theta: int = -1,
         use_pallas: bool = False,
+        deep_reuse: bool = True,
     ):
         self.params = params
         self.net = net
@@ -163,6 +201,14 @@ class PlanExecutor:
         self._sweep_counter = 0
         self._os_misses = 0
         self._os_hits = 0
+        self._os_mad_segments = 0
+        self._deep_strips = 0
+        self._deep_fulls = 0
+        self._trace_keys: set = set()  # distinct jit specializations seen
+        # deep activation reuse: interior patches run a strip walk assembled
+        # from cached per-layer activation halos (see module docstring)
+        self.deep_reuse = bool(self._os_reuse and deep_reuse)
+        self._halo_caches: Dict[int, Dict[Tuple[int, int, int], List]] = {}
         if self._os_reuse:
             spec0 = self.compiled.layers[0].os_spec
             self._jit_os_walk = jax.jit(self._os_walk)
@@ -173,6 +219,19 @@ class PlanExecutor:
             self.halo = HaloSpec(spec0.seg_core, spec0.seg_extent, spec0.starts)
         else:
             self.halo = None
+        if self.deep_reuse:
+            spec0 = self.compiled.layers[0].os_spec
+            # trailing segments covering an interior patch's new core columns
+            self._q_strip = os_mod.tail_segments(spec0, self.core)
+            self._strip_layers, self._strip_info = self._build_strip_plan()
+            self._strip_states = [
+                pl.state if pl is not None else None for pl in self._strip_layers
+            ]
+            self._jit_os_strip_step = jax.jit(
+                self._os_strip_step, static_argnames=("pattern",)
+            )
+        else:
+            self._q_strip = None
 
     # -- geometry ------------------------------------------------------------
 
@@ -191,6 +250,90 @@ class PlanExecutor:
         return tile_volume(
             vol_shape, core=self.core, fov=self.fov, halo=self.halo
         )
+
+    def bucket_shape(self, vol_shape: Sequence[int]) -> Tuple[int, int, int]:
+        """Round a volume shape up to the executor's patch-grid bucket.
+
+        Axes are padded so the dense output is a whole number of cores:
+        the padded shapes of arbitrary requests collapse onto a small set
+        of buckets, every patch start is core-aligned (no shifted edge
+        patches, maximum cross-patch reuse), and the fused per-batch jit
+        step — keyed on the device-resident volume's shape — stops
+        retracing per distinct request size.  Exact by the pad-and-crop
+        argument: outputs over the padding are simply never written.
+        Raises for axes below the FOV — the same no-valid-output contract
+        ``tile_volume`` enforces on unbucketed shapes.
+        """
+        for ax, x in enumerate(vol_shape):
+            if x < self.fov:
+                raise ValueError(
+                    f"axis {ax} extent {x} < FOV {self.fov}: no valid output exists"
+                )
+        return tuple(
+            math.ceil((x - self.fov + 1) / self.core) * self.core
+            + self.fov - 1
+            for x in vol_shape
+        )
+
+    def predict_counts(
+        self, vol_shape: Sequence[int], *, batch: Optional[int] = None
+    ) -> SweepCounts:
+        """Planner-side prediction of this executor's sweep counters.
+
+        Simulates the sweep caches over the exact tiling ``run`` would
+        use; the returned counts equal the measured ``last_stats``
+        counters 1:1 (the sweep-aware planning acceptance property).
+        """
+        if not self._os_reuse:
+            raise ValueError("predict_counts needs an overlap-save reuse plan")
+        tiling = self.tiling_for(vol_shape)
+        return predict_sweep_counts(
+            tiling, batch=batch or self.batch,
+            deep_reuse=self.deep_reuse, strip_segments=self._q_strip,
+        )
+
+    def _build_strip_plan(self):
+        """One-time setup of the interior-patch strip walk (layers >= 1).
+
+        For each layer below the input, bind its primitive to the strip
+        extent an interior patch runs: ``new_x + size - 1`` x-columns (the
+        newly computed columns plus the cached activation halo) at the
+        full-walk y/z extents.  Returns ``(layers, info)`` where
+        ``layers[i]`` is the strip ``PreparedLayer`` (None at 0 — layer 0
+        runs through the segment-spectra tail) and ``info[i] = (halo
+        columns, fragment batch multiplier at this layer's input)``.
+        """
+        n = self.n_in  # full-walk spatial extent entering each layer
+        P_cur, frag = 1, 1
+        layers: List[Optional[PreparedLayer]] = [None] * len(self.net.layers)
+        info: List[Optional[Tuple[int, int]]] = [None] * len(self.net.layers)
+        for i, layer in enumerate(self.net.layers):
+            if i > 0:
+                new_x = self.core // P_cur
+                h = layer.size - 1
+                w_in = new_x + h
+                assert w_in <= n, (i, w_in, n)
+                if layer.kind == "conv":
+                    w, b = self.params[i]
+                    layers[i] = conv_primitive(self.prims[i]).setup(
+                        w, b, (w_in, n, n), index=i
+                    )
+                else:
+                    layers[i] = pool_primitive(self.prims[i]).setup(
+                        layer.size, (w_in, n, n), index=i
+                    )
+                info[i] = (h, frag)
+            if layer.kind == "conv":
+                n = n - layer.size + 1
+            else:
+                n = n // layer.size
+                P_cur *= layer.size
+                frag *= layer.size**3
+        return tuple(layers), tuple(info)
+
+    def _record_trace(self, key: Tuple) -> None:
+        """Track distinct jit specializations (last_stats["retraces"])."""
+        self._trace_keys.add(key)
 
     # -- overlap-save sweep cache -------------------------------------------
 
@@ -219,13 +362,45 @@ class PlanExecutor:
     def end_sweep(self, token: Optional[int]) -> None:
         self._sweeps.pop(token, None)
         self._sweep_vols.pop(token, None)
+        self._halo_caches.pop(token, None)
 
-    def _os_walk(self, states, F):
+    def _walk_below_input(self, states, x, S, *, capture: bool):
+        """Layers 1.. over a layer-0 output, optionally capturing halos.
+
+        Applies each prepared layer in turn (ReLU after every conv but the
+        net's last — the whole-net rule ``apply_prepared_range`` states)
+        and, when ``capture`` (deep reuse on), records per layer the
+        trailing ``size - 1`` x-columns of its INPUT: the activation halos
+        the next x-patch's strip walk assembles from.  ``capture`` is a
+        trace-time constant — jitted callers that discard halos (deep
+        reuse off, the mixed-sweep fallback) must not materialize them as
+        jit outputs.  Returns ``(out, halos)``.
+        """
+        last_conv = max(
+            i for i, l in enumerate(self.net.layers) if l.kind == "conv"
+        )
+        halos = []
+        for i in range(1, len(self.net.layers)):
+            pl = self.compiled.layers[i]
+            if capture:
+                h = self.net.layers[i].size - 1
+                halos.append(x[:, :, -h:])
+            x = resolve_primitive(pl).apply(
+                pl, x, states[i], use_pallas=self.use_pallas
+            )
+            if pl.kind == "conv" and i != last_conv:
+                x = jax.nn.relu(x)
+        if self.uses_mpf:
+            x = recombine_fragments(x, list(self.compiled.mpf_pools), S)
+        return x, tuple(halos)
+
+    def _os_walk(self, states, F, *, capture: bool = False):
         """Jitted forward from precomputed layer-0 segment spectra.
 
         F (S, n_seg, f, ña, ñb, ñc) — the stacked per-patch spectra the
         sweep cache assembled; layers 1.. walk the shared prepared states
-        exactly like the plain batched path.
+        exactly like the plain batched path.  Returns ``(out, halos)``
+        (empty halos unless ``capture``; see ``_walk_below_input``).
         """
         pl0 = self.compiled.layers[0]
         x = os_mod.os_apply_from_spectra(
@@ -237,13 +412,16 @@ class PlanExecutor:
         )
         if last_conv != 0:
             x = jax.nn.relu(x)
-        x = self.compiled.apply_range(x, lo=1, states=states)
-        if self.uses_mpf:
-            x = recombine_fragments(x, list(self.compiled.mpf_pools), F.shape[0])
-        return x
+        return self._walk_below_input(states, x, F.shape[0], capture=capture)
+
+    def _assemble_spectra(self, Fm, parents, pattern, rows_per_patch):
+        rows = [Fm[j] if p < 0 else parents[p][j] for p, j in pattern]
+        S = len(pattern) // rows_per_patch
+        return jnp.stack(rows).reshape((S, rows_per_patch) + rows[0].shape)
 
     def _os_step(self, states, vol, starts, parents, *, pattern):
-        """ONE jitted call per patch batch: miss FFTs + assembly + walk.
+        """ONE jitted call per full-path patch batch: miss FFTs + assembly
+        + walk (+ halo capture).
 
         ``pattern`` is the batch's static miss/hit layout — slot i of the
         (S·n_seg)-row spectra stack is ``(-1, j)`` (row j of the miss FFTs
@@ -253,51 +431,223 @@ class PlanExecutor:
         XLA schedule them with the MAD instead of paying a host round-trip
         per batch, and selecting cached rows at trace time means reuse
         costs no host copies; the miss spectra are returned so the sweep
-        cache can serve them to the next x-row.
+        cache can serve them to the next x-row, the halos so the deep
+        activation cache can serve the next x-patch's strip walk.
         """
         spec0 = self.compiled.layers[0].os_spec
         Fm = None
         if starts is not None:
             Fm = os_mod.slice_segment_spectra(vol, starts, spec0, self.extent)
-        rows = [Fm[j] if p < 0 else parents[p][j] for p, j in pattern]
-        S = len(pattern) // spec0.n_segments
-        F_all = jnp.stack(rows).reshape(
-            (S, spec0.n_segments) + rows[0].shape
+        F_all = self._assemble_spectra(Fm, parents, pattern, spec0.n_segments)
+        out, halos = self._os_walk(states, F_all, capture=self.deep_reuse)
+        return out, Fm, halos
+
+    def _os_strip_step(
+        self, states, strip_states, vol, starts, parents, halos, *, pattern
+    ):
+        """ONE jitted call per interior-patch batch: the deep-reuse strip.
+
+        Layer 0 pays MAD + inverse only for the ``tail_segments`` covering
+        the batch's new core columns (``pattern`` holds q slots per patch,
+        mixing cached and miss spectra exactly like the full step); every
+        deeper layer runs on ``new_x + size - 1`` assembled columns —
+        ``halos[i-1]`` (the left neighbour's cached activation halo)
+        concatenated with the newly computed strip from below.  The FOV-1
+        overlap is recomputed at no layer.  Returns the patch cores, the
+        miss spectra, and the batch's own trailing halos for the cache.
+        """
+        spec0 = self.compiled.layers[0].os_spec
+        Fm = None
+        if starts is not None:
+            Fm = os_mod.slice_segment_spectra(vol, starts, spec0, self.extent)
+        F = self._assemble_spectra(Fm, parents, pattern, self._q_strip)
+        S = F.shape[0]
+        x = os_mod.os_apply_tail_from_spectra(
+            F, states[0]["W"], states[0]["b"], spec0, self.core,
+            use_pallas=self.use_pallas,
         )
-        return self._os_walk(states, F_all), Fm
+        last_conv = max(
+            i for i, l in enumerate(self.net.layers) if l.kind == "conv"
+        )
+        if last_conv != 0:
+            x = jax.nn.relu(x)
+        new_halos = []
+        for i in range(1, len(self.net.layers)):
+            pl = self._strip_layers[i]
+            h, _ = self._strip_info[i]
+            x = jnp.concatenate([halos[i - 1], x], axis=2)
+            new_halos.append(x[:, :, -h:])
+            x = resolve_primitive(pl).apply(
+                pl, x, strip_states[i], use_pallas=self.use_pallas
+            )
+            if pl.kind == "conv" and i != last_conv:
+                x = jax.nn.relu(x)
+        if self.uses_mpf:
+            x = recombine_fragments(x, list(self.compiled.mpf_pools), S)
+        return x, Fm, tuple(new_halos)
 
     def _run_os_batch(self, meta) -> np.ndarray:
         """Patch batch with layer-0 segment spectra served from the cache.
 
-        ``meta[i] = (sweep_token, segment_keys)`` for patch i; keys come
-        from ``tiler.segment_keys`` and pair 1:1 (same order) with the
-        prepared layer-0 ``os_spec.starts``.  The segment grid is
+        ``meta[i] = (sweep_token, segment_keys, patch_start)`` for patch
+        i; keys come from ``tiler.segment_keys`` and pair 1:1 (same order)
+        with the prepared layer-0 ``os_spec.starts``.  The segment grid is
         volume-global (segments read the padded volume directly, past the
         patch's own extent if needed), so an interior patch transforms only
         the ``core/seg_core`` segments the sweep newly entered — everything
         else is a hit.  Single-sweep batches (the volume sweep, and serving
-        ticks that drained one request) run the fused ``_os_step``;
-        mixed-sweep batches fall back to one ``segment_spectra_at`` call
-        per sweep plus the spectra-stack walk.
+        ticks that drained one request) run fused: the chunk partitions
+        into the full-extent group and (under deep reuse) the
+        interior-strip group — eligibility decided against the halo cache
+        as of the chunk start, so a patch whose left neighbour is in the
+        SAME chunk safely falls back to the full path — and each group is
+        one jit call.  Mixed-sweep batches (cross-request serving ticks)
+        fall back to one ``segment_spectra_at`` call per sweep plus the
+        spectra-stack walk, with no deep reuse.
+        """
+        tokens = {mm[0] for mm in meta}
+        if len(tokens) > 1:
+            return self._run_os_batch_mixed(meta)
+        token = next(iter(tokens))
+        self._sweeps.setdefault(token, {})
+        halo_cache = self._halo_caches.setdefault(token, {})
+        # the patch stream is x-major with non-decreasing x (tiler
+        # invariant): cache entries strictly left of this chunk's earliest
+        # patch start can never be requested again.  (Keyed by patch START
+        # — not first resolved key — so a strip patch, which resolves only
+        # its trailing keys, never evicts a key a same-plane full patch
+        # still needs.)
+        x_lo = min(mm[2][0] for mm in meta)
+        for cache_d in (self._sweeps[token], halo_cache):
+            for dead in [k for k in cache_d if k[0] < x_lo]:
+                del cache_d[dead]
+        # partition BEFORE running anything: strip eligibility is decided
+        # against the halo cache as of the chunk start
+        full_rows: List[int] = []
+        strip_rows: List[int] = []
+        for idx, (_, keys, start) in enumerate(meta):
+            eligible = (
+                self.deep_reuse
+                and start[0] > 0
+                and start[0] % self.core == 0
+                and start in halo_cache
+            )
+            (strip_rows if eligible else full_rows).append(idx)
+        outs: List[Optional[np.ndarray]] = [None] * len(meta)
+        for rows, strip in ((full_rows, False), (strip_rows, True)):
+            if not rows:
+                continue
+            ys, halos = self._run_os_group(
+                token, [meta[i] for i in rows], strip
+            )
+            for j, idx in enumerate(rows):
+                outs[idx] = ys[j]
+            if self.deep_reuse:
+                self._store_halos(halo_cache, [meta[i] for i in rows], halos)
+        return np.stack(outs)
+
+    def _run_os_group(self, token, metas, strip: bool):
+        """Resolve + run one homogeneous (full or strip) patch group.
+
+        Resolution inserts ``_PendingMiss`` markers, so repeated keys
+        within the group dedup; groups run sequentially (full before
+        strip), so the strip group sees the full group's fresh
+        ``_SpectrumRef``s.  Returns ``(outputs, halos)``.
         """
         spec0 = self.compiled.layers[0].os_spec
-        # pass 1: resolve every (patch, segment) against the sweep caches;
-        # group the misses per sweep for batched device slicing.
+        cache = self._sweeps[token]
+        n_seg = spec0.n_segments
+        q = self._q_strip if strip else n_seg
+        misses: List[Tuple[int, int, int]] = []
+        pattern: List[Tuple[int, int]] = []
+        parents: List = []
+        parent_pos: Dict[int, int] = {}
+        for _, keys, _start in metas:
+            for key in keys[n_seg - q :] if strip else keys:
+                F = cache.get(key)
+                if F is None:
+                    # the pending marker in the cache also dedups repeated
+                    # keys within this group (bucketed tail repeats)
+                    F = _PendingMiss(len(misses))
+                    cache[key] = F
+                    misses.append(key)
+                    self._os_misses += 1
+                else:
+                    self._os_hits += 1
+                if isinstance(F, _PendingMiss):
+                    pattern.append((-1, F.idx))
+                else:
+                    pos = parent_pos.get(id(F.parent))
+                    if pos is None:
+                        pos = parent_pos[id(F.parent)] = len(parents)
+                        parents.append(F.parent)
+                    pattern.append((pos, F.idx))
+        starts = jnp.asarray(np.asarray(misses, np.int32)) if misses else None
+        self._os_mad_segments += len(pattern)
+        vol = self._sweep_vols[token]
+        if strip:
+            halos_in = tuple(
+                jnp.concatenate(
+                    [self._halo_caches[token][m[2]][pos] for m in metas], axis=0
+                )
+                for pos in range(len(self.net.layers) - 1)
+            )
+            self._record_trace(
+                ("strip", tuple(pattern), None if starts is None else len(misses),
+                 vol.shape, len(parents))
+            )
+            out, F_m, halos = self._jit_os_strip_step(
+                self.compiled.states, self._strip_states, vol,
+                starts, tuple(parents), halos_in, pattern=tuple(pattern),
+            )
+            self._deep_strips += len(metas)
+        else:
+            self._record_trace(
+                ("full", tuple(pattern), None if starts is None else len(misses),
+                 vol.shape, len(parents))
+            )
+            out, F_m, halos = self._jit_os_step(
+                self.compiled.states, vol,
+                starts, tuple(parents), pattern=tuple(pattern),
+            )
+            self._deep_fulls += len(metas)
+        for i, key in enumerate(misses):
+            cache[key] = _SpectrumRef(F_m, i)
+        return np.asarray(out), halos
+
+    def _store_halos(self, halo_cache, metas, halos) -> None:
+        """File a group's trailing activation halos for the x-successors.
+
+        ``halos[pos]`` stacks the whole group (fragment-expanded batch);
+        patch j owns rows [j·frag, (j+1)·frag) at each layer.  Only
+        core-aligned patches store — a shifted edge patch's coverage can
+        never serve an aligned successor's coordinate frame.
+        """
+        for j, (_, _, start) in enumerate(metas):
+            if start[0] % self.core:
+                continue
+            entry = []
+            for pos in range(len(self.net.layers) - 1):
+                _, frag = self._strip_info[pos + 1]
+                entry.append(halos[pos][j * frag : (j + 1) * frag])
+            halo_cache[(start[0] + self.core, start[1], start[2])] = entry
+
+    def _run_os_batch_mixed(self, meta) -> np.ndarray:
+        """Cross-request serving batches: one batched FFT per sweep, then
+        the spectra-stack walk (full path; deep reuse resumes on the next
+        single-sweep tick — mixed ticks don't store halos)."""
+        spec0 = self.compiled.layers[0].os_spec
         slots: List[List] = []  # per patch: (key, _SpectrumRef | _PendingMiss)
         miss_keys: Dict[int, List[Tuple[int, int, int]]] = {}
-        for token, keys in meta:
+        for token, keys, start in meta:
             cache = self._sweeps.setdefault(token, {})
-            # the patch stream is x-major with non-decreasing x (tiler
-            # invariant): segments strictly left of this patch are dead.
-            x_lo = keys[0][0]
+            x_lo = start[0]
             for dead in [k for k in cache if k[0] < x_lo]:
                 del cache[dead]
             per_seg = []
             for key in keys:
                 F = cache.get(key)
                 if F is None:
-                    # the pending marker in the cache also dedups repeated
-                    # keys within this batch (bucketed tail repeats)
                     misses = miss_keys.setdefault(token, [])
                     F = _PendingMiss(len(misses))
                     cache[key] = F
@@ -307,39 +657,8 @@ class PlanExecutor:
                     self._os_hits += 1
                 per_seg.append((key, F))
             slots.append(per_seg)
-        tokens = {m[0] for m in meta}
-        if len(tokens) == 1:
-            # fused path: the whole batch — miss FFTs, assembly, walk — is
-            # one jit call specialized on the (small, recurring) pattern.
-            token = next(iter(tokens))
-            cache = self._sweeps[token]
-            misses = miss_keys.get(token, [])
-            pattern: List[Tuple[int, int]] = []
-            parents: List = []
-            parent_pos: Dict[int, int] = {}
-            for per_seg in slots:
-                for key, F in per_seg:
-                    if isinstance(F, _PendingMiss):
-                        pattern.append((-1, F.idx))
-                    else:
-                        pos = parent_pos.get(id(F.parent))
-                        if pos is None:
-                            pos = parent_pos[id(F.parent)] = len(parents)
-                            parents.append(F.parent)
-                        pattern.append((pos, F.idx))
-            starts = (
-                jnp.asarray(np.asarray(misses, np.int32)) if misses else None
-            )
-            out, F_m = self._jit_os_step(
-                self.compiled.states, self._sweep_vols[token],
-                starts, tuple(parents), pattern=tuple(pattern),
-            )
-            for i, key in enumerate(misses):
-                cache[key] = _SpectrumRef(F_m, i)
-            return np.asarray(out)
-
-        # fallback (cross-request serving batches): one batched FFT per
-        # sweep, then the spectra-stack walk.
+            self._os_mad_segments += spec0.n_segments
+            self._deep_fulls += 1
         F_miss: Dict[int, jnp.ndarray] = {}
         for token, keys_m in miss_keys.items():
             # pad the miss count to a power of two so the distinct compiled
@@ -354,7 +673,7 @@ class PlanExecutor:
             )
         # pass 2: materialize rows; ONE stack builds the batch.
         flat = []
-        for (token, _), per_seg in zip(meta, slots):
+        for (token, _, _), per_seg in zip(meta, slots):
             cache = self._sweeps[token]
             for key, F in per_seg:
                 if isinstance(F, _PendingMiss):
@@ -363,7 +682,9 @@ class PlanExecutor:
         F_all = jnp.stack(flat).reshape(
             (len(slots), spec0.n_segments) + flat[0].shape
         )  # (S, n_seg, f, ña, ñb, ñc)
-        return np.asarray(self._jit_os_walk(self.compiled.states, F_all))
+        self._record_trace(("oswalk", F_all.shape))
+        out, _ = self._jit_os_walk(self.compiled.states, F_all)
+        return np.asarray(out)
 
     # -- compiled patch-batch kernels ---------------------------------------
 
@@ -392,10 +713,12 @@ class PlanExecutor:
         prepared buffers — kernel FFTs ran once, in ``compile_plan``.
 
         ``meta`` (overlap-save reuse only): per-patch ``(sweep_token,
-        segment_keys)`` naming each patch's layer-0 segments by absolute
-        volume coordinates, so input spectra shared with an x-adjacent
-        patch are served from the sweep cache instead of recomputed; ``xs``
-        may then be None (the walk starts from spectra of the sweep's
+        segment_keys, patch_start)`` naming each patch's layer-0 segments
+        by absolute volume coordinates, so input spectra shared with an
+        x-adjacent patch are served from the sweep cache instead of
+        recomputed (and, under deep reuse, interior patches assemble
+        deeper-layer inputs from cached activation halos); ``xs`` may then
+        be None (the walk starts from spectra of the sweep's
         device-resident volume, never from the raw patch).  Callers without
         sweep context (tests, raw batches) omit ``meta`` and get the
         self-contained walk.
@@ -407,6 +730,7 @@ class PlanExecutor:
         self._seen_batch_sizes.add(S)
         states = self.compiled.states
         if self.uses_mpf:
+            self._record_trace(("walk", xs.shape))
             return np.asarray(self._jit_walk(states, jnp.asarray(xs)))
         # baseline: all-subsamplings outer loop (P³ shifted passes)
         out = np.empty(
@@ -428,7 +752,8 @@ class PlanExecutor:
         padded = pad_volume(vol, tiling)
         out = np.empty((self.out_channels,) + tiling.out_shape, np.float32)
 
-        self._os_misses = self._os_hits = 0
+        self._os_misses = self._os_hits = self._os_mad_segments = 0
+        self._deep_strips = self._deep_fulls = 0
         t0 = time.perf_counter()
         # the sweep's device upload is real per-volume work the other
         # execution modes pay per batch (patch extraction + transfer), so
@@ -465,6 +790,16 @@ class PlanExecutor:
             # segment FFTs actually run vs. segments served from the cache
             "os_seg_fft": self._os_misses,
             "os_seg_hits": self._os_hits,
+            # sweep-aware accounting (matches predict_counts exactly):
+            # per-segment MAD+inverse passes run, and how many patches
+            # took the deep-reuse strip path vs. the full-extent path
+            "os_mad_segments": self._os_mad_segments,
+            "deep_strip_patches": self._deep_strips,
+            "deep_full_patches": self._deep_fulls,
+            # distinct jit specializations dispatched so far (cumulative
+            # over the executor's lifetime — serving watches this to see
+            # shape-bucketing suppress per-request retraces)
+            "retraces": len(self._trace_keys),
         }
         return out
 
@@ -493,7 +828,9 @@ class PlanExecutor:
             if sweep is not None:
                 # overlap-save: the walk starts from cached/computed segment
                 # spectra of the device-resident volume — no patch extraction
-                meta = [(sweep, tiling.segment_keys(s)) for s in chunk]
+                meta = [
+                    (sweep, tiling.segment_keys(s), s.start) for s in chunk
+                ]
                 ys = self.run_patch_batch(None, meta=meta)
             else:
                 xs = np.stack(

@@ -161,6 +161,93 @@ def tile_volume(
     )
 
 
+@dataclass(frozen=True)
+class SweepCounts:
+    """Exact sweep-level reuse accounting for one tiling.
+
+    Produced by ``predict_sweep_counts`` (the planner side) and matched
+    1:1 against the executor's measured ``last_stats`` counters — the
+    acceptance property of sweep-aware planning: what the planner priced
+    is what the executor ran.
+    """
+
+    seg_fft: int  # input segment FFTs actually run (cache misses)
+    seg_hits: int  # segments served from the sweep spectra cache
+    mad_segments: int  # per-segment MAD + inverse passes executed
+    strip_patches: int  # interior patches run on the deep-reuse strip path
+    full_patches: int  # patches run on the full-extent path
+
+    @property
+    def n_patches(self) -> int:
+        return self.strip_patches + self.full_patches
+
+
+def predict_sweep_counts(
+    tiling: VolumeTiling,
+    *,
+    batch: int = 1,
+    deep_reuse: bool = False,
+    strip_segments: Optional[int] = None,
+) -> SweepCounts:
+    """Simulate the executor's sweep caches over this tiling, exactly.
+
+    Mirrors ``PlanExecutor``'s per-chunk processing: patches run in tiler
+    order in chunks of ``batch``; within a chunk the full-path group
+    resolves (and inserts) its segment keys before the strip group; a
+    patch takes the strip path iff deep reuse is on, its start is
+    core-aligned on x, and its left neighbour's activation halos were
+    stored by an EARLIER chunk (same-chunk neighbours fall back to the
+    full path — the executor decides eligibility before running the
+    chunk).  Strip patches resolve only the trailing ``strip_segments``
+    keys and pay that many MAD segments; full patches resolve the whole
+    grid.  Spectra-cache eviction (keys strictly left of the current
+    patch start) can never evict a key a later patch resolves — the
+    patch stream has non-decreasing x — so it does not enter the counts.
+    """
+    if tiling.halo is None:
+        raise ValueError("tiling was not built in overlap-save mode")
+    n_seg = len(tiling.halo.rel_starts)
+    q = strip_segments if (deep_reuse and strip_segments) else n_seg
+    q = min(q, n_seg)
+    cache: set = set()
+    halo_ready: set = set()
+    seg_fft = seg_hits = mad = strips = fulls = 0
+    specs = tiling.patches
+    core = tiling.core
+    for i in range(0, len(specs), max(1, batch)):
+        chunk = specs[i : i + max(1, batch)]
+        strip_flags = []
+        for p in chunk:
+            x0, y0, z0 = p.start
+            strip_flags.append(
+                deep_reuse and x0 > 0 and x0 % core == 0 and p.start in halo_ready
+            )
+        for group_is_strip in (False, True):
+            for p, is_strip in zip(chunk, strip_flags):
+                if is_strip != group_is_strip:
+                    continue
+                keys = tiling.segment_keys(p)
+                use = keys[n_seg - q :] if is_strip else keys
+                for key in use:
+                    if key in cache:
+                        seg_hits += 1
+                    else:
+                        cache.add(key)
+                        seg_fft += 1
+                if is_strip:
+                    mad += q
+                    strips += 1
+                else:
+                    mad += n_seg
+                    fulls += 1
+        if deep_reuse:
+            for p in chunk:
+                x0, y0, z0 = p.start
+                if x0 % core == 0:
+                    halo_ready.add((x0 + core, y0, z0))
+    return SweepCounts(seg_fft, seg_hits, mad, strips, fulls)
+
+
 def tile_for_net(
     vol_shape: Sequence[int], net: ConvNetConfig, m: int
 ) -> VolumeTiling:
