@@ -19,15 +19,26 @@ predicted sweep counters next to the measured ones (they must agree
 exactly; ``tests/test_sweep_accounting.py`` pins it).
 
 Run:  PYTHONPATH=src python benchmarks/volume_throughput.py [--m 2]
-      [--quick] [--json out.json]
+      [--quick] [--json out.json] [--ram-budget BYTES]
 
-``--json`` writes per-row vox/s + predicted vox/s + reuse counters so the
-perf trajectory can be tracked across PRs (CI uploads it as an artifact);
-``--quick`` shrinks the geometry and repetitions for a CI-sized run.
+``--json`` writes per-row vox/s + predicted vox/s + reuse counters +
+memory counters (``peak_device_bytes`` measured by the executor's ledger,
+``predicted_memory`` from ``Plan.memory``) so the perf trajectory can be
+tracked across PRs (CI uploads it as an artifact); ``--quick`` shrinks
+the geometry and repetitions for a CI-sized run.
+
+``--ram-budget`` (ISSUE 5) solves the overlap-save rows under the paper's
+RAM constraint: their plans carry the budget, the executor runs them
+host-staged (the volume never becomes device-resident in full), and the
+report pins measured peak device bytes against the predicted footprint.
+It also emits a planner-side **budget sweep** — throughput vs. RAM, the
+paper's Fig. 5 analog — showing where a faster primitive's patch stops
+fitting and a slower-but-leaner one takes over.
 """
 
 import argparse
 import json
+import math
 
 import jax
 import numpy as np
@@ -91,6 +102,11 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
                     and c.strip_patches == s["deep_strip_patches"]
                 )
                 extra += f"  planner-predicted={'match' if ok else 'MISMATCH'}"
+        if plan.ram_budget is not None:
+            extra += (
+                f"  peak={s['peak_device_bytes']/2**20:.2f}"
+                f"/{plan.ram_budget/2**20:.2f}MiB"
+            )
         print(
             f"{name:<18s} n_in={plan.n_in:>3d} S={plan.batch} "
             f"patches={s['patches']:>3.0f} waste={s['waste_fraction']:.2f}  "
@@ -105,6 +121,27 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
             "waste_fraction": s["waste_fraction"],
             "patches": s["patches"],
             "seconds": s["seconds"],
+            # memory counters (ISSUE 5): measured executor ledger peak vs.
+            # the plan's predicted footprint; None when no model applies
+            "peak_device_bytes": s["peak_device_bytes"],
+            "predicted_peak_device_bytes": (
+                None
+                if math.isnan(s["predicted_peak_device_bytes"])
+                else s["predicted_peak_device_bytes"]
+            ),
+            "ram_budget": plan.ram_budget,
+            "predicted_memory": (
+                None
+                if plan.memory is None
+                else {
+                    "input_bytes": plan.memory.input_bytes,
+                    "output_bytes": plan.memory.output_bytes,
+                    "spectra_bytes": plan.memory.spectra_bytes,
+                    "scratch_bytes": plan.memory.scratch_bytes,
+                    "sweep_cache_bytes": plan.memory.sweep_cache_bytes,
+                    "device_bytes": plan.memory.device_bytes,
+                }
+            ),
         }
         row.update({k: s[k] for k in REUSE_KEYS})
         if plan.sweep is not None:
@@ -119,6 +156,55 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
     return rows
 
 
+def budget_sweep(shape, batch, max_m) -> list:
+    """Planner-side throughput-vs-RAM curve (the paper's Fig. 5 analog).
+
+    Re-runs the constrained search at a ladder of budgets below the
+    unconstrained plan's working set; each row records the winning
+    first-conv primitive, fragment size, and predicted throughput, plus
+    how many (prim, patch) points the budget rejected — the crossover
+    where a faster primitive's patch stops fitting is visible as the
+    winner changing down the ladder.
+    """
+    first_conv = next(i for i, l in enumerate(NET.layers) if l.kind == "conv")
+    # anchor the ladder on the memory-hungriest primitive at the largest
+    # patch (whole-patch FFT working set): the top rung admits everything,
+    # the lower rungs progressively reject the fat primitives
+    anchor = planner.plan_single(
+        NET, TPU_V5E, max_m=max_m, batches=(batch,),
+        conv_prims=("fft_cached",), strategy_name="anchor",
+        ram_budget=float("inf"),
+    )
+    rows = []
+    for frac in (1.0, 0.5, 0.25, 0.12, 0.06):
+        budget = anchor.memory.device_bytes * frac
+        pts: list = []
+        plan = planner.plan_single(
+            NET, TPU_V5E, max_m=max_m, batches=(batch,),
+            volume_shape=shape, ram_budget=budget, infeasible=pts,
+        )
+        row = {
+            "ram_budget": budget,
+            "feasible": plan is not None,
+            "first_conv_prim": plan.prims[first_conv] if plan else None,
+            "m": plan.m_final if plan else None,
+            "predicted_voxps": plan.throughput if plan else 0.0,
+            "infeasible_points": len(pts),
+        }
+        rows.append(row)
+        print(
+            f"budget={budget/2**20:8.2f} MiB  "
+            + (
+                f"prim={row['first_conv_prim']:<12s} m={row['m']} "
+                f"predicted={row['predicted_voxps']:>14,.0f} vox/s  "
+                f"rejected={len(pts)}"
+                if plan
+                else f"infeasible ({len(pts)} rejected points)"
+            )
+        )
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=2)
@@ -128,6 +214,10 @@ def main(argv=None) -> None:
                     help="write machine-readable per-row results here")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run: m=1, batch=1, small volume, 1 rep")
+    ap.add_argument("--ram-budget", type=float, default=None,
+                    help="device RAM budget in bytes for the overlap_save "
+                         "rows (plans stream host-staged and pin measured "
+                         "peak_device_bytes against the prediction)")
     args = ap.parse_args(argv)
     if args.quick:
         args.m, args.batch, args.reps = 1, 1, 1
@@ -172,11 +262,12 @@ def main(argv=None) -> None:
         "overlap_save": (planner.plan_fixed(
             NET, TPU_V5E, os_prims, m=args.m, batch=args.batch,
             strategy_name="overlap_save", volume_shape=shape,
-            deep_reuse=False,
+            deep_reuse=False, ram_budget=args.ram_budget,
         ), False),
         "overlap_save+deep": (planner.plan_fixed(
             NET, TPU_V5E, os_prims, m=args.m, batch=args.batch,
             strategy_name="overlap_save_deep", volume_shape=shape,
+            ram_budget=args.ram_budget,
         ), True),
         "baseline_naive": (planner.plan_single(
             NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
@@ -207,6 +298,8 @@ def main(argv=None) -> None:
              / rows["overlap_save"]["measured_voxps"])
         print(f"overlap_save+deep / overlap_save: {r:.2f}x "
               "(deeper-layer activation reuse across patches)")
+    print("-- throughput vs. RAM budget (planner, Fig. 5 analog) --")
+    sweep_rows = budget_sweep(shape, args.batch, max(args.m, 2))
     if args.json:
         payload = {
             "net": NET.name,
@@ -215,7 +308,9 @@ def main(argv=None) -> None:
             "batch": args.batch,
             "reps": args.reps,
             "quick": args.quick,
+            "ram_budget": args.ram_budget,
             "rows": rows,
+            "budget_sweep": sweep_rows,
         }
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)

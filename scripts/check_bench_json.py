@@ -1,0 +1,69 @@
+"""Gate the benchmark JSON breadcrumb's *shape* (not its wall clocks).
+
+CI runs ``benchmarks/volume_throughput.py --quick --ram-budget ...`` and
+then this check: every row must carry the ISSUE-5 memory counters, the
+budget-sweep block must exist, and any row solved under a RAM budget must
+report a measured peak within it.  Perf numbers stay advisory; a missing
+counter is a regression in the instrumentation contract and fails.
+
+Usage: python scripts/check_bench_json.py BENCH_volume_throughput.json
+"""
+
+import json
+import sys
+
+REQUIRED_ROW_KEYS = (
+    "measured_voxps",
+    "predicted_voxps",
+    "peak_device_bytes",
+    "predicted_peak_device_bytes",
+    "predicted_memory",
+    "ram_budget",
+)
+
+
+def check(path: str) -> int:
+    with open(path) as fh:
+        payload = json.load(fh)
+    errors = []
+    rows = payload.get("rows")
+    if not rows:
+        errors.append("no rows in payload")
+    for name, row in (rows or {}).items():
+        for key in REQUIRED_ROW_KEYS:
+            if key not in row:
+                errors.append(f"row {name!r}: missing {key!r}")
+        peak = row.get("peak_device_bytes")
+        if not isinstance(peak, (int, float)) or peak <= 0:
+            errors.append(f"row {name!r}: peak_device_bytes not positive: {peak!r}")
+        budget = row.get("ram_budget")
+        if budget is not None and peak is not None and peak > budget:
+            errors.append(
+                f"row {name!r}: measured peak {peak:.0f} exceeds "
+                f"ram_budget {budget:.0f}"
+            )
+    sweep = payload.get("budget_sweep")
+    if not sweep:
+        errors.append("missing budget_sweep block")
+    else:
+        for i, row in enumerate(sweep):
+            for key in ("ram_budget", "feasible", "predicted_voxps"):
+                if key not in row:
+                    errors.append(f"budget_sweep[{i}]: missing {key!r}")
+    if payload.get("ram_budget") is not None:
+        budgeted = [
+            name for name, row in (rows or {}).items()
+            if row.get("ram_budget") is not None
+        ]
+        if not budgeted:
+            errors.append("--ram-budget was set but no row carries it")
+    for e in errors:
+        print(f"BENCH JSON: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"BENCH JSON ok: {len(rows)} rows, {len(sweep)} budget-sweep rows")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_volume_throughput.json"))

@@ -18,6 +18,14 @@ layer-0 segment grid, deep activation reuse) the executor will actually
 run.  ``PlanGeometry.local()`` (the default) prices the primitive
 self-contained; the planner passes sweep geometries so plans are priced
 against sweep-level amortization, ZNNi's actual throughput argument.
+
+Alongside time, every cost carries a ``MemoryFootprint`` on
+``LayerCost.memory`` — the decomposed device working set (input/output/
+resident-spectra/scratch bytes per patch, plus sweep-cache bytes sized
+from the geometry's ``plane_patches``).  This is the RAM axis of the
+paper's constrained optimization: the planner's ``ram_budget`` search
+rejects (prim, patch) points whose footprint does not fit (see
+docs/architecture.md, "Memory model & streaming").
 """
 
 from __future__ import annotations
@@ -87,6 +95,11 @@ class PlanGeometry:
     layer: int = -1
     new_x: int = 0
     seg_fft_per_patch: float = -1.0
+    # patches per x-plane of the sweep (n_y · n_z starts): sizes the
+    # sweep-resident caches — each (y, z) patch row keeps its own segment
+    # spectra and activation halos alive across plane steps.  0 = unknown
+    # (cost functions must then charge no sweep-cache bytes).
+    plane_patches: int = 0
 
     @classmethod
     def local(cls) -> "PlanGeometry":
@@ -105,20 +118,130 @@ class PlanGeometry:
 _LOCAL_GEOMETRY = PlanGeometry()
 
 
+# ---------------------------------------------------------------------------
+# MemoryFootprint: the device working set a primitive needs to run
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MemoryFootprint:
+    """Peak device working-set estimate, decomposed (bytes).
+
+    ZNNi's constrained optimization is over RAM, not time: "an apparently
+    slower algorithm may end up having higher throughput if it can process
+    a larger image within the constraint of the available RAM" (§1).  This
+    is the RAM side of every ``LayerCost``: what must be device-resident
+    for the primitive to run one (batch of) patch(es).
+
+    * ``input_bytes`` / ``output_bytes`` — the dense layer input/output
+      tensors for the batch.
+    * ``spectra_bytes`` — *resident* prepared state: raw weights/biases
+      plus cached kernel spectra (``fft_cached``, ``overlap_save``) that
+      live for the whole plan, not per call.
+    * ``scratch_bytes`` — transient per-call transform working set (input
+      /output spectra stages, Table II's overhead beyond in/out/state).
+    * ``sweep_cache_bytes`` — sweep-resident reuse caches priced from the
+      ``PlanGeometry``: layer-0 segment spectra kept across x-planes and
+      per-layer activation halos under deep reuse.  0 without a sweep
+      context (``PlanGeometry.local()``) or when ``plane_patches`` is
+      unknown.
+
+    Plan-level footprints (``planner``): components are *at the peak
+    step* of the executor's schedule, so ``device_bytes`` is the peak
+    itself, not an independent-maxima overestimate.
+    """
+
+    input_bytes: float = 0.0
+    output_bytes: float = 0.0
+    spectra_bytes: float = 0.0
+    scratch_bytes: float = 0.0
+    sweep_cache_bytes: float = 0.0
+
+    @property
+    def device_bytes(self) -> float:
+        """The budget axis: total peak device working set."""
+        return (
+            self.input_bytes
+            + self.output_bytes
+            + self.spectra_bytes
+            + self.scratch_bytes
+            + self.sweep_cache_bytes
+        )
+
+    def worst(self, other: "MemoryFootprint") -> "MemoryFootprint":
+        """Component-wise max: a footprint that fits the worst patch."""
+        return MemoryFootprint(
+            max(self.input_bytes, other.input_bytes),
+            max(self.output_bytes, other.output_bytes),
+            max(self.spectra_bytes, other.spectra_bytes),
+            max(self.scratch_bytes, other.scratch_bytes),
+            max(self.sweep_cache_bytes, other.sweep_cache_bytes),
+        )
+
+
+def _footprint(
+    inp: float, out: float, resident: float, peak: float, sweep: float = 0.0
+) -> MemoryFootprint:
+    """Footprint from a primitive's stage peak: whatever the peak needs
+    beyond the dense in/out tensors and the resident state is scratch."""
+    return MemoryFootprint(
+        inp, out, resident, max(0.0, peak - inp - out - resident), sweep
+    )
+
+
+def _halo_sweep_bytes(
+    S: int, f: int, n: Tuple[int, ...], size: int, geom: Optional[PlanGeometry]
+) -> float:
+    """Sweep-resident activation-halo bytes this layer contributes.
+
+    Under deep reuse every patch caches the trailing ``size - 1``
+    x-columns of this layer's input for its x-successor; entries for two
+    x-planes are live at once (the plane being consumed — evicted only at
+    the next plane's first chunk — plus the freshly stored one).
+    ``S / geom.batch`` is the per-patch fragment expansion.
+    """
+    if (
+        geom is None
+        or not (geom.is_sweep and geom.deep_reuse)
+        or geom.layer <= 0
+        or geom.plane_patches <= 0
+    ):
+        return 0.0
+    per_patch = (S / max(1, geom.batch)) * f * (size - 1) * n[1] * n[2] * F32
+    return 2.0 * geom.plane_patches * per_patch
+
+
+def _with_sweep_cache(c: "LayerCost", extra: float) -> "LayerCost":
+    if extra <= 0.0:
+        return c
+    m = c.memory if c.memory is not None else MemoryFootprint()
+    return dataclasses.replace(
+        c,
+        memory=dataclasses.replace(
+            m, sweep_cache_bytes=m.sweep_cache_bytes + extra
+        ),
+    )
+
+
 def _strip_blend(full: "LayerCost", strip: "LayerCost", frac: float) -> "LayerCost":
     """Sweep-average of interior (strip) and edge (full) patch costs.
 
-    flops/hbm/coll average linearly over the patch mix; peak must fit the
-    WORST patch, so it takes the max.
+    flops/hbm/coll average linearly over the patch mix; peak (and the
+    memory footprint) must fit the WORST patch, so they take the max.
     """
     if frac <= 0.0:
         return full
     w = 1.0 - frac
+    if full.memory is not None and strip.memory is not None:
+        mem = full.memory.worst(strip.memory)
+    else:
+        mem = full.memory
     return LayerCost(
         w * full.flops + frac * strip.flops,
         w * full.hbm_bytes + frac * strip.hbm_bytes,
         max(full.peak_bytes, strip.peak_bytes),
         w * full.coll_bytes + frac * strip.coll_bytes,
+        memory=mem,
     )
 
 
@@ -182,6 +305,9 @@ class LayerCost:
     hbm_bytes: float  # streamed bytes (roofline memory term)
     peak_bytes: float  # peak live memory (Table II analogue)
     coll_bytes: float = 0.0  # inter-chip bytes (streamed/spatial modes)
+    # decomposed device working set (the RAM-budget axis); None only for
+    # hand-built costs that never meet a ram_budget check
+    memory: Optional[MemoryFootprint] = None
 
     def time(self, hw: HardwareSpec, chips: int = 1) -> float:
         compute = self.flops / (chips * hw.peak_flops)
@@ -198,19 +324,21 @@ class LayerCost:
 def _conv_direct_base(S: int, f: int, fp: int, n: Tuple[int, ...], k: int) -> LayerCost:
     npr = tuple(x - k + 1 for x in n)
     flops = 2.0 * S * fp * f * _vol(npr) * k**3  # Table I: S f' f n'³ k³ MACs
-    w_bytes = fp * f * k**3 * F32
-    io = (S * f * _vol(n) + S * fp * _vol(npr)) * F32
+    w_bytes = fp * f * k**3 * F32 + fp * F32
+    inp = S * f * _vol(n) * F32
+    out = S * fp * _vol(npr) * F32
     # each output tile re-reads its input halo once; weights re-read per tile
-    hbm = io + w_bytes
-    peak = io + w_bytes
-    return LayerCost(flops, hbm, peak)
+    hbm = inp + out + w_bytes
+    peak = inp + out + w_bytes
+    return LayerCost(flops, hbm, peak, memory=_footprint(inp, out, w_bytes, peak))
 
 
 def conv_direct_cost(
     S: int, f: int, fp: int, n: Tuple[int, ...], k: int,
     geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
-    return _deep_strip_cost(_conv_direct_base, S, f, fp, n, k, geom)
+    c = _deep_strip_cost(_conv_direct_base, S, f, fp, n, k, geom)
+    return _with_sweep_cache(c, _halo_sweep_bytes(S, f, n, k, geom))
 
 
 def _fft_common(
@@ -234,7 +362,8 @@ def conv_fft_data_parallel_cost(
 ) -> LayerCost:
     """Table II "FFT algorithm 1" (data parallel, Alg. 2): one kernel-spectrum
     buffer and one output-channel spectrum column live at a time."""
-    return _deep_strip_cost(_conv_fft_data_base, S, f, fp, n, k, geom)
+    c = _deep_strip_cost(_conv_fft_data_base, S, f, fp, n, k, geom)
+    return _with_sweep_cache(c, _halo_sweep_bytes(S, f, n, k, geom))
 
 
 def _conv_fft_data_base(
@@ -255,7 +384,9 @@ def _conv_fft_data_base(
         + 2 * S * fp * nt * C64
         + S * fp * vol_np * F32
     )
-    return LayerCost(flops, hbm, peak)
+    w_bytes = fp * f * k**3 * F32 + fp * F32  # raw weights resident per call
+    mem = _footprint(S * f * vol_n * F32, S * fp * vol_np * F32, w_bytes, peak)
+    return LayerCost(flops, hbm, peak, memory=mem)
 
 
 # number of concurrently-live kernel-spectrum buffers in the task-parallel
@@ -272,7 +403,8 @@ def conv_fft_task_parallel_cost(
     kernel spectra only T at a time.  Every spectrum is touched once: the
     fused MAD reads X once while streaming kernel chunks (the paper's
     "higher cache locality"; on TPU: one pass over HBM)."""
-    return _deep_strip_cost(_conv_fft_task_base, S, f, fp, n, k, geom)
+    c = _deep_strip_cost(_conv_fft_task_base, S, f, fp, n, k, geom)
+    return _with_sweep_cache(c, _halo_sweep_bytes(S, f, n, k, geom))
 
 
 def _conv_fft_task_base(
@@ -293,7 +425,9 @@ def _conv_fft_task_base(
         + 2 * S * fp * nt * C64
         + S * fp * vol_np * F32
     )
-    return LayerCost(flops, hbm, peak)
+    w_bytes = fp * f * k**3 * F32 + fp * F32
+    mem = _footprint(S * f * vol_n * F32, S * fp * vol_np * F32, w_bytes, peak)
+    return LayerCost(flops, hbm, peak, memory=mem)
 
 
 def conv_fft_cached_kernels_cost(
@@ -306,7 +440,8 @@ def conv_fft_cached_kernels_cost(
     FFT flops and the raw kernel-weights HBM read (spectra are resident,
     the f'·f·k³ weights are never re-read at run time); spectra storage is
     still charged to peak."""
-    return _deep_strip_cost(_conv_fft_cached_base, S, f, fp, n, k, geom)
+    c = _deep_strip_cost(_conv_fft_cached_base, S, f, fp, n, k, geom)
+    return _with_sweep_cache(c, _halo_sweep_bytes(S, f, n, k, geom))
 
 
 def _conv_fft_cached_base(
@@ -314,9 +449,19 @@ def _conv_fft_cached_base(
 ) -> LayerCost:
     c = _conv_fft_task_base(S, f, fp, n, k)
     fft_shape = fft_optimal_shape(n)
+    nt = _nt(fft_shape)
     ker_fft = fp * f * pruned_fft_flops((k, k, k), fft_shape)
     w_bytes = fp * f * k**3 * F32
-    return LayerCost(c.flops - ker_fft, c.hbm_bytes - w_bytes, c.peak_bytes)
+    # resident state is the cached kernel spectra (computed once per plan),
+    # not the raw weights
+    resident = fp * f * nt * C64 + fp * F32
+    mem = _footprint(
+        S * f * _vol(n) * F32,
+        S * fp * _vol(tuple(x - k + 1 for x in n)) * F32,
+        resident,
+        c.peak_bytes,
+    )
+    return LayerCost(c.flops - ker_fft, c.hbm_bytes - w_bytes, c.peak_bytes, memory=mem)
 
 
 def conv_overlap_save_cost(
@@ -427,7 +572,18 @@ def conv_overlap_save_cost(
         + S * fp * vol_np * F32,  # MAD: one output column + dense accumulator
         S * fp * (vol_np * F32 + nt * C64),  # inverse + dense output
     )
-    return LayerCost(flops, hbm, peak)
+    resident = fp * f * nt * C64 + fp * F32  # cached kernel spectra + bias
+    sweep_bytes = 0.0
+    if at_input and g.plane_patches > 0:
+        # each (y, z) patch row keeps its segment spectra live across
+        # plane steps: n_seg per-segment (f, ñ) complex buffers per row
+        sweep_bytes = g.plane_patches * n_seg * f * nt * C64
+    elif g.is_sweep and g.deep_reuse and g.layer > 0 and g.plane_patches > 0:
+        sweep_bytes = _halo_sweep_bytes(S, f, n3, int(k), g)
+    mem = _footprint(
+        S * f * vol_n * F32, S * fp * vol_np * F32, resident, peak, sweep_bytes
+    )
+    return LayerCost(flops, hbm, peak, memory=mem)
 
 
 # ---------------------------------------------------------------------------
@@ -439,14 +595,17 @@ def _pool_base(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
     vol = _vol(n)
     flops = 1.0 * S * f * vol  # Table I: S f n³ comparisons
     hbm = 2 * S * f * vol * F32
-    return LayerCost(flops, hbm, hbm)
+    inp = S * f * vol * F32
+    out = S * f * _vol(tuple(x // p for x in n)) * F32
+    return LayerCost(flops, hbm, hbm, memory=_footprint(inp, out, 0.0, hbm))
 
 
 def pool_cost(
     S: int, f: int, n: Tuple[int, ...], p: int,
     geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
-    return _deep_strip_pool_cost(_pool_base, S, f, n, p, geom)
+    c = _deep_strip_pool_cost(_pool_base, S, f, n, p, geom)
+    return _with_sweep_cache(c, _halo_sweep_bytes(S, f, n, p, geom))
 
 
 def _mpf_base(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
@@ -454,14 +613,17 @@ def _mpf_base(S: int, f: int, n: Tuple[int, ...], p: int) -> LayerCost:
     flops = 1.0 * S * f * vol * p**3  # Table I: S f n³ p³
     m3 = _vol(tuple(x // p for x in n)) * p**3
     hbm = (S * f * vol + S * f * m3) * F32
-    return LayerCost(flops, hbm, hbm)
+    inp = S * f * vol * F32
+    out = S * f * m3 * F32
+    return LayerCost(flops, hbm, hbm, memory=_footprint(inp, out, 0.0, hbm))
 
 
 def mpf_cost(
     S: int, f: int, n: Tuple[int, ...], p: int,
     geom: Optional[PlanGeometry] = None,
 ) -> LayerCost:
-    return _deep_strip_pool_cost(_mpf_base, S, f, n, p, geom)
+    c = _deep_strip_pool_cost(_mpf_base, S, f, n, p, geom)
+    return _with_sweep_cache(c, _halo_sweep_bytes(S, f, n, p, geom))
 
 
 # ---------------------------------------------------------------------------

@@ -31,19 +31,46 @@ same search under different resource envelopes:
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from ..configs.base import ConvNetConfig
 from .cost_model import (
+    C64,
     CONV_PRIMS,
+    F32,
     LayerCost,
+    MemoryFootprint,
     PlanGeometry,
+    _nt,
     conv_cost,
     mpf_cost,
     pool_cost,
 )
 from .hw import HardwareSpec
+
+
+@dataclass(frozen=True)
+class InfeasiblePoint:
+    """A (primitive, patch-size) point the RAM budget rejected.
+
+    The search reports these instead of silently omitting them, so
+    benchmark tables stay rectangular and the paper's crossover — a
+    slower primitive winning because the faster one's patch no longer
+    fits — is observable in ``plan_all_strategies`` output.  ``layer``
+    is -1 for a plan-level rejection (the combined working set of an
+    otherwise per-layer-feasible plan).
+    """
+
+    strategy: str
+    prim: str
+    m: int
+    batch: int
+    layer: int
+    reason: str
+    needed_bytes: float
+    budget_bytes: float
 
 
 @dataclass(frozen=True)
@@ -82,6 +109,15 @@ class Plan:
     #   executor's last_stats must reproduce 1:1 for the target volume.
     geometry: Optional[PlanGeometry] = None
     sweep: Optional[object] = None  # volume.tiler.SweepCounts
+    # -- memory model ---------------------------------------------------------
+    # memory: predicted peak device working set (cost_model.MemoryFootprint).
+    #   Sweep-aware plans under a ram_budget carry the exact streaming-
+    #   schedule simulation (components at the peak step); other plans carry
+    #   the analytic per-patch model.  ram_budget: the budget the plan was
+    #   solved under (None = unconstrained); the executor switches to
+    #   host-staged streaming when a plan carries one.
+    memory: Optional[MemoryFootprint] = None
+    ram_budget: Optional[float] = None
 
     @property
     def throughput(self) -> float:
@@ -168,11 +204,13 @@ def sweep_geometry(
         strip_segments=tail_segments(spec, core),
     )
     n = tiling.n_patches
+    plane = len({(p.start[1], p.start[2]) for p in tiling.patches})
     geom = PlanGeometry(
         core=core, fov=fov, batch=batch, n_patches=n,
         interior_frac=counts.strip_patches / n,
         seg_core=core, deep_reuse=deep_reuse,
         seg_fft_per_patch=counts.seg_fft / n,
+        plane_patches=plane,
     )
     return geom, counts
 
@@ -184,6 +222,184 @@ def _layer_geom(
     if geom is None:
         return None
     return geom.at_layer(i, new_x=geom.core // P_cur if P_cur else 0)
+
+
+# ---------------------------------------------------------------------------
+# The memory model: per-plan device working sets
+# ---------------------------------------------------------------------------
+
+
+def stream_unit_bytes(
+    net: ConvNetConfig,
+    prims: Sequence[str],
+    m: int,
+    *,
+    deep_reuse: bool = True,
+) -> dict:
+    """Byte weights of the streaming executor's device-resident objects.
+
+    Walks the net at fragment size ``m`` exactly as ``compile_plan`` +
+    ``PlanExecutor._build_strip_plan`` do, and prices each object class
+    analytically (float32/complex64 element counts — deterministic, no
+    params needed):
+
+    * ``state_bytes`` — raw conv params plus every cached kernel spectrum
+      (full-walk shapes AND, under ``deep_reuse``, the strip-walk shapes);
+    * ``seg_bytes`` — ONE cached layer-0 segment spectrum (the sweep
+      cache's unit of account);
+    * ``halo_entry_bytes`` — one patch's per-layer activation halos;
+    * ``out_patch_bytes`` — one patch's dense core output;
+    * ``span`` — axis-0 input voxels a staged slab must cover.
+
+    ``PlanExecutor.predict_memory`` and ``plan_stream_memory`` both feed
+    these into ``tiler.predict_stream_peak``, so the planner's prediction
+    and the executor's measured ledger count the same objects.
+    """
+    from .overlap_save import plan_overlap_save  # lazy: imports pruned_fft
+    from .primitives import plan_input_size
+    from .pruned_fft import fft_optimal_shape
+
+    prims = tuple(prims)
+    P = net.total_pooling()
+    core = m * P
+    n_in = plan_input_size(net, prims, m)
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    out_ch = [l for l in net.layers if l.kind == "conv"][-1].out_channels
+    seg_bytes = 0.0
+    span = n_in
+    state = 0.0
+    halo_entry = 0.0
+    n, f, P_cur, frag = n_in, net.in_channels, 1, 1
+    for i, layer in enumerate(net.layers):
+        if i > 0 and deep_reuse:
+            # strip-walk geometry at this layer (PlanExecutor._build_strip_plan)
+            new_x = core // P_cur
+            h = layer.size - 1
+            w_in = new_x + h
+            halo_entry += frag * f * h * n * n * F32
+            if layer.kind == "conv" and w_in <= n:
+                fp = layer.out_channels
+                if prims[i] == "fft_cached":
+                    state += fp * f * _nt(fft_optimal_shape((w_in, n, n))) * C64
+                elif prims[i] == "overlap_save":
+                    sp = plan_overlap_save((w_in, n, n), (layer.size,) * 3, None)
+                    state += fp * f * _nt(sp.fft_shape) * C64
+        if layer.kind == "conv":
+            fp, k = layer.out_channels, layer.size
+            state += fp * f * k**3 * F32 + fp * F32  # raw weights + bias
+            if prims[i] == "fft_cached":
+                state += fp * f * _nt(fft_optimal_shape((n, n, n))) * C64
+            elif prims[i] == "overlap_save":
+                seg = core if i == first_conv else None
+                sp = plan_overlap_save((n, n, n), (k,) * 3, seg)
+                state += fp * f * _nt(sp.fft_shape) * C64
+                if i == first_conv:
+                    seg_bytes = f * _nt(sp.fft_shape) * C64
+                    span = sp.span
+            n = n - k + 1
+            f = fp
+        elif prims[i] == "mpf":
+            n //= layer.size
+            P_cur *= layer.size
+            frag *= layer.size**3
+        else:
+            n //= layer.size
+    return {
+        "state_bytes": state,
+        "seg_bytes": seg_bytes,
+        "halo_entry_bytes": halo_entry if deep_reuse else 0.0,
+        "out_patch_bytes": out_ch * float(core) ** 3 * F32,
+        "span": span,
+        "in_channels": net.in_channels,
+        "extent": core + net.field_of_view() - 1,
+    }
+
+
+def plan_stream_memory(
+    net: ConvNetConfig,
+    prims: Sequence[str],
+    m: int,
+    volume_shape: Sequence[int],
+    *,
+    batch: int = 1,
+    deep_reuse: bool = True,
+    streaming: bool = True,
+) -> MemoryFootprint:
+    """Exact peak device working set for sweeping ``volume_shape``.
+
+    Simulates the streaming executor's schedule over the concrete tiling
+    (``tiler.predict_stream_peak``) with the analytic byte weights of
+    ``stream_unit_bytes`` — the prediction ``Plan.memory`` carries and
+    the executor's measured ``peak_device_bytes`` must land within 10%
+    of.  ``streaming=False`` models the dense-materialized path (whole
+    padded volume device-resident).
+    """
+    from ..volume.tiler import (  # lazy: keep core importable without volume
+        HaloSpec,
+        predict_stream_peak,
+        tile_volume,
+    )
+    from .overlap_save import plan_overlap_save, tail_segments
+
+    units = stream_unit_bytes(net, prims, m, deep_reuse=deep_reuse)
+    P = net.total_pooling()
+    fov = net.field_of_view()
+    core = m * P
+    extent = core + fov - 1
+    k0 = next(l.size for l in net.layers if l.kind == "conv")
+    spec = plan_overlap_save((extent, extent, extent), (k0,) * 3, core)
+    halo = HaloSpec(spec.seg_core, spec.seg_extent, spec.starts)
+    tiling = tile_volume(tuple(volume_shape), core=core, fov=fov, halo=halo)
+    padded = [x + p for x, p in zip(tiling.vol_shape, tiling.pad)]
+    f0 = units["in_channels"]
+    slab_bytes = f0 * spec.span * padded[1] * padded[2] * F32
+    max_x0 = max(0, padded[0] - extent)
+    x_ext = max(padded[0], max_x0 + spec.span)
+    dense_vol_bytes = f0 * x_ext * padded[1] * padded[2] * F32
+    peak = predict_stream_peak(
+        tiling, batch=batch, deep_reuse=deep_reuse,
+        strip_segments=tail_segments(spec, core),
+        seg_bytes=units["seg_bytes"],
+        halo_entry_bytes=units["halo_entry_bytes"],
+        out_patch_bytes=units["out_patch_bytes"],
+        slab_bytes=slab_bytes,
+        base_bytes=units["state_bytes"],
+        streaming=streaming,
+        dense_vol_bytes=dense_vol_bytes,
+    )
+    return MemoryFootprint(
+        input_bytes=peak.slab_bytes,
+        output_bytes=peak.out_bytes,
+        spectra_bytes=peak.base_bytes,
+        scratch_bytes=peak.scratch_bytes,
+        sweep_cache_bytes=peak.cache_bytes,
+    )
+
+
+def _plan_memory_analytic(
+    choices: Sequence[LayerChoice],
+) -> MemoryFootprint:
+    """Per-patch device working set from the layer costs (no volume).
+
+    Resident state (weights + cached spectra) and sweep caches sum over
+    layers; the transient in/out/scratch working set is the worst single
+    layer's — layers run one at a time, on top of all resident state.
+    """
+    mems = [c.cost.memory for c in choices if c.cost.memory is not None]
+    if not mems:
+        return MemoryFootprint()
+    spectra = sum(mm.spectra_bytes for mm in mems)
+    sweep = sum(mm.sweep_cache_bytes for mm in mems)
+    worst = max(
+        mems, key=lambda mm: mm.input_bytes + mm.output_bytes + mm.scratch_bytes
+    )
+    return MemoryFootprint(
+        input_bytes=worst.input_bytes,
+        output_bytes=worst.output_bytes,
+        spectra_bytes=spectra,
+        scratch_bytes=worst.scratch_bytes,
+        sweep_cache_bytes=sweep,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +418,10 @@ def _walk(
     conv_prims: Sequence[str] = CONV_PRIMS,
     stream_collectives: bool = False,
     geom: Optional[PlanGeometry] = None,
+    ram_budget: Optional[float] = None,
+    m: int = 0,
+    strategy: str = "",
+    infeasible: Optional[List[InfeasiblePoint]] = None,
 ) -> Optional[List[LayerChoice]]:
     """Greedy per-layer fastest-feasible-primitive walk (§VI-A step 3).
 
@@ -210,7 +430,13 @@ def _walk(
     ``overlap_save`` conv, so if the first conv chooses another primitive
     the remaining layers fall back to context-free costing.
 
-    Returns None if some layer cannot fit the budget with any primitive.
+    ``ram_budget`` adds the paper's RAM constraint: a primitive whose
+    device working set (``LayerCost.memory``) does not fit is skipped —
+    and recorded in ``infeasible`` instead of silently omitted — so a
+    slower primitive can win the layer because the faster one's patch no
+    longer fits (ZNNi §1's throughput argument).
+
+    Returns None if some layer cannot fit the budgets with any primitive.
     """
     if not use_mpf:
         geom = None  # plain-pool plans sweep subsamplings: no reuse grid
@@ -218,6 +444,20 @@ def _walk(
     S_cur, f_cur, n_cur = S, net.in_channels, n_in
     P_cur = 1
     first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
+
+    def _ram_ok(c: LayerCost, prim: str, i: int) -> bool:
+        if ram_budget is None or c.memory is None:
+            return True
+        need = c.memory.device_bytes
+        if need <= ram_budget:
+            return True
+        if infeasible is not None:
+            infeasible.append(InfeasiblePoint(
+                strategy, prim, m, S, i, "exceeds ram_budget",
+                need, ram_budget,
+            ))
+        return False
+
     for i, layer in enumerate(net.layers):
         n3 = (n_cur,) * 3
         g = _layer_geom(geom, i, P_cur)
@@ -226,11 +466,15 @@ def _walk(
             best: Optional[Tuple[float, str, LayerCost]] = None
             for prim in conv_prims:
                 c = conv_cost(prim, S_cur, f_cur, fp, n3, layer.size, g)
+                if not _ram_ok(c, prim, i):
+                    continue
                 if stream_collectives:
                     # sub-layer streaming: weights+spectra sharded over the
                     # mesh; each chip gathers its chunk once per layer.
                     coll = c.peak_bytes / chips * (chips - 1) / chips
-                    c = LayerCost(c.flops, c.hbm_bytes, c.peak_bytes / chips, coll)
+                    c = dataclasses.replace(
+                        c, peak_bytes=c.peak_bytes / chips, coll_bytes=coll
+                    )
                 if c.peak_bytes > mem_budget:
                     continue
                 t = c.time(hw, chips)
@@ -252,8 +496,12 @@ def _walk(
                 if (n_cur + 1) % p != 0:
                     return None
                 c = mpf_cost(S_cur, f_cur, n3, p, g)
+                if not _ram_ok(c, "mpf", i):
+                    return None
                 if stream_collectives:
-                    c = LayerCost(c.flops, c.hbm_bytes, c.peak_bytes / chips, 0.0)
+                    c = dataclasses.replace(
+                        c, peak_bytes=c.peak_bytes / chips, coll_bytes=0.0
+                    )
                 if c.peak_bytes > mem_budget:
                     return None
                 t = c.time(hw, chips)
@@ -268,6 +516,8 @@ def _walk(
                 if n_cur % p != 0:
                     return None
                 c = pool_cost(S_cur, f_cur, n3, p)
+                if not _ram_ok(c, "pool", i):
+                    return None
                 if c.peak_bytes > mem_budget:
                     return None
                 t = c.time(hw, chips)
@@ -315,6 +565,8 @@ def plan_single(
     stream_collectives: bool = False,
     volume_shape: Optional[Sequence[int]] = None,
     deep_reuse: bool = True,
+    ram_budget: Optional[float] = None,
+    infeasible: Optional[List[InfeasiblePoint]] = None,
 ) -> Optional[Plan]:
     """Best single-worker plan (the paper's CPU-only/GPU-only search).
 
@@ -325,10 +577,20 @@ def plan_single(
     and the winning plan records the predicted sweep counters the
     executor must reproduce.  Without it the search is context-free, as
     before.
+
+    ``ram_budget`` solves the paper's constrained optimization: each
+    candidate's device working set (per-layer ``LayerCost.memory``, plus
+    the plan-level combined footprint) must fit the budget; rejected
+    (prim, patch) points are appended to ``infeasible`` with a reason
+    rather than silently omitted.  The winning plan carries the budget
+    and its predicted ``memory`` footprint — the executor runs such
+    plans through host-staged streaming and pins its measured
+    ``peak_device_bytes`` against the prediction.
     """
     mem = hw.hbm_bytes if mem_bytes is None else mem_bytes
     best: Optional[Plan] = None
     fov = net.field_of_view()
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
     for S in batches:
         for m in range(1, max_m + 1):
             n_in = _n_in_for_m(net, m, use_mpf)
@@ -349,22 +611,37 @@ def plan_single(
                 net, S, n_in, use_mpf, hw, mem,
                 chips=chips, conv_prims=conv_prims,
                 stream_collectives=stream_collectives, geom=geom,
+                ram_budget=ram_budget, m=m, strategy=strategy_name,
+                infeasible=infeasible,
             )
             if choices is None:
                 continue
-            first_conv = next(
-                i for i, l in enumerate(net.layers) if l.kind == "conv"
-            )
             os_mix = choices[first_conv].prim == "overlap_save"
             total = sum(c.time_s for c in choices)
             vox = _out_voxels(net, S, m, use_mpf, n_in)
             peak = max(c.cost.peak_bytes for c in choices)
+            if os_mix and volume_shape is not None and ram_budget is not None:
+                # the exact streaming-schedule peak for THIS volume
+                memory = plan_stream_memory(
+                    net, tuple(c.prim for c in choices), m, volume_shape,
+                    batch=S, deep_reuse=deep_reuse,
+                )
+            else:
+                memory = _plan_memory_analytic(choices)
+            if ram_budget is not None and memory.device_bytes > ram_budget:
+                if infeasible is not None:
+                    infeasible.append(InfeasiblePoint(
+                        strategy_name, choices[first_conv].prim, m, S, -1,
+                        "exceeds ram_budget", memory.device_bytes, ram_budget,
+                    ))
+                continue
             plan = Plan(
                 net.name, strategy_name, chips, S, n_in, m,
                 tuple(choices), total, vox, peak,
                 fov=fov, core=m * net.total_pooling(),
                 geometry=geom if os_mix else None,
                 sweep=counts if os_mix else None,
+                memory=memory, ram_budget=ram_budget,
             )
             if best is None or plan.throughput > best.throughput:
                 best = plan
@@ -383,6 +660,8 @@ def plan_fixed(
     strategy_name: str = "fixed",
     volume_shape: Optional[Sequence[int]] = None,
     deep_reuse: bool = True,
+    ram_budget: Optional[float] = None,
+    infeasible: Optional[List[InfeasiblePoint]] = None,
 ) -> Optional[Plan]:
     """Price a FIXED per-layer primitive assignment (no search).
 
@@ -463,11 +742,29 @@ def plan_fixed(
     peak = max(c.cost.peak_bytes for c in choices)
     if peak > mem:
         return None
+    if geom is not None and volume_shape is not None:
+        # reuse-capable mix priced against a concrete volume: the memory
+        # model is the streaming schedule's exact simulated peak (the
+        # executor honors a carried ram_budget by streaming)
+        memory = plan_stream_memory(
+            net, prims, m, volume_shape, batch=batch, deep_reuse=deep_reuse,
+            streaming=ram_budget is not None,
+        )
+    else:
+        memory = _plan_memory_analytic(choices)
+    if ram_budget is not None and memory.device_bytes > ram_budget:
+        if infeasible is not None:
+            infeasible.append(InfeasiblePoint(
+                strategy_name, prims[first_conv], m, batch, -1,
+                "exceeds ram_budget", memory.device_bytes, ram_budget,
+            ))
+        return None
     return Plan(
         net.name, strategy_name, chips, batch, n_in, m,
         tuple(choices), total, vox, peak,
         fov=net.field_of_view(), core=m * net.total_pooling(),
         geometry=geom, sweep=counts,
+        memory=memory, ram_budget=ram_budget,
     )
 
 
@@ -527,6 +824,7 @@ def plan_pipeline2(
                     net.name, "pipeline2", 2 * chips_per_stage, S, n_in, m,
                     tuple(choices), stage, vox, peak, theta=theta,
                     fov=net.field_of_view(), core=m * net.total_pooling(),
+                    memory=_plan_memory_analytic(choices),
                 )
                 if best is None or plan.throughput > best.throughput:
                     best = plan
@@ -573,6 +871,7 @@ def plan_spatial(
                 net.name, "spatial", chips, S, n_in, m,
                 tuple(choices), total, vox, peak,
                 fov=net.field_of_view(), core=m * net.total_pooling(),
+                memory=_plan_memory_analytic(choices),
             )
             if best is None or plan.throughput > best.throughput:
                 best = plan
@@ -585,19 +884,37 @@ def plan_all_strategies(
     *,
     chips: int = 256,
     volume_shape: Optional[Sequence[int]] = None,
+    ram_budget: Optional[float] = None,
 ) -> dict:
     """All strategy searches; ``volume_shape`` makes the single-worker
     search sweep-aware (the multi-chip strategies execute through other
-    schedules and keep context-free costing)."""
-    return {
-        "single": plan_single(net, hw, volume_shape=volume_shape),
+    schedules and keep context-free costing).
+
+    ``ram_budget`` constrains the single-host searches (``single``,
+    ``baseline_naive``, ``direct_only``) to the paper's RAM envelope; the
+    multi-chip strategies keep their own aggregate-HBM envelopes.  The
+    returned dict always contains an extra ``"infeasible"`` key: the
+    tuple of (prim, patch-size) points the budget rejected, each with a
+    reason — benchmark tables stay rectangular, and the budget where a
+    faster primitive stops fitting (so a slower one wins) is visible.
+    """
+    infeasible: List[InfeasiblePoint] = []
+    out = {
+        "single": plan_single(
+            net, hw, volume_shape=volume_shape,
+            ram_budget=ram_budget, infeasible=infeasible,
+        ),
         "streamed": plan_streamed(net, hw, chips=chips),
         "pipeline2": plan_pipeline2(net, hw, chips_per_stage=chips // 2),
         "spatial": plan_spatial(net, hw, chips=chips),
         "baseline_naive": plan_single(
-            net, hw, use_mpf=False, strategy_name="baseline_naive"
+            net, hw, use_mpf=False, strategy_name="baseline_naive",
+            ram_budget=ram_budget, infeasible=infeasible,
         ),
         "direct_only": plan_single(
-            net, hw, conv_prims=("direct",), strategy_name="direct_only"
+            net, hw, conv_prims=("direct",), strategy_name="direct_only",
+            ram_budget=ram_budget, infeasible=infeasible,
         ),
     }
+    out["infeasible"] = tuple(infeasible)
+    return out

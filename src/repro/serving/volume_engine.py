@@ -25,6 +25,21 @@ Outputs are written only over the true dense range, so bucketing is exact
 ``executor.last_stats["retraces"]`` to see the distinct jit
 specializations stay flat as differently-sized requests stream through.
 
+Streaming completion (ISSUE 5): a dense output x-row is FINAL once every
+patch that writes it has run — with the x-major patch order that is
+plane-by-plane.  ``VolumeRequest.final_rows`` advances as planes
+complete and ``on_strip(lo, hi, strip)`` fires per finalized strip, so
+callers consume early partial results while the tail of the volume is
+still queued.
+
+Shared device budget (ISSUE 5): ``device_budget`` bounds the combined
+device working set of concurrent sweeps.  A tick defers *opening* a new
+sweep scope (slabs + spectra/halo caches, estimated by
+``PlanExecutor.sweep_bytes_estimate``) that would push the executor's
+ledger past the budget; open sweeps drain first, and one sweep is always
+admitted so the queue cannot stall.  Pass ``ram_budget`` to run the
+executor host-staged (see ``volume/executor.py``).
+
 The engine drives ``PlanExecutor.run_patch_batch`` (single fused step per
 tick).  pipeline2 plans are accepted — their primitives are identical; the
 two-stage scan schedule is an executor-level optimization used by
@@ -35,14 +50,20 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..configs.base import ConvNetConfig
 from ..core.planner import Plan
 from ..volume.executor import PlanExecutor
-from ..volume.tiler import VolumeTiling, extract_patch, pad_volume
+from ..volume.tiler import (
+    VolumeTiling,
+    extract_patch,
+    final_rows_after_plane,
+    pad_volume,
+    plane_starts,
+)
 
 
 @dataclass
@@ -52,6 +73,13 @@ class VolumeRequest:
     priority: int = 0  # higher = served first (ages up while waiting)
     out: Optional[np.ndarray] = None  # (out_ch, X-FOV+1, ...) when done
     done: bool = False
+    # streaming completion: dense output x-rows [0, final_rows) are FINAL
+    # (every contributing patch done — no later patch can rewrite them).
+    # ``on_strip(lo, hi, strip)`` fires as each new strip finalizes, with
+    # ``strip`` a VIEW of ``out[:, lo:hi]`` — early partial results while
+    # the rest of the volume is still queued.
+    final_rows: int = 0
+    on_strip: Optional[Callable[[int, int, np.ndarray], None]] = None
     # internal runtime state
     _tiling: Optional[VolumeTiling] = field(default=None, repr=False)
     _padded: Optional[np.ndarray] = field(default=None, repr=False)
@@ -60,6 +88,10 @@ class VolumeRequest:
     _sweep: Optional[int] = field(default=None, repr=False)  # spectra scope
     _seq: int = field(default=0, repr=False)  # submission order
     _submit_tick: int = field(default=0, repr=False)  # aging anchor
+    _plane_remaining: Optional[Dict[int, int]] = field(default=None, repr=False)
+    _plane_order: Tuple[int, ...] = field(default=(), repr=False)
+    _next_plane: int = field(default=0, repr=False)
+    _sweep_bytes_est: float = field(default=0.0, repr=False)
 
 
 class VolumeEngine:
@@ -78,14 +110,25 @@ class VolumeEngine:
         deep_reuse: bool = True,
         bucket_shapes: bool = True,
         age_ticks: int = 8,
+        ram_budget: Optional[float] = None,
+        streaming: Optional[bool] = None,
+        device_budget: Optional[float] = None,
     ):
         self.executor = PlanExecutor(
             params, net, plan, prims=prims, m=m, batch=batch,
             use_pallas=use_pallas, deep_reuse=deep_reuse,
+            ram_budget=ram_budget, streaming=streaming,
         )
         self.batch = self.executor.batch
         self.bucket_shapes = bucket_shapes
         self.age_ticks = max(1, age_ticks)
+        # shared device budget across concurrent sweeps: a tick defers
+        # OPENING new sweep scopes (device slabs + caches) that would push
+        # the executor's ledger past the budget; already-open sweeps drain
+        # first.  Defaults to ram_budget when only that is given.
+        self.device_budget = (
+            device_budget if device_budget is not None else ram_budget
+        )
         self.active: List[VolumeRequest] = []
         self.finished: List[VolumeRequest] = []
         self.ticks = 0
@@ -113,6 +156,16 @@ class VolumeEngine:
         req._seq = self._seq
         req._submit_tick = self.ticks
         req.done = False
+        # streaming completion bookkeeping: patches per x-plane; a plane's
+        # last write finalizes every output row no later plane can touch
+        req._plane_order = plane_starts(tiling)
+        req._plane_remaining = {x0: 0 for x0 in req._plane_order}
+        for p in tiling.patches:
+            req._plane_remaining[p.start[0]] += 1
+        req._next_plane = 0
+        req.final_rows = 0
+        if self.device_budget is not None and ex._os_reuse:
+            req._sweep_bytes_est = ex.sweep_bytes_estimate(shape)
         # the output buffer has the TRUE dense shape; patches over the
         # bucket padding write only their in-range columns (write_core
         # crops), so bucketing never leaks padded voxels into the result
@@ -146,15 +199,46 @@ class VolumeEngine:
 
     # -- tick ---------------------------------------------------------------
 
+    def _over_budget(self, req: VolumeRequest, pending_est: float) -> bool:
+        """Would serving ``req`` now open a sweep the device budget can't
+        absorb?  Already-open sweeps always proceed (they only shrink).
+        ``pending_est`` counts sweeps admitted EARLIER THIS TICK whose
+        ``begin_sweep`` has not run yet — without it two fresh requests
+        could each pass against the same ledger reading and jointly blow
+        the budget in one tick."""
+        if self.device_budget is None or not self.executor._os_reuse:
+            return False
+        if req._sweep is not None:
+            return False
+        return (
+            self.executor._ledger.current + pending_est + req._sweep_bytes_est
+            > self.device_budget
+        )
+
     def step(self) -> int:
         """One fused batch over the priority-ordered patch queue; returns
         the number of real (non-padding) patches processed."""
         items: List[Tuple[VolumeRequest, int]] = []
+        deferred: List[VolumeRequest] = []
+        pending_est = 0.0
         for req in self._ranked():
+            if self._over_budget(req, pending_est):
+                deferred.append(req)
+                continue
+            took = len(items)
             while req._patches and len(items) < self.batch:
                 items.append((req, req._patches.popleft()))
+            if len(items) > took and req._sweep is None:
+                pending_est += req._sweep_bytes_est
             if len(items) >= self.batch:
                 break
+        if not items and deferred:
+            # progress guarantee: when every runnable request is waiting on
+            # the budget, admit the highest-ranked one anyway (one sweep at
+            # a time always fits by construction of the estimate)
+            req = deferred[0]
+            while req._patches and len(items) < self.batch:
+                items.append((req, req._patches.popleft()))
         if not items:
             return 0
         ex = self.executor
@@ -200,6 +284,7 @@ class VolumeEngine:
         for (req, idx), y in zip(items, ys):
             ex.write_core(req.out, req._tiling, req._tiling.patches[idx], y)
             req._remaining -= 1
+            self._advance_strips(req, req._tiling.patches[idx].start[0])
             if req._remaining == 0:
                 req.done = True
                 req._padded = None  # drop the padded copy early
@@ -210,7 +295,32 @@ class VolumeEngine:
                 self.finished.append(req)
         self.ticks += 1
         ex.last_stats["retraces"] = len(ex._trace_keys)
+        # lifetime peak across all sweeps served so far (the shared budget
+        # the scheduler defends)
+        ex.last_stats["peak_device_bytes"] = ex._ledger.peak
         return len(items)
+
+    def _advance_strips(self, req: VolumeRequest, plane_x0: int) -> None:
+        """Finalize output strips whose contributing planes all completed.
+
+        Bucket padding is handled by clipping to the TRUE dense extent:
+        planes living entirely in the padding finalize zero new rows (no
+        callback fires for an empty strip).
+        """
+        req._plane_remaining[plane_x0] -= 1
+        while req._next_plane < len(req._plane_order):
+            x0 = req._plane_order[req._next_plane]
+            if req._plane_remaining[x0] > 0:
+                return
+            req._next_plane += 1
+            hi = min(
+                final_rows_after_plane(req._tiling, x0), req.out.shape[1]
+            )
+            lo = req.final_rows
+            if hi > lo:
+                req.final_rows = hi
+                if req.on_strip is not None:
+                    req.on_strip(lo, hi, req.out[:, lo:hi])
 
     def run_until_drained(self, max_ticks: int = 100_000) -> List[VolumeRequest]:
         for _ in range(max_ticks):

@@ -33,9 +33,14 @@ over a volume far larger than any single patch:
   walking the same CompiledPlan.  Plans whose first conv is
   ``overlap_save`` additionally reuse layer-0 input segment spectra
   between x-adjacent patches within a sweep (the FOV overlap transformed
-  once — see ``core/overlap_save.py`` and docs/architecture.md).  ``run``
-  fills ``last_stats`` with measured vs. planner-predicted vox/s, border
-  waste included, plus ``os_seg_fft``/``os_seg_hits`` reuse counters.
+  once — see ``core/overlap_save.py`` and docs/architecture.md).  Plans
+  solved under a ``ram_budget`` execute host-staged (ISSUE 5): the volume
+  stays in host RAM, one x-slab per plane double-buffers onto the device,
+  caches evict per plane, and ``last_stats["peak_device_bytes"]`` (the
+  executor's ledger) is pinned against ``Plan.memory``'s prediction.
+  ``run`` fills ``last_stats`` with measured vs. planner-predicted vox/s,
+  border waste included, plus ``os_seg_fft``/``os_seg_hits`` reuse
+  counters and the memory counters.
 * ``serving.volume_engine`` — ``VolumeEngine`` queues volume requests and
   continuously batches *patches across requests* into executor steps (the
   3D analogue of token-level continuous batching in ``serving/engine.py``);

@@ -63,9 +63,27 @@ jit specializations seen).  ``predict_counts`` returns the planner-side
 ``SweepCounts`` for a volume shape — by construction these equal the
 measured counters exactly (the sweep-aware planning acceptance property).
 
+Host-staged streaming (``ram_budget``/``streaming``, ISSUE 5): a plan
+solved under a RAM budget executes with the volume resident in HOST
+memory only.  Chunks are capped at x-plane boundaries
+(``tiler.chunk_patches``) so each chunk reads one constant-shape input
+x-slab ``[x0, x0 + span)``; ``_slab`` double-buffers the next plane's
+slab onto the device while the current fused step runs, and the per-key
+eviction sweep (``_evict_left_of``) frees segment spectra, activation
+halos, and slabs the stream moved past — miss spectra are stored split
+by absolute segment x (``_store_spectra``) precisely so eviction
+releases real buffers.  The fused-step programs are identical to the
+dense mode's (only the volume operand and slab-relative miss starts
+change), so streamed output is bitwise-equal to the dense path.  A
+``_DeviceLedger`` accounts every executor-managed device buffer;
+``last_stats["peak_device_bytes"]`` reports the per-sweep peak and
+``predict_memory``/``Plan.memory`` reproduce it analytically (the
+memory-model contract in docs/architecture.md).
+
 ``run`` returns the dense (out_ch, X-FOV+1, ...) output and records
 ``last_stats`` (patch/batch counts, wall seconds, measured vox/s including
-border waste, and the planner's predicted vox/s for comparison).
+border waste, the planner's predicted vox/s for comparison, and the
+measured/predicted peak device bytes).
 """
 
 from __future__ import annotations
@@ -97,6 +115,7 @@ from .tiler import (
     HaloSpec,
     SweepCounts,
     VolumeTiling,
+    chunk_patches,
     extract_patch,
     pad_volume,
     predict_sweep_counts,
@@ -112,15 +131,66 @@ class _PendingMiss(NamedTuple):
 
 
 class _SpectrumRef(NamedTuple):
-    """Sweep-cache entry: row ``idx`` of a batch's miss-FFT output array.
+    """Sweep-cache entry: row ``idx`` of a stored miss-FFT output array.
 
     Rows are never copied out — the fused step receives the parent arrays
     as jit arguments and selects rows at trace time, so a cache hit costs
-    no host work at all.
+    no host work at all.  Parents are split by absolute segment x at
+    storage time (all rows of one parent share one x), so the per-key
+    eviction sweep actually frees device memory: a still-needed tail
+    segment can never pin an otherwise-dead batch buffer alive.
     """
 
-    parent: Any  # (M, f, ña, ñb, ñc) device array
+    parent: Any  # (M, f, ña, ñb, ñc) device array; one absolute x per parent
     idx: int
+
+
+class _DeviceLedger:
+    """Accounting of the executor-managed device working set (bytes).
+
+    ``current`` tracks buffers the executor holds across steps (prepared
+    states, staged slabs, cached segment spectra, activation halos, a
+    non-streaming sweep's resident volume); ``transient`` samples a
+    step's in-flight extras (patch inputs, chunk outputs, miss spectra,
+    freshly captured halos) on top of ``current``.  ``peak`` is the
+    number ``last_stats["peak_device_bytes"]`` reports and the planner's
+    ``predict_stream_peak`` simulation reproduces: both sides count the
+    same objects at the same points, which is what makes the prediction
+    pinnable within 10%.  (jit-internal scratch — FFT temporaries inside
+    a fused step — is modelled on the planner side as per-layer
+    ``LayerCost`` stage peaks, not measured here.)
+    """
+
+    def __init__(self) -> None:
+        self.current = 0.0
+        self.peak = 0.0
+
+    def alloc(self, nbytes: float) -> None:
+        self.current += nbytes
+        if self.current > self.peak:
+            self.peak = self.current
+
+    def free(self, nbytes: float) -> None:
+        self.current = max(0.0, self.current - nbytes)
+
+    def transient(self, nbytes: float) -> None:
+        """A step's extra in-flight bytes: bumps peak, not current."""
+        if self.current + nbytes > self.peak:
+            self.peak = self.current + nbytes
+
+    def begin_run(self) -> None:
+        """Scope the peak to one sweep (states/caches carry over)."""
+        self.peak = self.current
+
+
+def _tree_nbytes(*trees) -> float:
+    """Total bytes of the distinct array buffers in the given pytrees."""
+    seen: Dict[int, float] = {}
+    for leaf in jax.tree_util.tree_leaves(list(trees)):
+        n = getattr(leaf, "nbytes", None)
+        if n is not None:
+            seen[id(leaf)] = float(n)
+    return sum(seen.values())
 
 
 class PlanExecutor:
@@ -138,6 +208,8 @@ class PlanExecutor:
         theta: int = -1,
         use_pallas: bool = False,
         deep_reuse: bool = True,
+        ram_budget: Optional[float] = None,
+        streaming: Optional[bool] = None,
     ):
         self.params = params
         self.net = net
@@ -147,8 +219,17 @@ class PlanExecutor:
             m = plan.m_final
             batch = batch or plan.batch
             theta = plan.theta if plan.strategy == "pipeline2" else -1
+            if ram_budget is None:
+                ram_budget = plan.ram_budget
         if prims is None or m is None:
             raise ValueError("need either a Plan or explicit prims + m")
+        # a plan solved under a RAM budget executes in the mode that honors
+        # it: host-staged streaming (the volume never becomes device-
+        # resident in full).  ``streaming`` can force either mode.
+        self.ram_budget = ram_budget
+        self.streaming = (
+            bool(streaming) if streaming is not None else ram_budget is not None
+        )
         self.prims = tuple(prims)
         self.m = m
         self.batch = max(1, batch or 1)
@@ -197,7 +278,10 @@ class PlanExecutor:
         # slices shifted sub-windows, which breaks segment alignment).
         self._os_reuse = self.prims[0] == "overlap_save" and self.uses_mpf
         self._sweeps: Dict[int, Dict[Tuple[int, int, int], jnp.ndarray]] = {}
-        self._sweep_vols: Dict[int, jnp.ndarray] = {}
+        self._sweep_vols: Dict[int, jnp.ndarray] = {}  # non-streaming scopes
+        self._sweep_hosts: Dict[int, np.ndarray] = {}  # streaming scopes
+        self._sweep_slabs: Dict[int, Dict[int, jnp.ndarray]] = {}
+        self._key_bytes: Dict[Tuple[int, Tuple[int, int, int]], float] = {}
         self._sweep_counter = 0
         self._os_misses = 0
         self._os_hits = 0
@@ -232,6 +316,13 @@ class PlanExecutor:
             )
         else:
             self._q_strip = None
+        # device-working-set ledger: prepared states (weights, cached kernel
+        # spectra at full AND strip shapes) are resident for the executor's
+        # lifetime; sweeps add slabs/caches on top.
+        self._ledger = _DeviceLedger()
+        strip_states = getattr(self, "_strip_states", [])
+        self._ledger.alloc(_tree_nbytes(self.params, self.compiled.states, strip_states))
+        self._predict_memory_cache: Dict[Tuple[int, int, int], Any] = {}
 
     # -- geometry ------------------------------------------------------------
 
@@ -342,27 +433,94 @@ class PlanExecutor:
 
         Scoping the cache to a sweep is what makes reuse safe: segment keys
         are absolute coordinates *within one padded volume*, so spectra
-        must never leak across requests.  The padded volume is uploaded to
-        the device once here — misses then slice and transform on device
-        (no per-segment host copies) — extended along x so the aligned
-        grid's tail segments stay in bounds (the extra voxels are zeros;
-        exact, because the outputs they influence are cropped).
+        must never leak across requests.  The volume is extended along x so
+        the aligned grid's tail segments stay in bounds (the extra voxels
+        are zeros; exact, because the outputs they influence are cropped),
+        then either uploaded to the device once (dense mode) or kept in
+        HOST RAM (streaming mode) — the streaming sweep stages one x-slab
+        per plane on demand (``_slab``), so peak device bytes scale with
+        the slab, not the volume.
         """
         spec0 = self.compiled.layers[0].os_spec
         max_x0 = max(0, padded.shape[1] - self.extent)
         short = max(0, max_x0 + spec0.span - padded.shape[1])
-        vol = jnp.asarray(padded)
-        if short:
-            vol = jnp.pad(vol, ((0, 0), (0, short), (0, 0), (0, 0)))
         self._sweep_counter += 1
-        self._sweeps[self._sweep_counter] = {}
-        self._sweep_vols[self._sweep_counter] = vol
+        token = self._sweep_counter
+        self._sweeps[token] = {}
+        if self.streaming:
+            host = np.asarray(padded, np.float32)
+            if short:
+                host = np.pad(host, ((0, 0), (0, short), (0, 0), (0, 0)))
+            self._sweep_hosts[token] = host
+            self._sweep_slabs[token] = {}
+        else:
+            vol = jnp.asarray(padded)
+            if short:
+                vol = jnp.pad(vol, ((0, 0), (0, short), (0, 0), (0, 0)))
+            self._sweep_vols[token] = vol
+            self._ledger.alloc(vol.nbytes)
         return self._sweep_counter
 
     def end_sweep(self, token: Optional[int]) -> None:
-        self._sweeps.pop(token, None)
-        self._sweep_vols.pop(token, None)
-        self._halo_caches.pop(token, None)
+        vol = self._sweep_vols.pop(token, None)
+        if vol is not None:
+            self._ledger.free(vol.nbytes)
+        self._sweep_hosts.pop(token, None)
+        for slab in self._sweep_slabs.pop(token, {}).values():
+            self._ledger.free(slab.nbytes)
+        for key in self._sweeps.pop(token, {}):
+            self._ledger.free(self._key_bytes.pop((token, key), 0.0))
+        for entry in self._halo_caches.pop(token, {}).values():
+            self._ledger.free(sum(h.nbytes for h in entry))
+
+    # -- host-staged streaming slabs ----------------------------------------
+
+    def _slab(self, token: int, x0: int) -> jnp.ndarray:
+        """Device-stage the input x-slab ``[x0, x0 + span)`` of a sweep.
+
+        Every chunk of a plane reads the same constant-shape slab (the
+        plane cap in ``tiler.chunk_patches`` guarantees it), so the fused
+        step's volume operand never retraces on shape.  Already-staged
+        slabs are returned as-is — the double-buffer prefetch in
+        ``_run_batched`` stages the next plane's slab while the current
+        chunk runs.
+        """
+        slabs = self._sweep_slabs.setdefault(token, {})
+        slab = slabs.get(x0)
+        if slab is None:
+            host = self._sweep_hosts[token]
+            spec0 = self.compiled.layers[0].os_spec
+            slab = jnp.asarray(host[:, x0 : x0 + spec0.span])
+            slabs[x0] = slab
+            self._ledger.alloc(slab.nbytes)
+        return slab
+
+    def _drop_slabs(self, token: int, keep) -> None:
+        slabs = self._sweep_slabs.get(token, {})
+        for x0 in [x for x in slabs if x not in keep]:
+            self._ledger.free(slabs.pop(x0).nbytes)
+
+    def _evict_left_of(self, token: int, x_lo: int) -> None:
+        """Free every cache entry strictly left of ``x_lo`` (both caches).
+
+        Exact by the tiler's non-decreasing-x patch stream: no later patch
+        of this sweep can resolve an evicted key.  Because stored spectra
+        parents are split by absolute x, eviction really releases the
+        device buffers (and the ledger records it).
+        """
+        cache = self._sweeps.get(token, {})
+        for dead in [k for k in cache if k[0] < x_lo]:
+            del cache[dead]
+            self._ledger.free(self._key_bytes.pop((token, dead), 0.0))
+        halo_cache = self._halo_caches.get(token)
+        if halo_cache:
+            for dead in [k for k in halo_cache if k[0] < x_lo]:
+                self._ledger.free(sum(h.nbytes for h in halo_cache.pop(dead)))
+        if self.streaming:
+            self._drop_slabs(
+                token,
+                {x for x in self._sweep_slabs.get(token, {}) if x >= x_lo},
+            )
 
     def _walk_below_input(self, states, x, S, *, capture: bool):
         """Layers 1.. over a layer-0 output, optionally capturing halos.
@@ -516,11 +674,10 @@ class PlanExecutor:
         # patch start can never be requested again.  (Keyed by patch START
         # — not first resolved key — so a strip patch, which resolves only
         # its trailing keys, never evicts a key a same-plane full patch
-        # still needs.)
+        # still needs.)  Streaming sweeps also release staged slabs the
+        # chunk has moved past.
         x_lo = min(mm[2][0] for mm in meta)
-        for cache_d in (self._sweeps[token], halo_cache):
-            for dead in [k for k in cache_d if k[0] < x_lo]:
-                del cache_d[dead]
+        self._evict_left_of(token, x_lo)
         # partition BEFORE running anything: strip eligibility is decided
         # against the halo cache as of the chunk start
         full_rows: List[int] = []
@@ -533,10 +690,23 @@ class PlanExecutor:
                 and start in halo_cache
             )
             (strip_rows if eligible else full_rows).append(idx)
-        outs: List[Optional[np.ndarray]] = [None] * len(meta)
+        groups: List[Tuple[List[int], bool]] = []
         for rows, strip in ((full_rows, False), (strip_rows, True)):
             if not rows:
                 continue
+            if self.streaming:
+                # one staged slab serves one x-plane: sub-partition the
+                # group so every jit call reads a single slab (serving
+                # ticks can pop patches spanning planes; offline chunks
+                # are already plane-capped)
+                by_plane: Dict[int, List[int]] = {}
+                for i in rows:
+                    by_plane.setdefault(meta[i][2][0], []).append(i)
+                groups.extend((by_plane[x], strip) for x in sorted(by_plane))
+            else:
+                groups.append((rows, strip))
+        outs: List[Optional[np.ndarray]] = [None] * len(meta)
+        for rows, strip in groups:
             ys, halos = self._run_os_group(
                 token, [meta[i] for i in rows], strip
             )
@@ -582,9 +752,21 @@ class PlanExecutor:
                         pos = parent_pos[id(F.parent)] = len(parents)
                         parents.append(F.parent)
                     pattern.append((pos, F.idx))
-        starts = jnp.asarray(np.asarray(misses, np.int32)) if misses else None
         self._os_mad_segments += len(pattern)
-        vol = self._sweep_vols[token]
+        if self.streaming:
+            # the group is one x-plane (plane-capped chunks / per-plane
+            # sub-groups): its segments all live in the staged slab
+            # [x0, x0 + span), so miss starts shift into slab coordinates
+            # and the fused step's volume operand keeps one constant shape
+            x0 = metas[0][2][0]
+            vol = self._slab(token, x0)
+            off = np.asarray([x0, 0, 0], np.int32)
+        else:
+            vol = self._sweep_vols[token]
+            off = np.zeros(3, np.int32)
+        starts = (
+            jnp.asarray(np.asarray(misses, np.int32) - off) if misses else None
+        )
         if strip:
             halos_in = tuple(
                 jnp.concatenate(
@@ -611,9 +793,41 @@ class PlanExecutor:
                 starts, tuple(parents), pattern=tuple(pattern),
             )
             self._deep_fulls += len(metas)
-        for i, key in enumerate(misses):
-            cache[key] = _SpectrumRef(F_m, i)
+        # the ledger's transient sample: group output + miss spectra +
+        # captured halos in flight on top of the resident working set
+        self._ledger.transient(
+            out.nbytes
+            + (F_m.nbytes if F_m is not None else 0)
+            + sum(h.nbytes for h in halos)
+        )
+        self._store_spectra(token, cache, misses, F_m)
         return np.asarray(out), halos
+
+    def _store_spectra(self, token, cache, misses, F_m) -> None:
+        """File a group's miss spectra, split by absolute segment x.
+
+        All rows of one stored parent share one x, so the per-key
+        eviction sweep frees whole buffers exactly when their plane falls
+        behind the patch stream — the property both the ledger and the
+        planner's byte simulation rely on.  (The split costs one gather
+        per distinct x; interior planes miss at a single x, so it is
+        usually free.)
+        """
+        if not misses:
+            return
+        by_x: Dict[int, List[int]] = {}
+        for i, key in enumerate(misses):
+            by_x.setdefault(key[0], []).append(i)
+        for _x, idxs in by_x.items():
+            if len(idxs) == len(misses):
+                parent = F_m
+            else:
+                parent = jnp.take(F_m, jnp.asarray(np.asarray(idxs, np.int32)), axis=0)
+            self._ledger.alloc(parent.nbytes)
+            share = parent.nbytes / len(idxs)
+            for j, i in enumerate(idxs):
+                cache[misses[i]] = _SpectrumRef(parent, j)
+                self._key_bytes[(token, misses[i])] = share
 
     def _store_halos(self, halo_cache, metas, halos) -> None:
         """File a group's trailing activation halos for the x-successors.
@@ -630,7 +844,12 @@ class PlanExecutor:
             for pos in range(len(self.net.layers) - 1):
                 _, frag = self._strip_info[pos + 1]
                 entry.append(halos[pos][j * frag : (j + 1) * frag])
-            halo_cache[(start[0] + self.core, start[1], start[2])] = entry
+            key = (start[0] + self.core, start[1], start[2])
+            old = halo_cache.get(key)
+            if old is not None:
+                self._ledger.free(sum(h.nbytes for h in old))
+            halo_cache[key] = entry
+            self._ledger.alloc(sum(h.nbytes for h in entry))
 
     def _run_os_batch_mixed(self, meta) -> np.ndarray:
         """Cross-request serving batches: one batched FFT per sweep, then
@@ -641,9 +860,7 @@ class PlanExecutor:
         miss_keys: Dict[int, List[Tuple[int, int, int]]] = {}
         for token, keys, start in meta:
             cache = self._sweeps.setdefault(token, {})
-            x_lo = start[0]
-            for dead in [k for k in cache if k[0] < x_lo]:
-                del cache[dead]
+            self._evict_left_of(token, start[0])
             per_seg = []
             for key in keys:
                 F = cache.get(key)
@@ -659,7 +876,6 @@ class PlanExecutor:
             slots.append(per_seg)
             self._os_mad_segments += spec0.n_segments
             self._deep_fulls += 1
-        F_miss: Dict[int, jnp.ndarray] = {}
         for token, keys_m in miss_keys.items():
             # pad the miss count to a power of two so the distinct compiled
             # FFT batch sizes stay O(log(S·n_seg))
@@ -668,8 +884,31 @@ class PlanExecutor:
             while Mp < M:
                 Mp *= 2
             starts = np.asarray(keys_m + [keys_m[-1]] * (Mp - M), np.int32)
-            F_miss[token] = os_mod.segment_spectra_at(
-                self._sweep_vols[token], jnp.asarray(starts), spec0, self.extent
+            if self.streaming:
+                # stage a transient slab covering this token's misses; the
+                # shape varies per tick (fallback path — the single-sweep
+                # fused path is the one with the constant-shape guarantee)
+                host = self._sweep_hosts[token]
+                x_min = min(k[0] for k in keys_m)
+                x_hi = max(k[0] for k in keys_m) + spec0.seg_extent
+                slab = jnp.asarray(host[:, x_min:x_hi])
+                self._ledger.transient(slab.nbytes)
+                starts = starts - np.asarray([x_min, 0, 0], np.int32)
+                vol = slab
+            else:
+                vol = self._sweep_vols[token]
+            F_all_miss = os_mod.segment_spectra_at(
+                vol, jnp.asarray(starts), spec0, self.extent
+            )
+            self._ledger.transient(F_all_miss.nbytes)
+            # store split by absolute segment x (same invariant as the
+            # single-sweep path): per-key eviction then frees real device
+            # buffers instead of leaving a multi-plane parent pinned by
+            # its youngest rows — the ledger stays honest in exactly the
+            # cross-request mode the shared device budget governs.  The
+            # power-of-two padding rows are dropped before storage.
+            self._store_spectra(
+                token, self._sweeps[token], keys_m, F_all_miss[:M]
             )
         # pass 2: materialize rows; ONE stack builds the batch.
         flat = []
@@ -677,13 +916,14 @@ class PlanExecutor:
             cache = self._sweeps[token]
             for key, F in per_seg:
                 if isinstance(F, _PendingMiss):
-                    cache[key] = F = _SpectrumRef(F_miss[token], F.idx)
+                    F = cache[key]  # _store_spectra filed the real ref
                 flat.append(F.parent[F.idx])
         F_all = jnp.stack(flat).reshape(
             (len(slots), spec0.n_segments) + flat[0].shape
         )  # (S, n_seg, f, ña, ñb, ñc)
         self._record_trace(("oswalk", F_all.shape))
         out, _ = self._jit_os_walk(self.compiled.states, F_all)
+        self._ledger.transient(F_all.nbytes + out.nbytes)
         return np.asarray(out)
 
     # -- compiled patch-batch kernels ---------------------------------------
@@ -731,7 +971,9 @@ class PlanExecutor:
         states = self.compiled.states
         if self.uses_mpf:
             self._record_trace(("walk", xs.shape))
-            return np.asarray(self._jit_walk(states, jnp.asarray(xs)))
+            y = self._jit_walk(states, jnp.asarray(xs))
+            self._ledger.transient(xs.nbytes + y.nbytes)
+            return np.asarray(y)
         # baseline: all-subsamplings outer loop (P³ shifted passes)
         out = np.empty(
             (S, self.out_channels) + (self.core,) * 3, np.float32
@@ -739,7 +981,9 @@ class PlanExecutor:
         n = self.n_in
         for ox, oy, oz in itertools.product(range(self.P), repeat=3):
             sub = xs[:, :, ox : ox + n, oy : oy + n, oz : oz + n]
-            y = np.asarray(self._jit_walk(states, jnp.asarray(sub)))
+            yd = self._jit_walk(states, jnp.asarray(sub))
+            self._ledger.transient(sub.nbytes + yd.nbytes)
+            y = np.asarray(yd)
             out[:, :, ox :: self.P, oy :: self.P, oz :: self.P] = y
         return out
 
@@ -754,6 +998,7 @@ class PlanExecutor:
 
         self._os_misses = self._os_hits = self._os_mad_segments = 0
         self._deep_strips = self._deep_fulls = 0
+        self._ledger.begin_run()  # peak scoped to this sweep
         t0 = time.perf_counter()
         # the sweep's device upload is real per-volume work the other
         # execution modes pay per batch (patch extraction + transfer), so
@@ -800,8 +1045,55 @@ class PlanExecutor:
             # over the executor's lifetime — serving watches this to see
             # shape-bucketing suppress per-request retraces)
             "retraces": len(self._trace_keys),
+            # peak executor-managed device bytes this sweep (states + slabs
+            # + caches + in-flight chunk tensors; the _DeviceLedger's
+            # accounting, reproduced by predict_memory / Plan.memory)
+            "peak_device_bytes": self._ledger.peak,
+            "predicted_peak_device_bytes": (
+                self.predict_memory(vol.shape[1:]).device_bytes
+                if self._os_reuse and self.theta < 0
+                else float("nan")
+            ),
         }
         return out
+
+    # -- memory model --------------------------------------------------------
+
+    def predict_memory(self, vol_shape: Sequence[int]):
+        """Predicted peak device working set for sweeping ``vol_shape``.
+
+        The planner-side simulation (``planner.plan_stream_memory``) run
+        for THIS executor's mode (streaming or dense): the returned
+        ``MemoryFootprint.device_bytes`` equals what ``run`` will record
+        in ``last_stats["peak_device_bytes"]`` up to the analytic-vs-
+        measured state rounding (pinned within 10% by the test suite).
+        Memoized per shape — the simulation is deterministic, and ``run``
+        consults it every sweep for the predicted-peak stat.
+        """
+        if not self._os_reuse:
+            raise ValueError("predict_memory needs an overlap-save reuse plan")
+        key = tuple(int(x) for x in vol_shape)
+        hit = self._predict_memory_cache.get(key)
+        if hit is not None:
+            return hit
+        from ..core.planner import plan_stream_memory
+
+        mem = plan_stream_memory(
+            self.net, self.prims, self.m, key,
+            batch=self.batch, deep_reuse=self.deep_reuse,
+            streaming=self.streaming,
+        )
+        self._predict_memory_cache[key] = mem
+        return mem
+
+    def sweep_bytes_estimate(self, vol_shape: Sequence[int]) -> float:
+        """Device bytes OPENING a sweep over ``vol_shape`` would add.
+
+        The serving engine's admission estimate: predicted peak minus the
+        always-resident prepared states (already counted in the ledger).
+        """
+        mem = self.predict_memory(vol_shape)
+        return mem.device_bytes - mem.spectra_bytes
 
     def write_core(self, out, tiling, spec, y) -> None:
         """Crop a patch's dense core (out_ch, core³) into the output."""
@@ -820,14 +1112,36 @@ class PlanExecutor:
         S = self.batch
         specs = tiling.patches
         n_batches = 0
-        for i in range(0, len(specs), S):
-            chunk = specs[i : i + S]
+        if sweep is not None:
+            # reuse path: chunks are capped at x-plane boundaries so every
+            # aligned interior patch's left neighbour completed in an
+            # EARLIER chunk — the strip path survives batch sizes larger
+            # than the x-plane (and, streaming, every chunk reads one slab)
+            chunks = [
+                [specs[i] for i in idxs] for idxs in chunk_patches(tiling, S)
+            ]
+        else:
+            chunks = [list(specs[i : i + S]) for i in range(0, len(specs), S)]
+        for ci, chunk in enumerate(chunks):
             # a ragged tail runs through a smaller compiled batch (one extra
             # compile, cached per size) instead of computing-and-discarding
             # repeated padding patches.
             if sweep is not None:
+                if self.streaming:
+                    # double-buffered staging: release planes the stream
+                    # moved past, keep/stage the current plane, and kick
+                    # off the NEXT plane's host→device copy so it overlaps
+                    # the current chunk's fused step (async dispatch)
+                    x_cur = chunk[0].start[0]
+                    keep = {x_cur}
+                    if ci + 1 < len(chunks):
+                        keep.add(chunks[ci + 1][0].start[0])
+                    self._drop_slabs(sweep, keep)
+                    for x0 in sorted(keep):
+                        self._slab(sweep, x0)
                 # overlap-save: the walk starts from cached/computed segment
-                # spectra of the device-resident volume — no patch extraction
+                # spectra of the sweep's resident volume (or staged slab) —
+                # no host-side patch extraction
                 meta = [
                     (sweep, tiling.segment_keys(s), s.start) for s in chunk
                 ]
@@ -883,6 +1197,9 @@ class PlanExecutor:
                 )
             )
 
+        # the pipeline schedule stages the whole patch stream at once; the
+        # ledger records it so peak_device_bytes stays honest there too
+        self._ledger.transient(xs_all.nbytes)
         ys = np.asarray(
             self._pipeline_fn(self.compiled.states, jnp.asarray(xs_all))
         )

@@ -36,6 +36,17 @@ patch *core* plus the halo segmentation shared with its x-neighbours.
 coordinates; x-adjacent patches produce identical keys for the segments
 they share, which is what lets the executor reuse their input spectra
 (ZNNi's border waste paid once instead of per patch).
+
+Streaming schedule (ISSUE 5): ``chunk_patches`` partitions the patch
+stream into executor chunks capped at x-plane boundaries (one input
+x-slab per chunk; strip eligibility never degrades with batch size);
+``plane_starts``/``final_rows_after_plane`` tell a consumer which dense
+output rows are FINAL once a plane completes (the serving engine's
+per-strip completion); ``predict_stream_peak`` replays the executor's
+streaming schedule with caller-supplied byte weights and returns the
+exact peak device working set (``StreamPeak``) — the planner's
+``Plan.memory`` and the executor's measured ledger both come from this
+one simulation, which is what makes prediction-vs-measurement pinnable.
 """
 
 from __future__ import annotations
@@ -161,6 +172,64 @@ def tile_volume(
     )
 
 
+def chunk_patches(tiling: VolumeTiling, batch: int) -> Tuple[Tuple[int, ...], ...]:
+    """Partition patch indices into executor chunks, capped at x-planes.
+
+    Chunks hold up to ``batch`` patches and NEVER span an x-plane boundary
+    (patches with different x starts).  Two consumers rely on the cap:
+
+    * deep reuse — strip eligibility requires the left neighbour's halos
+      to be stored by an *earlier* chunk, so a chunk spanning planes
+      degrades its later-plane patches to the full path (the
+      ``batch > patches-per-x-plane`` regression this fixes);
+    * streaming — every patch of a chunk reads the same input x-slab
+      ``[x0, x0 + span)``, so the staged slab has one constant shape
+      (no per-chunk jit retraces on the slab operand).
+
+    The trailing chunk of a plane may be ragged; the executor runs ragged
+    chunks through a smaller compiled batch, as everywhere else.
+    """
+    batch = max(1, batch)
+    chunks: List[Tuple[int, ...]] = []
+    cur: List[int] = []
+    for idx, p in enumerate(tiling.patches):
+        if cur and (
+            len(cur) == batch
+            or tiling.patches[cur[0]].start[0] != p.start[0]
+        ):
+            chunks.append(tuple(cur))
+            cur = []
+        cur.append(idx)
+    if cur:
+        chunks.append(tuple(cur))
+    return tuple(chunks)
+
+
+def plane_starts(tiling: VolumeTiling) -> Tuple[int, ...]:
+    """Distinct patch x starts in sweep order (one entry per x-plane)."""
+    seen: List[int] = []
+    for p in tiling.patches:
+        if not seen or p.start[0] != seen[-1]:
+            seen.append(p.start[0])
+    return tuple(seen)
+
+
+def final_rows_after_plane(
+    tiling: VolumeTiling, plane_x0: int
+) -> int:
+    """Dense output x-rows final once every patch with start <= plane_x0 ran.
+
+    A row is *final* when no remaining patch can write it.  Patches of the
+    next plane (start x1 > plane_x0) write rows [x1, ...), so rows
+    [0, x1) are final; after the last plane the whole output is final.
+    Shifted edge planes are covered automatically: their start is simply
+    the next entry in ``plane_starts``.
+    """
+    planes = plane_starts(tiling)
+    later = [x for x in planes if x > plane_x0]
+    return min(later) if later else tiling.out_shape[0]
+
+
 @dataclass(frozen=True)
 class SweepCounts:
     """Exact sweep-level reuse accounting for one tiling.
@@ -182,6 +251,144 @@ class SweepCounts:
         return self.strip_patches + self.full_patches
 
 
+@dataclass(frozen=True)
+class StreamPeak:
+    """Predicted peak device working set of one executor sweep (bytes).
+
+    Components are *at the peak step* of the simulated schedule, so
+    ``peak_bytes`` equals their sum — not a sum of independent maxima.
+    Produced by ``predict_stream_peak`` and matched against the
+    executor's measured ``last_stats["peak_device_bytes"]`` (whose ledger
+    samples the same components at the same points).
+    """
+
+    peak_bytes: float
+    base_bytes: float  # prepared states (params + cached kernel spectra)
+    slab_bytes: float  # staged input slabs (or the dense resident volume)
+    cache_bytes: float  # live segment spectra + activation-halo entries
+    out_bytes: float  # chunk output awaiting its host fetch
+    scratch_bytes: float  # miss spectra + fresh halos at the peak step
+
+
+def _simulate_sweep(
+    tiling: VolumeTiling,
+    *,
+    batch: int,
+    deep_reuse: bool,
+    strip_segments: Optional[int],
+    seg_bytes: float = 0.0,
+    halo_entry_bytes: float = 0.0,
+    out_patch_bytes: float = 0.0,
+    slab_bytes: float = 0.0,
+    base_bytes: float = 0.0,
+    streaming: bool = True,
+    dense_vol_bytes: float = 0.0,
+) -> Tuple[SweepCounts, StreamPeak]:
+    """One pass that produces both the reuse counts and the byte peak.
+
+    Mirrors ``PlanExecutor``'s schedule exactly: plane-capped chunks
+    (``chunk_patches``), full group before strip group, strip eligibility
+    frozen at chunk start, per-key cache eviction strictly left of the
+    chunk, halos stored only by core-aligned patches, and — on the byte
+    side — the ledger's sampling points: slabs staged for the current and
+    next chunk's planes, then per group the transient (chunk output +
+    miss spectra + captured halos) on top of the pre-insert cache state.
+    """
+    if tiling.halo is None:
+        raise ValueError("tiling was not built in overlap-save mode")
+    n_seg = len(tiling.halo.rel_starts)
+    q = strip_segments if (deep_reuse and strip_segments) else n_seg
+    q = min(q, n_seg)
+    cache: set = set()
+    halo_ready: set = set()
+    seg_fft = seg_hits = mad = strips = fulls = 0
+    core = tiling.core
+    specs = tiling.patches
+    chunks = chunk_patches(tiling, batch)
+    peak = StreamPeak(0.0, base_bytes, 0.0, 0.0, 0.0, 0.0)
+    seg_cache_bytes = 0.0
+    halo_cache_bytes = 0.0
+    for ci, chunk_idx in enumerate(chunks):
+        chunk = [specs[i] for i in chunk_idx]
+        x_lo = min(p.start[0] for p in chunk)
+        # per-key eviction strictly left of the chunk (both caches)
+        for key in [kk for kk in cache if kk[0] < x_lo]:
+            cache.discard(key)
+            seg_cache_bytes -= seg_bytes
+        for key in [kk for kk in halo_ready if kk[0] < x_lo]:
+            halo_ready.discard(key)
+            halo_cache_bytes -= halo_entry_bytes
+        # staged slabs: current plane plus the prefetched next plane
+        if streaming:
+            x_cur = chunk[0].start[0]
+            n_slabs = 1
+            if ci + 1 < len(chunks):
+                x_next = specs[chunks[ci + 1][0]].start[0]
+                n_slabs = 2 if x_next != x_cur else 1
+            resident_slabs = n_slabs * slab_bytes
+        else:
+            resident_slabs = dense_vol_bytes
+        strip_flags = [
+            deep_reuse
+            and p.start[0] > 0
+            and p.start[0] % core == 0
+            and p.start in halo_ready
+            for p in chunk
+        ]
+        for group_is_strip in (False, True):
+            group = [
+                p for p, s in zip(chunk, strip_flags) if s == group_is_strip
+            ]
+            if not group:
+                continue
+            misses = 0
+            for p in group:
+                keys = tiling.segment_keys(p)
+                use = keys[n_seg - q :] if group_is_strip else keys
+                for key in use:
+                    if key in cache:
+                        seg_hits += 1
+                    else:
+                        cache.add(key)
+                        seg_fft += 1
+                        misses += 1
+                if group_is_strip:
+                    mad += q
+                    strips += 1
+                else:
+                    mad += n_seg
+                    fulls += 1
+            # the ledger's transient sample: group output + miss spectra +
+            # captured halos live on top of the PRE-insert cache state
+            out_b = len(group) * out_patch_bytes
+            scratch_b = misses * seg_bytes + (
+                len(group) * halo_entry_bytes if deep_reuse else 0.0
+            )
+            total = (
+                base_bytes
+                + resident_slabs
+                + seg_cache_bytes
+                + halo_cache_bytes
+                + out_b
+                + scratch_b
+            )
+            if total > peak.peak_bytes:
+                peak = StreamPeak(
+                    total, base_bytes, resident_slabs,
+                    seg_cache_bytes + halo_cache_bytes, out_b, scratch_b,
+                )
+            seg_cache_bytes += misses * seg_bytes
+            if deep_reuse:
+                for p in group:
+                    if p.start[0] % core == 0:
+                        succ = (p.start[0] + core, p.start[1], p.start[2])
+                        if succ not in halo_ready:
+                            halo_ready.add(succ)
+                            halo_cache_bytes += halo_entry_bytes
+    counts = SweepCounts(seg_fft, seg_hits, mad, strips, fulls)
+    return counts, peak
+
+
 def predict_sweep_counts(
     tiling: VolumeTiling,
     *,
@@ -192,60 +399,58 @@ def predict_sweep_counts(
     """Simulate the executor's sweep caches over this tiling, exactly.
 
     Mirrors ``PlanExecutor``'s per-chunk processing: patches run in tiler
-    order in chunks of ``batch``; within a chunk the full-path group
-    resolves (and inserts) its segment keys before the strip group; a
-    patch takes the strip path iff deep reuse is on, its start is
-    core-aligned on x, and its left neighbour's activation halos were
-    stored by an EARLIER chunk (same-chunk neighbours fall back to the
-    full path — the executor decides eligibility before running the
-    chunk).  Strip patches resolve only the trailing ``strip_segments``
-    keys and pay that many MAD segments; full patches resolve the whole
-    grid.  Spectra-cache eviction (keys strictly left of the current
-    patch start) can never evict a key a later patch resolves — the
-    patch stream has non-decreasing x — so it does not enter the counts.
+    order in chunks of ``batch`` capped at x-plane boundaries
+    (``chunk_patches``); within a chunk the full-path group resolves (and
+    inserts) its segment keys before the strip group; a patch takes the
+    strip path iff deep reuse is on, its start is core-aligned on x, and
+    its left neighbour's activation halos were stored by an EARLIER chunk
+    (the plane cap makes every aligned interior patch eligible, whatever
+    the batch size).  Strip patches resolve only the trailing
+    ``strip_segments`` keys and pay that many MAD segments; full patches
+    resolve the whole grid.  Spectra-cache eviction (keys strictly left
+    of the current patch start) can never evict a key a later patch
+    resolves — the patch stream has non-decreasing x — so it does not
+    enter the counts.
     """
-    if tiling.halo is None:
-        raise ValueError("tiling was not built in overlap-save mode")
-    n_seg = len(tiling.halo.rel_starts)
-    q = strip_segments if (deep_reuse and strip_segments) else n_seg
-    q = min(q, n_seg)
-    cache: set = set()
-    halo_ready: set = set()
-    seg_fft = seg_hits = mad = strips = fulls = 0
-    specs = tiling.patches
-    core = tiling.core
-    for i in range(0, len(specs), max(1, batch)):
-        chunk = specs[i : i + max(1, batch)]
-        strip_flags = []
-        for p in chunk:
-            x0, y0, z0 = p.start
-            strip_flags.append(
-                deep_reuse and x0 > 0 and x0 % core == 0 and p.start in halo_ready
-            )
-        for group_is_strip in (False, True):
-            for p, is_strip in zip(chunk, strip_flags):
-                if is_strip != group_is_strip:
-                    continue
-                keys = tiling.segment_keys(p)
-                use = keys[n_seg - q :] if is_strip else keys
-                for key in use:
-                    if key in cache:
-                        seg_hits += 1
-                    else:
-                        cache.add(key)
-                        seg_fft += 1
-                if is_strip:
-                    mad += q
-                    strips += 1
-                else:
-                    mad += n_seg
-                    fulls += 1
-        if deep_reuse:
-            for p in chunk:
-                x0, y0, z0 = p.start
-                if x0 % core == 0:
-                    halo_ready.add((x0 + core, y0, z0))
-    return SweepCounts(seg_fft, seg_hits, mad, strips, fulls)
+    counts, _ = _simulate_sweep(
+        tiling, batch=batch, deep_reuse=deep_reuse,
+        strip_segments=strip_segments,
+    )
+    return counts
+
+
+def predict_stream_peak(
+    tiling: VolumeTiling,
+    *,
+    batch: int = 1,
+    deep_reuse: bool = False,
+    strip_segments: Optional[int] = None,
+    seg_bytes: float,
+    halo_entry_bytes: float = 0.0,
+    out_patch_bytes: float,
+    slab_bytes: float,
+    base_bytes: float = 0.0,
+    streaming: bool = True,
+    dense_vol_bytes: float = 0.0,
+) -> StreamPeak:
+    """Predict the executor's peak device bytes for sweeping this tiling.
+
+    Byte weights come from the caller (the planner computes them
+    analytically; ``PlanExecutor.predict_memory`` reads them off its
+    compiled buffers) — the simulation itself is pure geometry, the same
+    cache walk as ``predict_sweep_counts``.  ``streaming=False`` models
+    the dense-materialized path: the whole padded volume is device
+    resident (``dense_vol_bytes``) instead of the staged slabs.
+    """
+    _, mem_peak = _simulate_sweep(
+        tiling, batch=batch, deep_reuse=deep_reuse,
+        strip_segments=strip_segments,
+        seg_bytes=seg_bytes, halo_entry_bytes=halo_entry_bytes,
+        out_patch_bytes=out_patch_bytes, slab_bytes=slab_bytes,
+        base_bytes=base_bytes, streaming=streaming,
+        dense_vol_bytes=dense_vol_bytes,
+    )
+    return mem_peak
 
 
 def tile_for_net(
