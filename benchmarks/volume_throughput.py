@@ -34,6 +34,13 @@ report pins measured peak device bytes against the predicted footprint.
 It also emits a planner-side **budget sweep** — throughput vs. RAM, the
 paper's Fig. 5 analog — showing where a faster primitive's patch stops
 fitting and a slower-but-leaner one takes over.
+
+The ``hetero`` row (ISSUE 6) plans over the paper's CPU+GPU device set
+(``hw.PAPER_MACHINES``) and executes the split as a two-backend pipeline
+(host CPU backend + default accelerator, host-RAM hand-off at θ); its
+JSON row carries the measured per-stage / hand-off counters next to the
+plan's predictions — the hand-off *bytes* must match exactly
+(``scripts/check_bench_json.py`` enforces it).
 """
 
 import argparse
@@ -45,7 +52,7 @@ import numpy as np
 
 from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
 from repro.core import convnet, planner
-from repro.core.hw import TPU_V5E
+from repro.core.hw import PAPER_MACHINES, TPU_V5E
 from repro.volume import PlanExecutor
 
 # 8 input channels so layer-0 input transforms carry real work: with a
@@ -107,6 +114,12 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
                 f"  peak={s['peak_device_bytes']/2**20:.2f}"
                 f"/{plan.ram_budget/2**20:.2f}MiB"
             )
+        if plan.strategy == "hetero":
+            extra += (
+                f"  theta={plan.theta}"
+                f"  xfer={s['xfer_bytes']/2**20:.2f}MiB"
+                f" ({'exact' if s['xfer_bytes'] == s['predicted_xfer_bytes'] else 'MISMATCH'})"
+            )
         print(
             f"{name:<18s} n_in={plan.n_in:>3d} S={plan.batch} "
             f"patches={s['patches']:>3.0f} waste={s['waste_fraction']:.2f}  "
@@ -144,6 +157,18 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
             ),
         }
         row.update({k: s[k] for k in REUSE_KEYS})
+        if plan.strategy == "hetero":
+            # two-backend split: measured per-stage / hand-off counters
+            # next to the plan's predictions (xfer bytes match exactly)
+            row["theta"] = plan.theta
+            row["devices"] = list(plan.devices)
+            for k in (
+                "stage0_seconds", "stage1_seconds",
+                "xfer_seconds", "xfer_bytes",
+                "predicted_stage0_seconds", "predicted_stage1_seconds",
+                "predicted_xfer_seconds", "predicted_xfer_bytes",
+            ):
+                row[k] = s[k]
         if plan.sweep is not None:
             row["planner_sweep"] = {
                 "seg_fft": plan.sweep.seg_fft,
@@ -279,6 +304,13 @@ def main(argv=None) -> None:
         ), True),
         "pipeline2": (planner.plan_pipeline2(
             NET, TPU_V5E, chips_per_stage=1, max_m=args.m,
+            batches=(args.batch,),
+        ), True),
+        # the paper's CPU+GPU machine as a device set: stage 0 priced on
+        # one profile, stage 1 on the other, executed as a two-backend
+        # pipeline (host CPU + default accelerator, host-RAM hand-off)
+        "hetero": (planner.plan_hetero(
+            NET, PAPER_MACHINES, chips_per_stage=1, max_m=args.m,
             batches=(args.batch,),
         ), True),
     }

@@ -3,12 +3,23 @@
 CI runs ``benchmarks/volume_throughput.py --quick --ram-budget ...`` and
 then this check: every row must carry the ISSUE-5 memory counters, the
 budget-sweep block must exist, and any row solved under a RAM budget must
-report a measured peak within it.  Perf numbers stay advisory; a missing
-counter is a regression in the instrumentation contract and fails.
+report a measured peak within it.  The ``hetero`` row (ISSUE 6) is
+mandatory and must carry the two-backend split counters with its measured
+hand-off bytes equal to the plan's prediction EXACTLY (per-patch hand-off
+size is chunk-size independent, so any mismatch is a contract break, not
+noise).
 
-Usage: python scripts/check_bench_json.py BENCH_volume_throughput.json
+``--baseline BENCH_NNN.json`` adds a throughput-regression gate against a
+committed breadcrumb: a row present in both files must not lose more than
+``--tolerance`` (default 50%) of the baseline's measured vox/s.  The wide
+tolerance absorbs shared-CI noise while still catching order-of-magnitude
+breakage; per-counter exactness is enforced separately above.
+
+Usage: python scripts/check_bench_json.py BENCH_volume_throughput.json \
+           [--baseline BENCH_006.json] [--tolerance 0.5]
 """
 
+import argparse
 import json
 import sys
 
@@ -21,8 +32,21 @@ REQUIRED_ROW_KEYS = (
     "ram_budget",
 )
 
+HETERO_ROW_KEYS = (
+    "theta",
+    "devices",
+    "stage0_seconds",
+    "stage1_seconds",
+    "xfer_seconds",
+    "xfer_bytes",
+    "predicted_stage0_seconds",
+    "predicted_stage1_seconds",
+    "predicted_xfer_seconds",
+    "predicted_xfer_bytes",
+)
 
-def check(path: str) -> int:
+
+def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
     with open(path) as fh:
         payload = json.load(fh)
     errors = []
@@ -42,6 +66,23 @@ def check(path: str) -> int:
                 f"row {name!r}: measured peak {peak:.0f} exceeds "
                 f"ram_budget {budget:.0f}"
             )
+    # the heterogeneous two-backend row is part of the contract (ISSUE 6)
+    hetero = (rows or {}).get("hetero")
+    if hetero is None:
+        errors.append("missing mandatory 'hetero' row")
+    else:
+        for key in HETERO_ROW_KEYS:
+            if key not in hetero:
+                errors.append(f"row 'hetero': missing {key!r}")
+        got, want = hetero.get("xfer_bytes"), hetero.get("predicted_xfer_bytes")
+        if got is not None and want is not None and got != want:
+            errors.append(
+                f"row 'hetero': measured xfer_bytes {got!r} != "
+                f"predicted {want!r} (must match exactly)"
+            )
+        devs = hetero.get("devices")
+        if devs is not None and len(devs) != 2:
+            errors.append(f"row 'hetero': expected 2 devices, got {devs!r}")
     sweep = payload.get("budget_sweep")
     if not sweep:
         errors.append("missing budget_sweep block")
@@ -57,13 +98,40 @@ def check(path: str) -> int:
         ]
         if not budgeted:
             errors.append("--ram-budget was set but no row carries it")
+    if baseline is not None:
+        with open(baseline) as fh:
+            base = json.load(fh)
+        base_rows = base.get("rows") or {}
+        common = sorted(set(base_rows) & set(rows or {}))
+        if not common:
+            errors.append(f"baseline {baseline!r}: no rows in common")
+        for name in common:
+            b = base_rows[name].get("measured_voxps")
+            c = (rows or {})[name].get("measured_voxps")
+            if not b or not c:
+                continue
+            if c < b * (1.0 - tolerance):
+                errors.append(
+                    f"row {name!r}: measured_voxps {c:,.0f} regressed more "
+                    f"than {tolerance:.0%} vs baseline {b:,.0f}"
+                )
     for e in errors:
         print(f"BENCH JSON: {e}", file=sys.stderr)
     if errors:
         return 1
-    print(f"BENCH JSON ok: {len(rows)} rows, {len(sweep)} budget-sweep rows")
+    msg = f"BENCH JSON ok: {len(rows)} rows, {len(sweep)} budget-sweep rows"
+    if baseline is not None:
+        msg += f", regression-gated vs {baseline}"
+    print(msg)
     return 0
 
 
 if __name__ == "__main__":
-    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_volume_throughput.json"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="BENCH_volume_throughput.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_NNN.json to gate throughput against")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="max fractional measured_voxps drop vs baseline")
+    args = ap.parse_args()
+    sys.exit(check(args.path, baseline=args.baseline, tolerance=args.tolerance))

@@ -299,6 +299,28 @@ def _nt(fft_shape: Sequence[int]) -> int:
     return na * nb * (nc // 2 + 1)
 
 
+def split_transfer_cost(
+    S: int,
+    f: int,
+    n: Tuple[int, ...],
+    hw_a: HardwareSpec,
+    hw_b: HardwareSpec,
+    chips: int = 1,
+) -> Tuple[float, float]:
+    """(bytes, seconds) of the split-point activation hand-off (§VII-C).
+
+    The stage-0 output — S batch entries of f channels at the ACTUAL
+    per-axis extents ``n`` (anisotropic volumes price correctly; no cubic
+    assumption) — crosses producer link → host RAM → consumer link once
+    per batch, bounded by the slower of the two devices' host links
+    (``hw.host_link_bw``).  ``chips`` scales the link count per stage.
+    """
+    from .hw import host_link_bw
+
+    nbytes = float(S) * f * _vol(n) * F32
+    return nbytes, nbytes / (host_link_bw(hw_a, hw_b) * chips)
+
+
 @dataclass(frozen=True)
 class LayerCost:
     flops: float  # arithmetic work

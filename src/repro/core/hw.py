@@ -1,4 +1,13 @@
-"""Hardware model constants (target: TPU v5e; container runtime is CPU)."""
+"""Hardware model constants (target: TPU v5e; container runtime is CPU).
+
+A ``HardwareSpec`` is one *device profile*; the heterogeneous planner
+(``planner.plan_hetero``) takes a **set** of profiles and prices each
+pipeline stage on its own profile.  ``ici_bw`` doubles as the device's
+host-link bandwidth (QPI for the Xeon, PCIe for the Titan X, ICI for the
+TPU): the split-point activation hand-off travels through host RAM, so it
+is priced over the slower of the two devices' links
+(``host_link_bw``).
+"""
 
 from __future__ import annotations
 
@@ -11,10 +20,20 @@ class HardwareSpec:
     peak_flops: float = 197e12  # bf16 FLOP/s per chip
     hbm_bw: float = 819e9  # bytes/s per chip
     hbm_bytes: int = 16 * 2**30  # per chip
-    ici_bw: float = 50e9  # bytes/s per link
+    ici_bw: float = 50e9  # bytes/s per link; also the host-link bandwidth
     vmem_bytes: int = 128 * 2**20
     # MXU native tile (used by kernel BlockSpec choices and napkin math)
     mxu: int = 128
+
+
+def host_link_bw(a: "HardwareSpec", b: "HardwareSpec") -> float:
+    """Bandwidth of a host-RAM hand-off between two devices.
+
+    The activation crosses producer link → host RAM → consumer link; the
+    slower link bounds the steady-state rate (the paper's §VII-C hand-off
+    cost, PCIe on its machines).
+    """
+    return min(a.ici_bw, b.ici_bw)
 
 
 TPU_V5E = HardwareSpec()
@@ -37,3 +56,8 @@ TITAN_X = HardwareSpec(
     ici_bw=12e9,  # PCIe 3.0 x16 ~ 12 GB/s effective
     vmem_bytes=3 * 2**20,
 )
+
+# The paper's CPU+GPU machine as a device set: the canonical argument to
+# ``planner.plan_hetero`` / ``plan_all_strategies(devices=...)`` for
+# reproducing its CPU-vs-GPU-vs-pipeline tables analytically.
+PAPER_MACHINES = (XEON_E7_8890V3_4WAY, TITAN_X)

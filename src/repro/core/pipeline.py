@@ -23,8 +23,33 @@ from __future__ import annotations
 
 from typing import Callable, List, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+def steady_state_time(t_stage0: float, t_stage1: float, t_xfer: float = 0.0) -> float:
+    """Per-patch cadence of the queue-depth-1 pipeline (§VII-C).
+
+    The slower stage bounds the rate; the hand-off is not overlapped with
+    compute under queue depth 1, so it adds to every patch's cadence.
+    This is the quantity ``planner.plan_hetero`` maximizes voxels over.
+    """
+    return max(t_stage0, t_stage1) + t_xfer
+
+
+def hetero_stage_devices() -> Tuple[jax.Device, jax.Device]:
+    """The two backends a hetero plan executes on.
+
+    Convention (documented in docs/architecture.md): the plan's
+    ``devices[0]`` profile maps to the host CPU backend and ``devices[1]``
+    to the default accelerator — ``(jax.devices("cpu")[0],
+    jax.devices()[0])``.  On a CPU-only runtime both entries are the same
+    physical backend; the executor still routes stage-0/stage-1 arrays
+    through explicit ``device_put`` + a host-RAM ndarray hand-off so the
+    two-backend contract is exercised end to end.
+    """
+    return jax.devices("cpu")[0], jax.devices()[0]
 
 
 def pipeline_schedule(

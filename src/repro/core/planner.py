@@ -25,6 +25,11 @@ same search under different resource envelopes:
   * ``pipeline2`` — ZNNi "CPU-GPU" (Fig. 8): two pods form a producer-
     consumer pipeline split at layer θ; steady-state time is the max stage
     time; each pod needs only its stage's memory.
+  * ``hetero``    — the general form of ``pipeline2`` over a *set* of
+    device profiles (``plan_hetero``): stage 0 priced on one profile,
+    stage 1 on the other, the hand-off priced over the slower host link,
+    memory budgeted per device.  ``plan_pipeline2`` is now the degenerate
+    two-identical-profiles case.
   * ``spatial``   — beyond-paper: one big patch sharded spatially over all
     chips with halo exchange instead of overlapped independent patches.
 """
@@ -47,8 +52,10 @@ from .cost_model import (
     conv_cost,
     mpf_cost,
     pool_cost,
+    split_transfer_cost,
 )
 from .hw import HardwareSpec
+from .pipeline import steady_state_time
 
 
 @dataclass(frozen=True)
@@ -60,7 +67,10 @@ class InfeasiblePoint:
     slower primitive winning because the faster one's patch no longer
     fits — is observable in ``plan_all_strategies`` output.  ``layer``
     is -1 for a plan-level rejection (the combined working set of an
-    otherwise per-layer-feasible plan).
+    otherwise per-layer-feasible plan).  ``device`` names the profile
+    whose budget rejected the point — the heterogeneous search budgets
+    each stage on its own device, so rejections are per
+    (device, prim, patch); single-device searches leave it empty.
     """
 
     strategy: str
@@ -71,6 +81,7 @@ class InfeasiblePoint:
     reason: str
     needed_bytes: float
     budget_bytes: float
+    device: str = ""
 
 
 @dataclass(frozen=True)
@@ -96,7 +107,22 @@ class Plan:
     total_time: float
     out_voxels: float
     peak_bytes: float
-    theta: int = -1  # pipeline2 split point
+    theta: int = -1  # pipeline2 / hetero split point
+    # -- heterogeneous (two-backend) pipeline metadata ------------------------
+    # devices: per-stage device profile names (stage 0, stage 1); empty for
+    #   single-device plans.  stage_times: steady-state per-stage seconds
+    #   (compute only; the hand-off is xfer_seconds).  stage_peak_bytes /
+    #   stage_memory: each stage's OWN peak and footprint — a stage needs
+    #   only its own layers' memory, budgeted against its own device.
+    #   xfer_bytes is the per-batch split-point activation (actual per-axis
+    #   extents); the executor's measured hand-off bytes must reproduce it.
+    devices: Tuple[str, ...] = ()
+    stage_times: Tuple[float, ...] = ()
+    stage_peak_bytes: Tuple[float, ...] = ()
+    stage_memory: Tuple[MemoryFootprint, ...] = ()
+    stage_ram_budgets: Tuple[Optional[float], ...] = ()
+    xfer_bytes: float = 0.0
+    xfer_seconds: float = 0.0
     # -- runtime metadata (volume tiler/executor contract) -------------------
     # fov:  sliding-window field of view of the net (1D extent, isotropic)
     # core: dense output voxels per axis each patch contributes (m · P)
@@ -151,6 +177,11 @@ class Plan:
             f"S={self.batch} n_in={self.n_in}^3 -> {self.throughput:,.0f} vox/s "
             f"peak={self.peak_bytes/2**30:.2f} GiB"
             + (f" theta={self.theta}" if self.theta >= 0 else "")
+            + (
+                f" devices=({self.devices[0]} | {self.devices[1]})"
+                if len(self.devices) == 2
+                else ""
+            )
         ]
         for c in self.choices:
             S, f, n = c.in_shape
@@ -422,6 +453,8 @@ def _walk(
     m: int = 0,
     strategy: str = "",
     infeasible: Optional[List[InfeasiblePoint]] = None,
+    device: str = "",
+    partial: bool = False,
 ) -> Optional[List[LayerChoice]]:
     """Greedy per-layer fastest-feasible-primitive walk (§VI-A step 3).
 
@@ -434,9 +467,15 @@ def _walk(
     device working set (``LayerCost.memory``) does not fit is skipped —
     and recorded in ``infeasible`` instead of silently omitted — so a
     slower primitive can win the layer because the faster one's patch no
-    longer fits (ZNNi §1's throughput argument).
+    longer fits (ZNNi §1's throughput argument).  ``device`` labels the
+    rejections with the profile whose budget was exceeded.
 
-    Returns None if some layer cannot fit the budgets with any primitive.
+    Returns None if some layer cannot fit the budgets with any primitive —
+    unless ``partial``, where an infeasible layer becomes a ``None`` entry
+    and the walk continues (the heterogeneous search needs per-layer
+    feasibility: a layer too big for one device may run on the other).
+    Geometry violations (MPF divisibility) still return None outright —
+    they are device-independent.
     """
     if not use_mpf:
         geom = None  # plain-pool plans sweep subsamplings: no reuse grid
@@ -454,7 +493,7 @@ def _walk(
         if infeasible is not None:
             infeasible.append(InfeasiblePoint(
                 strategy, prim, m, S, i, "exceeds ram_budget",
-                need, ram_budget,
+                need, ram_budget, device,
             ))
         return False
 
@@ -480,12 +519,16 @@ def _walk(
                 t = c.time(hw, chips)
                 if best is None or t < best[0]:
                     best = (t, prim, c)
+            n_next = n_cur - layer.size + 1
             if best is None:
-                return None
+                if not partial:
+                    return None
+                choices.append(None)  # layer infeasible here; shapes advance
+                f_cur, n_cur = fp, n_next
+                continue
             t, prim, c = best
             if i == first_conv and prim != "overlap_save":
                 geom = None  # executor runs no sweep reuse behind this mix
-            n_next = n_cur - layer.size + 1
             choices.append(
                 LayerChoice(i, "conv", prim, (S_cur, f_cur, n3), (S_cur, fp, (n_next,) * 3), c, t)
             )
@@ -495,35 +538,37 @@ def _walk(
             if use_mpf:
                 if (n_cur + 1) % p != 0:
                     return None
+                n_next = n_cur // p
+                S_next = S_cur * p**3
                 c = mpf_cost(S_cur, f_cur, n3, p, g)
-                if not _ram_ok(c, "mpf", i):
-                    return None
                 if stream_collectives:
                     c = dataclasses.replace(
                         c, peak_bytes=c.peak_bytes / chips, coll_bytes=0.0
                     )
-                if c.peak_bytes > mem_budget:
-                    return None
-                t = c.time(hw, chips)
-                n_next = n_cur // p
-                S_next = S_cur * p**3
-                choices.append(
-                    LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3), (S_next, f_cur, (n_next,) * 3), c, t)
-                )
+                if not _ram_ok(c, "mpf", i) or c.peak_bytes > mem_budget:
+                    if not partial:
+                        return None
+                    choices.append(None)
+                else:
+                    t = c.time(hw, chips)
+                    choices.append(
+                        LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3), (S_next, f_cur, (n_next,) * 3), c, t)
+                    )
                 S_cur, n_cur = S_next, n_next
                 P_cur *= p
             else:
                 if n_cur % p != 0:
                     return None
                 c = pool_cost(S_cur, f_cur, n3, p)
-                if not _ram_ok(c, "pool", i):
-                    return None
-                if c.peak_bytes > mem_budget:
-                    return None
-                t = c.time(hw, chips)
-                choices.append(
-                    LayerChoice(i, "pool", "pool", (S_cur, f_cur, n3), (S_cur, f_cur, (n_cur // p,) * 3), c, t)
-                )
+                if not _ram_ok(c, "pool", i) or c.peak_bytes > mem_budget:
+                    if not partial:
+                        return None
+                    choices.append(None)
+                else:
+                    t = c.time(hw, chips)
+                    choices.append(
+                        LayerChoice(i, "pool", "pool", (S_cur, f_cur, n3), (S_cur, f_cur, (n_cur // p,) * 3), c, t)
+                    )
                 n_cur //= p
     return choices
 
@@ -797,38 +842,137 @@ def plan_pipeline2(
 
     Queue depth 1 (paper §VII-C): producer stalls until consumer drains, so
     steady-state throughput is out_voxels / max(stage_time) and each stage
-    needs only its own layers' memory.
+    needs only its own layers' memory.  Degenerate case of ``plan_hetero``
+    with two identical profiles (same split search, stage times, and
+    hand-off pricing — ``host_link_bw(hw, hw) == hw.ici_bw``).
     """
+    return plan_hetero(
+        net, (hw, hw), chips_per_stage=chips_per_stage,
+        batches=batches, max_m=max_m, strategy_name="pipeline2",
+    )
+
+
+def plan_hetero(
+    net: ConvNetConfig,
+    devices: Sequence[HardwareSpec],
+    *,
+    chips_per_stage: int = 1,
+    batches: Sequence[int] = (1,),
+    max_m: int = 64,
+    ram_budgets: Optional[Sequence[Optional[float]]] = None,
+    strategy_name: str = "hetero",
+    infeasible: Optional[List[InfeasiblePoint]] = None,
+) -> Optional[Plan]:
+    """ZNNi's headline CPU+GPU split over a *set* of device profiles (§VII).
+
+    Searches layer→device splits θ where stage 0 (layers ``[:θ]``) is
+    priced on one profile and stage 1 (layers ``[θ:]``) on the other;
+    both stage orders are tried when the profiles differ.  Steady-state
+    time = max of the per-stage times + the split-point activation
+    hand-off, priced at actual per-axis extents over the slower of the
+    two devices' host links (``cost_model.split_transfer_cost``); the
+    winning plan records the per-stage predictions the two-backend
+    executor must reproduce (``stage_times``, ``xfer_bytes``,
+    ``xfer_seconds``).
+
+    Memory is budgeted **per device**: each stage's layer walk runs
+    against its own profile's HBM (a layer too big for one device may
+    still land on the other), per-stage peaks and analytic footprints
+    are recorded on the plan (``stage_peak_bytes``, ``stage_memory``),
+    and optional per-device ``ram_budgets`` reject stages whose working
+    set does not fit — recorded in ``infeasible`` per (device, prim,
+    patch) rather than silently dropped.
+    """
+    if len(devices) != 2:
+        raise ValueError(f"plan_hetero needs exactly 2 device profiles, got {len(devices)}")
+    if ram_budgets is None:
+        ram_budgets = (None, None)
     best: Optional[Plan] = None
     L = len(net.layers)
+    orders = [(0, 1)] if devices[0] == devices[1] else [(0, 1), (1, 0)]
     for S in batches:
         for m in range(1, max_m + 1):
             n_in = _n_in_for_m(net, m)
-            choices = _walk(
-                net, S, n_in, True, hw,
-                hw.hbm_bytes * chips_per_stage,
-                chips=chips_per_stage, stream_collectives=True,
-            )
-            if choices is None:
-                continue
-            times = [c.time_s for c in choices]
-            for theta in range(1, L):
-                t0, t1 = sum(times[:theta]), sum(times[theta:])
-                # activation hand-off between pods crosses the slow axis once
-                S_t, f_t, n_t = choices[theta].in_shape
-                xfer = S_t * f_t * (n_t[0] ** 3) * 4 / (hw.ici_bw * chips_per_stage)
-                stage = max(t0, t1) + xfer
-                vox = _out_voxels(net, S, m, True, n_in)
-                peak = max(c.cost.peak_bytes for c in choices)
-                plan = Plan(
-                    net.name, "pipeline2", 2 * chips_per_stage, S, n_in, m,
-                    tuple(choices), stage, vox, peak, theta=theta,
-                    fov=net.field_of_view(), core=m * net.total_pooling(),
-                    memory=_plan_memory_analytic(choices),
-                )
-                if best is None or plan.throughput > best.throughput:
-                    best = plan
+            walks = []
+            for hw_d, ram_d in zip(devices, ram_budgets):
+                walks.append(_walk(
+                    net, S, n_in, True, hw_d,
+                    hw_d.hbm_bytes * chips_per_stage,
+                    chips=chips_per_stage, stream_collectives=True,
+                    ram_budget=ram_d, m=m, strategy=strategy_name,
+                    infeasible=infeasible, device=hw_d.name, partial=True,
+                ))
+            if any(w is None for w in walks):
+                continue  # geometry violation: device-independent
+            vox = _out_voxels(net, S, m, True, n_in)
+            for a, b in orders:
+                hw_a, hw_b = devices[a], devices[b]
+                c_a, c_b = walks[a], walks[b]
+                for theta in range(1, L):
+                    stage0, stage1 = c_a[:theta], c_b[theta:]
+                    if any(c is None for c in stage0) or any(c is None for c in stage1):
+                        continue  # some layer does not fit its stage's device
+                    t0 = sum(c.time_s for c in stage0)
+                    t1 = sum(c.time_s for c in stage1)
+                    # split-point activation hand-off through host RAM
+                    # (shape chain is hardware-independent: c_a == c_b here)
+                    S_t, f_t, n_t = c_b[theta].in_shape
+                    xfer_bytes, xfer_s = split_transfer_cost(
+                        S_t, f_t, n_t, hw_a, hw_b, chips_per_stage
+                    )
+                    peaks = (
+                        max(c.cost.peak_bytes for c in stage0),
+                        max(c.cost.peak_bytes for c in stage1),
+                    )
+                    mems = (
+                        _plan_memory_analytic(stage0),
+                        _plan_memory_analytic(stage1),
+                    )
+                    budgets = (ram_budgets[a], ram_budgets[b])
+                    ok = True
+                    for (hw_d, mem_d, bud_d) in zip((hw_a, hw_b), mems, budgets):
+                        if bud_d is not None and mem_d.device_bytes > bud_d:
+                            if infeasible is not None:
+                                infeasible.append(InfeasiblePoint(
+                                    strategy_name, stage0[0].prim, m, S, -1,
+                                    "exceeds ram_budget", mem_d.device_bytes,
+                                    bud_d, hw_d.name,
+                                ))
+                            ok = False
+                    if not ok:
+                        continue
+                    stage = steady_state_time(t0, t1, xfer_s)
+                    # plan.memory = the worse stage's footprint (each device
+                    # holds only its own stage; the old all-layers aggregate
+                    # double-counted across the split)
+                    worst = max(mems, key=lambda mm: mm.device_bytes)
+                    plan = Plan(
+                        net.name, strategy_name, 2 * chips_per_stage, S, n_in, m,
+                        tuple(stage0) + tuple(stage1), stage, vox,
+                        max(peaks), theta=theta,
+                        devices=(hw_a.name, hw_b.name),
+                        stage_times=(t0, t1),
+                        stage_peak_bytes=peaks,
+                        stage_memory=mems,
+                        stage_ram_budgets=budgets,
+                        xfer_bytes=xfer_bytes, xfer_seconds=xfer_s,
+                        fov=net.field_of_view(), core=m * net.total_pooling(),
+                        memory=worst,
+                    )
+                    if best is None or plan.throughput > best.throughput:
+                        best = plan
     return best
+
+
+def spatial_halo_bytes(S: int, f: int, n: Sequence[int], k: int) -> float:
+    """Halo-exchange bytes for one conv layer of a spatially sharded patch.
+
+    Two faces per axis, each face = product of the OTHER two axes' extents
+    (not ``n[0]**2`` — anisotropic patches have three distinct face areas),
+    times the halo depth (k-1), channels, and batch.
+    """
+    faces = 2 * (n[1] * n[2] + n[0] * n[2] + n[0] * n[1])
+    return float(faces) * (k - 1) * f * S * F32
 
 
 def plan_spatial(
@@ -853,15 +997,14 @@ def plan_spatial(
             if choices is None:
                 continue
             total = sum(c.time_s for c in choices)
-            # halo bytes per layer: 6 faces * n² * halo depth * f * 4B
+            # halo bytes per layer: 2 faces per axis * halo depth * f * 4B
             halo_t = 0.0
             for c in choices:
                 if c.kind != "conv":
                     continue
                 S_c, f_c, n_c = c.in_shape
                 k = net.layers[c.index].size
-                halo_bytes = 6 * (n_c[0] ** 2) * (k - 1) * f_c * S_c * 4
-                halo_t += halo_bytes / hw.ici_bw
+                halo_t += spatial_halo_bytes(S_c, f_c, n_c, k) / hw.ici_bw
             total = total + halo_t
             # all chips advance in lockstep: per-patch time is `total`, and
             # the mesh completes `chips` patches worth of output per step.
@@ -880,8 +1023,9 @@ def plan_spatial(
 
 def plan_all_strategies(
     net: ConvNetConfig,
-    hw: HardwareSpec,
+    hw: Optional[HardwareSpec] = None,
     *,
+    devices: Optional[Sequence[HardwareSpec]] = None,
     chips: int = 256,
     volume_shape: Optional[Sequence[int]] = None,
     ram_budget: Optional[float] = None,
@@ -890,14 +1034,26 @@ def plan_all_strategies(
     search sweep-aware (the multi-chip strategies execute through other
     schedules and keep context-free costing).
 
+    ``devices`` — a pair of ``HardwareSpec`` profiles, e.g.
+    ``hw.PAPER_MACHINES`` — adds a ``"hetero"`` entry: the two-backend
+    split search (``plan_hetero``) with stage 0 priced on one profile and
+    stage 1 on the other, memory budgeted per device.  When ``hw`` is
+    omitted the single-device searches run on ``devices[-1]`` (the
+    accelerator of the pair).
+
     ``ram_budget`` constrains the single-host searches (``single``,
     ``baseline_naive``, ``direct_only``) to the paper's RAM envelope; the
     multi-chip strategies keep their own aggregate-HBM envelopes.  The
     returned dict always contains an extra ``"infeasible"`` key: the
     tuple of (prim, patch-size) points the budget rejected, each with a
-    reason — benchmark tables stay rectangular, and the budget where a
-    faster primitive stops fitting (so a slower one wins) is visible.
+    reason and the device whose budget rejected it — benchmark tables
+    stay rectangular, and the budget where a faster primitive stops
+    fitting (so a slower one wins) is visible.
     """
+    if hw is None:
+        if devices is None:
+            raise ValueError("plan_all_strategies needs `hw`, `devices`, or both")
+        hw = devices[-1]
     infeasible: List[InfeasiblePoint] = []
     out = {
         "single": plan_single(
@@ -916,5 +1072,9 @@ def plan_all_strategies(
             ram_budget=ram_budget, infeasible=infeasible,
         ),
     }
+    if devices is not None:
+        out["hetero"] = plan_hetero(
+            net, tuple(devices), chips_per_stage=1, infeasible=infeasible,
+        )
     out["infeasible"] = tuple(infeasible)
     return out

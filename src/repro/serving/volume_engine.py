@@ -41,9 +41,12 @@ admitted so the queue cannot stall.  Pass ``ram_budget`` to run the
 executor host-staged (see ``volume/executor.py``).
 
 The engine drives ``PlanExecutor.run_patch_batch`` (single fused step per
-tick).  pipeline2 plans are accepted — their primitives are identical; the
-two-stage scan schedule is an executor-level optimization used by
-``PlanExecutor.run`` for offline sweeps, not by the tick loop.
+tick).  pipeline2 and hetero plans are accepted — their per-layer
+primitives are identical to a single-device plan's; the split-point
+schedules (the two-stage pod scan, the two-backend host-RAM pipeline)
+are executor-level optimizations used by ``PlanExecutor.run`` for
+offline sweeps, not by the tick loop, which serves every plan through
+the one fused step.
 """
 
 from __future__ import annotations

@@ -1,0 +1,249 @@
+"""Heterogeneous device-set planning + two-backend execution (ISSUE 6).
+
+Pins the plan_hetero contract: degenerate identical-profile parity with
+plan_pipeline2, per-stage memory/peaks priced on each stage's own device
+(the ISSUE-6 bugfix — the old pipeline2 aggregated over ALL layers),
+per-axis transfer/halo byte formulas (no cubic assumption), θ moving more
+layers onto a scaled-up profile, per-device InfeasiblePoint reporting,
+the paper's CPU-vs-GPU-vs-pipeline ordering on its own machines, and the
+two-backend executor path being bitwise-equal to the single-backend dense
+path with its measured hand-off bytes matching the plan exactly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ZNNI_NETS
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet, planner
+from repro.core.cost_model import split_transfer_cost
+from repro.core.hw import (
+    PAPER_MACHINES,
+    TITAN_X,
+    TPU_V5E,
+    XEON_E7_8890V3_4WAY,
+    host_link_bw,
+)
+from repro.core.pipeline import hetero_stage_devices, steady_state_time
+from repro.volume import PlanExecutor
+
+TOY = ConvNetConfig(
+    "toy-hetero", 1,
+    (L("conv", 3, 4), L("pool", 2), L("conv", 3, 4), L("conv", 2, 2)),
+)
+
+
+def _layer_share(plan, device_name):
+    """Layers the named device's stage carries in ``plan``."""
+    n = len(plan.choices)
+    return plan.theta if plan.devices[0] == device_name else n - plan.theta
+
+
+def _scaled(hw, factor, name):
+    return dataclasses.replace(
+        hw, name=name, peak_flops=hw.peak_flops * factor, hbm_bw=hw.hbm_bw * factor
+    )
+
+
+# -- cost-model pieces -------------------------------------------------------
+
+
+def test_host_link_bw_is_slower_link():
+    assert host_link_bw(XEON_E7_8890V3_4WAY, TITAN_X) == TITAN_X.ici_bw
+    assert host_link_bw(TPU_V5E, TPU_V5E) == TPU_V5E.ici_bw
+
+
+def test_split_transfer_uses_per_axis_extents():
+    """Anisotropic activations: bytes = S*f*nx*ny*nz*4, NOT S*f*nx^3*4."""
+    nbytes, secs = split_transfer_cost(2, 3, (5, 7, 11), TPU_V5E, TITAN_X)
+    assert nbytes == 2 * 3 * 5 * 7 * 11 * 4
+    assert secs == nbytes / min(TPU_V5E.ici_bw, TITAN_X.ici_bw)
+    # chips divide the hand-off bandwidth
+    _, secs2 = split_transfer_cost(2, 3, (5, 7, 11), TPU_V5E, TITAN_X, chips=4)
+    assert secs2 == secs / 4
+
+
+def test_spatial_halo_bytes_per_axis():
+    """Each axis contributes two faces of the OTHER axes' extents."""
+    got = planner.spatial_halo_bytes(1, 2, (4, 2, 3), 3)
+    assert got == 2 * (2 * 3 + 4 * 3 + 4 * 2) * (3 - 1) * 2 * 1 * 4
+    # cubic case agrees with the old 6*n^2 formula
+    assert planner.spatial_halo_bytes(1, 1, (5, 5, 5), 3) == 6 * 25 * 2 * 4
+
+
+def test_steady_state_time():
+    assert steady_state_time(3.0, 1.0, 0.5) == 3.5
+    assert steady_state_time(1.0, 3.0) == 3.0
+
+
+# -- degenerate parity: two identical profiles == pipeline2 ------------------
+
+
+def test_identical_profiles_reproduce_pipeline2():
+    for name in ("n337", "n726"):
+        net = ZNNI_NETS[name]
+        p2 = planner.plan_pipeline2(net, TPU_V5E, chips_per_stage=1, max_m=8)
+        ph = planner.plan_hetero(net, (TPU_V5E, TPU_V5E), chips_per_stage=1, max_m=8)
+        assert p2 is not None and ph is not None
+        assert p2.strategy == "pipeline2" and ph.strategy == "hetero"
+        assert (p2.theta, p2.m_final, p2.batch) == (ph.theta, ph.m_final, ph.batch)
+        assert p2.total_time == ph.total_time
+        assert p2.prims == ph.prims
+        assert p2.stage_times == ph.stage_times
+        assert p2.xfer_bytes == ph.xfer_bytes
+
+
+def test_pipeline2_carries_per_stage_metadata():
+    """The ISSUE-6 bugfix: peaks/memory per stage, not over ALL layers."""
+    net = ZNNI_NETS["n726"]
+    plan = planner.plan_pipeline2(net, TPU_V5E, chips_per_stage=1, max_m=8)
+    th = plan.theta
+    stage0, stage1 = plan.choices[:th], plan.choices[th:]
+    assert plan.stage_peak_bytes == (
+        max(c.cost.peak_bytes for c in stage0),
+        max(c.cost.peak_bytes for c in stage1),
+    )
+    assert plan.peak_bytes == max(plan.stage_peak_bytes)
+    # each stage's footprint sums resident state over ITS layers only
+    m0, m1 = plan.stage_memory
+    assert m0.spectra_bytes == sum(
+        c.cost.memory.spectra_bytes for c in stage0 if c.cost.memory
+    )
+    assert m1.spectra_bytes == sum(
+        c.cost.memory.spectra_bytes for c in stage1 if c.cost.memory
+    )
+    # plan.memory is the worse stage's footprint — at most the old
+    # all-layers aggregate, never the double-counted sum
+    agg = planner._plan_memory_analytic(plan.choices)
+    assert plan.memory.device_bytes == max(m0.device_bytes, m1.device_bytes)
+    assert plan.memory.device_bytes <= agg.device_bytes
+
+
+def test_hetero_xfer_priced_on_slower_host_link():
+    net = ZNNI_NETS["n726"]
+    plan = planner.plan_hetero(net, PAPER_MACHINES, chips_per_stage=1, max_m=8)
+    assert plan is not None and len(plan.devices) == 2
+    S_t, f_t, n_t = plan.choices[plan.theta].in_shape
+    want_bytes = S_t * f_t * n_t[0] * n_t[1] * n_t[2] * 4
+    assert plan.xfer_bytes == want_bytes
+    assert plan.xfer_seconds == want_bytes / host_link_bw(*PAPER_MACHINES)
+    assert plan.total_time == steady_state_time(*plan.stage_times, plan.xfer_seconds)
+
+
+# -- θ direction under profile scaling ---------------------------------------
+
+
+def test_theta_moves_toward_scaled_up_profile():
+    """Scaling one profile's peak_flops/hbm_bw moves layers onto it."""
+    for name in ("n337", "n537", "n726"):
+        net = ZNNI_NETS[name]
+        nl = len(net.layers)
+        base = planner.plan_hetero(net, (TPU_V5E, TPU_V5E), max_m=8)
+        hi, lo = max(base.theta, nl - base.theta), min(base.theta, nl - base.theta)
+        up = planner.plan_hetero(net, (TPU_V5E, _scaled(TPU_V5E, 8, "fast")), max_m=8)
+        dn = planner.plan_hetero(net, (TPU_V5E, _scaled(TPU_V5E, 1 / 8, "slow")), max_m=8)
+        # the 8x-faster device carries at least the heavier base stage; the
+        # 8x-slower one at most the lighter base stage
+        assert _layer_share(up, "fast") >= hi
+        assert _layer_share(dn, "slow") <= lo
+
+
+# -- the paper's machines (satellite: wire the dead profiles in) -------------
+
+
+def test_paper_machines_ordering():
+    """Analytic reproduction of the paper's CPU-vs-GPU-vs-pipeline story
+    on its own machines, each budgeted to its own RAM: the GPU wins the
+    small-FOV net, the CPU wins the large-FOV net (12 GiB cripples the
+    GPU there), and the CPU+GPU pipeline beats BOTH singles on n726 —
+    the paper's headline claim."""
+    budgets = (float(XEON_E7_8890V3_4WAY.hbm_bytes), float(TITAN_X.hbm_bytes))
+
+    def singles(net, max_m):
+        cpu = planner.plan_single(net, XEON_E7_8890V3_4WAY, max_m=max_m, ram_budget=budgets[0])
+        gpu = planner.plan_single(net, TITAN_X, max_m=max_m, ram_budget=budgets[1])
+        return cpu, gpu
+
+    cpu, gpu = singles(ZNNI_NETS["n337"], 24)
+    assert gpu.throughput > cpu.throughput  # small FOV: GPU-favored
+    cpu, gpu = singles(ZNNI_NETS["n926"], 24)
+    assert cpu.throughput > gpu.throughput  # large FOV: RAM-starved GPU loses
+
+    net = ZNNI_NETS["n726"]
+    hetero = planner.plan_hetero(
+        net, PAPER_MACHINES, chips_per_stage=1, max_m=40, ram_budgets=budgets
+    )
+    cpu, gpu = singles(net, 40)
+    assert hetero is not None
+    assert set(hetero.devices) == {XEON_E7_8890V3_4WAY.name, TITAN_X.name}
+    assert hetero.throughput > cpu.throughput
+    assert hetero.throughput > gpu.throughput
+
+
+def test_plan_all_strategies_devices():
+    out = planner.plan_all_strategies(TOY, devices=PAPER_MACHINES, chips=4)
+    hetero = out["hetero"]
+    assert hetero is not None and hetero.strategy == "hetero"
+    assert len(hetero.stage_times) == 2 and len(hetero.stage_memory) == 2
+    assert out["infeasible"] == ()  # unconstrained search records nothing
+    # hw defaults to the accelerator of the pair for the single searches
+    explicit = planner.plan_all_strategies(TOY, TITAN_X, chips=4)
+    assert out["single"].throughput == explicit["single"].throughput
+
+
+def test_per_device_infeasible_reporting():
+    pts = []
+    plan = planner.plan_hetero(
+        TOY, (XEON_E7_8890V3_4WAY, TITAN_X), max_m=2,
+        ram_budgets=(None, 64.0),  # 64 B: nothing fits the "GPU"
+        infeasible=pts,
+    )
+    assert plan is None  # one stage must always land on the starved device
+    assert pts and all(p.device == TITAN_X.name for p in pts)
+    assert all(p.strategy == "hetero" for p in pts)
+
+
+# -- two-backend execution ---------------------------------------------------
+
+
+def test_hetero_executor_bitwise_equals_dense(rng):
+    """The split jit0∘jit1 across two backends reproduces the one-jit
+    dense path bit for bit, its hand-off bytes match the plan exactly,
+    and the per-stage/transfer counters land in last_stats."""
+    net = TOY
+    plan = planner.plan_hetero(net, PAPER_MACHINES, chips_per_stage=1, max_m=1)
+    assert plan is not None and 0 < plan.theta < len(net.layers)
+    params = convnet.init_params(jax.random.PRNGKey(3), net)
+    fov, core = plan.fov, plan.core
+    vol = rng.normal(
+        size=(1, 2 * core + 1 + fov - 1, 2 * core + fov - 1, core + fov - 1)
+    ).astype(np.float32)
+
+    ex = PlanExecutor(params, net, plan)
+    assert ex.hetero and ex.theta == plan.theta
+    got = ex.run(vol)
+    want = np.asarray(
+        convnet.apply_dense_reference(params, net, jnp.asarray(vol)[None])[0]
+    )
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+    # bitwise vs the single-backend dense executor on the same prims/m/S
+    dense = PlanExecutor(params, net, prims=plan.prims, m=plan.m_final, batch=plan.batch)
+    np.testing.assert_array_equal(got, dense.run(vol))
+
+    s = ex.last_stats
+    n_patches = s["patches"]
+    assert s["xfer_bytes"] == s["predicted_xfer_bytes"]
+    assert s["predicted_xfer_bytes"] == plan.xfer_bytes / plan.batch * n_patches
+    assert s["stage0_seconds"] > 0 and s["stage1_seconds"] > 0
+    assert s["xfer_seconds"] > 0
+    assert s["predicted_stage0_seconds"] > 0 and s["predicted_stage1_seconds"] > 0
+
+
+def test_hetero_stage_devices_contract():
+    d0, d1 = hetero_stage_devices()
+    assert d0 == jax.devices("cpu")[0]
+    assert d1 == jax.devices()[0]
