@@ -50,18 +50,15 @@ import math
 import jax
 import numpy as np
 
-from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.configs.znni_nets import BENCH_NET, ZNNI_NETS, net_by_name
 from repro.core import convnet, planner
 from repro.core.hw import PAPER_MACHINES, TPU_V5E
 from repro.volume import PlanExecutor
 
-# 8 input channels so layer-0 input transforms carry real work: with a
-# single-channel input the term every FFT row amortizes (fft_cached: kernel
-# spectra; overlap_save: input segment spectra) is measurement noise.
-NET = ConvNetConfig(
-    "bench-net", 8,
-    (L("conv", 3, 8), L("pool", 2), L("conv", 3, 8), L("pool", 2), L("conv", 3, 3)),
-)
+# default net: 8 input channels so layer-0 input transforms carry real
+# work (single-channel input makes the amortized-FFT terms measurement
+# noise).  ``--net n337|n537|n726|n926`` swaps in a paper Table III net.
+NET = BENCH_NET
 
 REUSE_KEYS = (
     "os_seg_fft", "os_seg_hits", "os_mad_segments",
@@ -69,8 +66,15 @@ REUSE_KEYS = (
 )
 
 
-def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
+def bench_plans(plans: dict, params, vol, reps: int = 3, net=NET) -> dict:
     """Run all plans in interleaved rounds; report each plan's best sweep.
+
+    ``plans`` maps row name -> (plan, executor kwargs) — e.g.
+    ``{"overlap_save+deep": (plan, {"deep_reuse": True})}``; rows opt into
+    the persisted per-hardware tuned config with ``{"tuned": "auto"}``
+    (legacy rows pass ``tuned=None`` so the BENCH_00x trajectory stays
+    apples-to-apples), and every JSON row carries ``tuned_config``
+    provenance (the loaded config's key fields, or null).
 
     Interleaving the repetitions (rather than finishing one plan before
     starting the next) keeps a noisy shared host from systematically
@@ -78,11 +82,14 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
     paired-measurement discipline any cross-primitive wall-clock claim
     needs on CPU.
     """
+    out_ch = [l for l in net.layers if l.kind == "conv"][-1].out_channels
     exs, best = {}, {}
-    for name, (plan, deep) in plans.items():
-        ex = PlanExecutor(params, NET, plan, deep_reuse=deep)
+    for name, (plan, kwargs) in plans.items():
+        kw = dict(kwargs)
+        kw.setdefault("tuned", None)
+        ex = PlanExecutor(params, net, plan, **kw)
         out = ex.run(vol)  # warmup: compiles + first sweep
-        assert out.shape[0] == 3
+        assert out.shape[0] == out_ch
         exs[name] = ex
     for _ in range(reps):
         for name, ex in exs.items():
@@ -91,7 +98,7 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
                 best[name] = ex.last_stats
     rows = {}
     for name, s in best.items():
-        plan, _deep = plans[name]
+        plan, _kwargs = plans[name]
         extra = ""
         if s["os_seg_fft"]:
             total = s["os_seg_fft"] + s["os_seg_hits"]
@@ -157,6 +164,9 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
             ),
         }
         row.update({k: s[k] for k in REUSE_KEYS})
+        # tuned-config provenance (repro.tuning): which persisted
+        # per-hardware config (if any) shaped this row's executor
+        row["tuned_config"] = exs[name].tuned_provenance()
         if plan.strategy == "hetero":
             # two-backend split: measured per-stage / hand-off counters
             # next to the plan's predictions (xfer bytes match exactly)
@@ -181,7 +191,7 @@ def bench_plans(plans: dict, params, vol, reps: int = 3) -> dict:
     return rows
 
 
-def budget_sweep(shape, batch, max_m) -> list:
+def budget_sweep(shape, batch, max_m, net=NET) -> list:
     """Planner-side throughput-vs-RAM curve (the paper's Fig. 5 analog).
 
     Re-runs the constrained search at a ladder of budgets below the
@@ -191,12 +201,12 @@ def budget_sweep(shape, batch, max_m) -> list:
     where a faster primitive's patch stops fitting is visible as the
     winner changing down the ladder.
     """
-    first_conv = next(i for i, l in enumerate(NET.layers) if l.kind == "conv")
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
     # anchor the ladder on the memory-hungriest primitive at the largest
     # patch (whole-patch FFT working set): the top rung admits everything,
     # the lower rungs progressively reject the fat primitives
     anchor = planner.plan_single(
-        NET, TPU_V5E, max_m=max_m, batches=(batch,),
+        net, TPU_V5E, max_m=max_m, batches=(batch,),
         conv_prims=("fft_cached",), strategy_name="anchor",
         ram_budget=float("inf"),
     )
@@ -205,7 +215,7 @@ def budget_sweep(shape, batch, max_m) -> list:
         budget = anchor.memory.device_bytes * frac
         pts: list = []
         plan = planner.plan_single(
-            NET, TPU_V5E, max_m=max_m, batches=(batch,),
+            net, TPU_V5E, max_m=max_m, batches=(batch,),
             volume_shape=shape, ram_budget=budget, infeasible=pts,
         )
         row = {
@@ -232,6 +242,10 @@ def budget_sweep(shape, batch, max_m) -> list:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default=BENCH_NET.name,
+                    choices=[BENCH_NET.name, *sorted(ZNNI_NETS)],
+                    help="net to sweep: the CI bench net (default) or a "
+                         "paper Table III net")
     ap.add_argument("--m", type=int, default=2)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--reps", type=int, default=3)
@@ -247,8 +261,9 @@ def main(argv=None) -> None:
     if args.quick:
         args.m, args.batch, args.reps = 1, 1, 1
 
-    params = convnet.init_params(jax.random.PRNGKey(0), NET)
-    probe = planner.plan_single(NET, TPU_V5E, max_m=args.m, batches=(args.batch,))
+    net = net_by_name(args.net)
+    params = convnet.init_params(jax.random.PRNGKey(0), net)
+    probe = planner.plan_single(net, TPU_V5E, max_m=args.m, batches=(args.batch,))
     if probe is None:
         raise SystemExit(
             f"no feasible plan for --m {args.m} --batch {args.batch} "
@@ -261,7 +276,7 @@ def main(argv=None) -> None:
     # real volume sweep lives in and the one overlap-save reuse targets
     xc = 3 if args.quick else 4
     shape = (xc * core + 3 + fov - 1, 2 * core + fov - 1, 2 * core + fov - 1)
-    vol = rng.normal(size=(NET.in_channels,) + shape).astype(np.float32)
+    vol = rng.normal(size=(net.in_channels,) + shape).astype(np.float32)
     print(f"volume {shape} -> dense {tuple(s - fov + 1 for s in shape)}  "
           f"(patch extent {probe.patch_extent}^3, core {core}^3)")
 
@@ -270,57 +285,64 @@ def main(argv=None) -> None:
     # windows have a cross-patch identity for the sweep cache to exploit),
     # fft_cached deeper — a per-layer mix plan_fixed prices directly, in
     # the sweep's PlanGeometry so predicted counters are exact.
-    first_conv = next(i for i, l in enumerate(NET.layers) if l.kind == "conv")
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
     os_prims = [
         "overlap_save" if i == first_conv
         else ("fft_cached" if l.kind == "conv" else "mpf")
-        for i, l in enumerate(NET.layers)
+        for i, l in enumerate(net.layers)
     ]
     # (plan, deep_reuse) per row: the plain overlap_save row is the PR-3
     # baseline (input-spectra reuse only) for the paired A/B measurement
+    deep_plan = planner.plan_fixed(
+        net, TPU_V5E, os_prims, m=args.m, batch=args.batch,
+        strategy_name="overlap_save_deep", volume_shape=shape,
+        ram_budget=args.ram_budget,
+    )
     plans = {
-        "single(mpf)": (probe, True),
+        "single(mpf)": (probe, {}),
         "fft_cached": (planner.plan_single(
-            NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
+            net, TPU_V5E, max_m=args.m, batches=(args.batch,),
             conv_prims=("fft_cached",), strategy_name="fft_cached",
-        ), True),
+        ), {}),
         "overlap_save": (planner.plan_fixed(
-            NET, TPU_V5E, os_prims, m=args.m, batch=args.batch,
+            net, TPU_V5E, os_prims, m=args.m, batch=args.batch,
             strategy_name="overlap_save", volume_shape=shape,
             deep_reuse=False, ram_budget=args.ram_budget,
-        ), False),
-        "overlap_save+deep": (planner.plan_fixed(
-            NET, TPU_V5E, os_prims, m=args.m, batch=args.batch,
-            strategy_name="overlap_save_deep", volume_shape=shape,
-            ram_budget=args.ram_budget,
-        ), True),
+        ), {"deep_reuse": False}),
+        "overlap_save+deep": (deep_plan, {}),
+        # the deployed configuration under the persisted per-hardware
+        # tuned config (repro.tuning): same plan geometry as
+        # overlap_save+deep, execution knobs (fuse_pairs, fprime_chunk,
+        # use_pallas) from the autotuner — the paired row that shows what
+        # tuning buys on THIS machine
+        "fused_tuned": (deep_plan, {"tuned": "auto"}),
         "baseline_naive": (planner.plan_single(
-            NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
+            net, TPU_V5E, max_m=args.m, batches=(args.batch,),
             use_mpf=False, strategy_name="baseline_naive",
-        ), True),
+        ), {}),
         "direct_only": (planner.plan_single(
-            NET, TPU_V5E, max_m=args.m, batches=(args.batch,),
+            net, TPU_V5E, max_m=args.m, batches=(args.batch,),
             conv_prims=("direct",), strategy_name="direct_only",
-        ), True),
+        ), {}),
         "pipeline2": (planner.plan_pipeline2(
-            NET, TPU_V5E, chips_per_stage=1, max_m=args.m,
+            net, TPU_V5E, chips_per_stage=1, max_m=args.m,
             batches=(args.batch,),
-        ), True),
+        ), {}),
         # the paper's CPU+GPU machine as a device set: stage 0 priced on
         # one profile, stage 1 on the other, executed as a two-backend
         # pipeline (host CPU + default accelerator, host-RAM hand-off)
         "hetero": (planner.plan_hetero(
-            NET, PAPER_MACHINES, chips_per_stage=1, max_m=args.m,
+            net, PAPER_MACHINES, chips_per_stage=1, max_m=args.m,
             batches=(args.batch,),
-        ), True),
+        ), {}),
     }
     feasible = {}
-    for name, (plan, deep) in plans.items():
+    for name, (plan, kwargs) in plans.items():
         if plan is None:
             print(f"{name:<18s} infeasible under budget")
         else:
-            feasible[name] = (plan, deep)
-    rows = bench_plans(feasible, params, vol, reps=args.reps)
+            feasible[name] = (plan, kwargs)
+    rows = bench_plans(feasible, params, vol, reps=args.reps, net=net)
     if {"overlap_save", "fft_cached"} <= rows.keys():
         r = rows["overlap_save"]["measured_voxps"] / rows["fft_cached"]["measured_voxps"]
         print(f"overlap_save / fft_cached: {r:.2f}x "
@@ -331,10 +353,10 @@ def main(argv=None) -> None:
         print(f"overlap_save+deep / overlap_save: {r:.2f}x "
               "(deeper-layer activation reuse across patches)")
     print("-- throughput vs. RAM budget (planner, Fig. 5 analog) --")
-    sweep_rows = budget_sweep(shape, args.batch, max(args.m, 2))
+    sweep_rows = budget_sweep(shape, args.batch, max(args.m, 2), net=net)
     if args.json:
         payload = {
-            "net": NET.name,
+            "net": net.name,
             "volume_shape": list(shape),
             "m": args.m,
             "batch": args.batch,

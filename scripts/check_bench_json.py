@@ -30,6 +30,10 @@ REQUIRED_ROW_KEYS = (
     "predicted_peak_device_bytes",
     "predicted_memory",
     "ram_budget",
+    # tuned-config provenance (ISSUE 7): which persisted per-hardware
+    # config shaped the row's executor — null for untuned legacy rows,
+    # but the KEY must exist so a row can never silently drop it
+    "tuned_config",
 )
 
 HETERO_ROW_KEYS = (
@@ -83,6 +87,20 @@ def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
         devs = hetero.get("devices")
         if devs is not None and len(devs) != 2:
             errors.append(f"row 'hetero': expected 2 devices, got {devs!r}")
+    # the tuned row (ISSUE 7) must really be tuned: non-null provenance
+    # carrying the (device kind, net) key the config was persisted under
+    fused = (rows or {}).get("fused_tuned")
+    if fused is not None:
+        tc = fused.get("tuned_config")
+        if not isinstance(tc, dict):
+            errors.append(
+                "row 'fused_tuned': tuned_config is null — no persisted "
+                "config was loaded (run python -m repro.tuning.autotune)"
+            )
+        else:
+            for key in ("device_kind", "net"):
+                if not tc.get(key):
+                    errors.append(f"row 'fused_tuned': tuned_config missing {key!r}")
     sweep = payload.get("budget_sweep")
     if not sweep:
         errors.append("missing budget_sweep block")

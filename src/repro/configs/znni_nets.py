@@ -58,3 +58,25 @@ N926 = ConvNetConfig(
 )
 
 ZNNI_NETS = {c.name: c for c in (N337, N537, N726, N926)}
+
+# The CI-sized benchmark net (not a paper net): 8 input channels so layer-0
+# input transforms carry real work, small enough that the full strategy
+# matrix sweeps in seconds.  Shared by benchmarks/volume_throughput.py and
+# repro.tuning.autotune so the tuned-config key "bench-net" means one net.
+BENCH_NET = ConvNetConfig(
+    name="bench-net",
+    in_channels=8,
+    layers=(_conv(3, 8), _pool(), _conv(3, 8), _pool(), _conv(3, OUT)),
+)
+
+
+def net_by_name(name: str) -> ConvNetConfig:
+    """Resolve a net name: the four Table III nets plus ``bench-net``."""
+    if name in (BENCH_NET.name, "bench"):
+        return BENCH_NET
+    try:
+        return ZNNI_NETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown net {name!r}; known: {sorted(ZNNI_NETS) + [BENCH_NET.name]}"
+        ) from None

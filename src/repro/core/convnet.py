@@ -71,7 +71,7 @@ def apply_layer_range(
     lo: int = 0,
     hi: Optional[int] = None,
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Run layers [lo, hi) with the plan's primitives, *without* recombining.
 
@@ -96,7 +96,7 @@ def apply_plan(
     x: jnp.ndarray,
     plan_prims: Sequence[str],
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
     recombine: bool = True,
 ) -> jnp.ndarray:
     """Run the net; plan_prims[i] is the primitive name for layer i.

@@ -27,7 +27,7 @@ def direct_conv(
     w: jnp.ndarray,
     b: Optional[jnp.ndarray] = None,
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
     """'valid' cross-correlation. x (S,f,n³) f32, w (f',f,k³) -> (S,f',n'³)."""
     o = conv3d_ops.conv3d(x, w, use_pallas=use_pallas)

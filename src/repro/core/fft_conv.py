@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.cmul_mad import ops as cmul_ops
+from ..kernels.mpf_pool import ops as mpf_ops
 from .bias import add_channel_bias
 from .pruned_fft import (
     fft_optimal_shape,
@@ -65,7 +66,7 @@ def fft_conv_data_parallel(
     b: Optional[jnp.ndarray] = None,
     *,
     fft_shape: Optional[Tuple[int, int, int]] = None,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
     fprime_chunk: int = 8,
 ) -> jnp.ndarray:
     """Algorithm 2: image FFTs up front; loop over output-channel chunks."""
@@ -102,7 +103,7 @@ def fft_conv_task_parallel(
     b: Optional[jnp.ndarray] = None,
     *,
     fft_shape: Optional[Tuple[int, int, int]] = None,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Task-graph variant: all kernel spectra at once, one fused MAD.
 
@@ -122,6 +123,42 @@ def fft_conv_task_parallel(
     return add_channel_bias(o, b)
 
 
+def _chunked_mad_inverse(X, W, fft_shape, crop, fprime_chunk, use_pallas, b=None):
+    """MAD + inverse over output-channel chunks of the cached spectra ``W``.
+
+    ``lax.map`` over chunks bounds live output spectra to one chunk column
+    (the paper's sub-batched cuFFT discipline, now a *tunable*:
+    ``fprime_chunk`` is swept by ``repro.tuning``).  When ``b`` is given the
+    bias rides the DC bin of each chunk (the fused epilogue); chunk
+    zero-padding of W and b is exact — padded channels are dropped.
+    """
+    S = X.shape[0]
+    fp = W.shape[0]
+    c = max(1, int(fprime_chunk))
+    pad_fp = (-fp) % c
+    W_p = jnp.pad(W, ((0, pad_fp),) + ((0, 0),) * (W.ndim - 1))
+    W_chunks = W_p.reshape((fp + pad_fp) // c, c, *W.shape[1:])
+    if b is None:
+        def one_chunk(Wc):
+            Oc = cmul_ops.cmul_mad(X, Wc, use_pallas=use_pallas)
+            return pruned_irfftn(Oc, fft_shape, (0, 0, 0), crop)
+
+        o = jax.lax.map(one_chunk, W_chunks)
+    else:
+        b_p = jnp.pad(b.astype(jnp.float32), (0, pad_fp))
+        b_chunks = b_p.reshape((fp + pad_fp) // c, c)
+
+        def one_chunk_bias(args):
+            Wc, bc = args
+            Oc = cmul_ops.cmul_mad_bias(
+                X, Wc, bc, fft_shape=fft_shape, use_pallas=use_pallas
+            )
+            return pruned_irfftn(Oc, fft_shape, (0, 0, 0), crop)
+
+        o = jax.lax.map(one_chunk_bias, (W_chunks, b_chunks))
+    return jnp.moveaxis(o, 1, 0).reshape(S, fp + pad_fp, *crop)[:, :fp]
+
+
 def fft_conv_with_precomputed(
     x: jnp.ndarray,
     W: jnp.ndarray,
@@ -129,12 +166,66 @@ def fft_conv_with_precomputed(
     fft_shape: Tuple[int, int, int],
     k: Tuple[int, int, int],
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Task-parallel forward with cached kernel spectra (inference service path)."""
+    """Task-parallel forward with cached kernel spectra (inference service path).
+
+    ``fprime_chunk`` (a tuned parameter; ``None`` = all output channels in
+    one MAD) bounds live output spectra to a chunk column at the cost of a
+    scan — the memory/speed knob ``repro.tuning`` sweeps per hardware.
+    """
     n = x.shape[2:]
     out = _out_shape(n, k)
     X = pruned_rfftn(x, fft_shape)
+    if fprime_chunk is not None and fprime_chunk < W.shape[0]:
+        o = _chunked_mad_inverse(X, W, fft_shape, out, fprime_chunk, use_pallas)
+        return add_channel_bias(o, b)
     O = cmul_ops.cmul_mad(X, W, use_pallas=use_pallas)
     o = pruned_irfftn(O, fft_shape, (0, 0, 0), out)
     return add_channel_bias(o, b)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("fft_shape", "k", "p", "use_pallas", "relu", "fprime_chunk"),
+)
+def fft_conv_pool_fused(
+    x: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    *,
+    fft_shape: Tuple[int, int, int],
+    k: Tuple[int, int, int],
+    p: int,
+    use_pallas: Optional[bool] = None,
+    relu: bool = True,
+    fprime_chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fused conv + ReLU + MPF pair: the strip-path epilogue as two kernels.
+
+    The unfused walk runs five ops: MAD -> inverse -> crop -> bias -> relu
+    -> MPF.  Here the bias rides the MAD's DC bin (``cmul_mad_bias``), the
+    inverse leaves the LAST axis uncropped and the windowed pool kernel
+    (``mpf_pool_window``) folds that crop into its fragment slices, and
+    ReLU moves *after* the pool — exact, because relu(max(a,b)) ==
+    max(relu(a), relu(b)) (monotone), so relu work shrinks by ~p³/(p³-…)
+    to the pooled extent.  Output: MPF fragment batch (S·p³, f', m³),
+    identical (allclose) to the unfused sequence.
+    """
+    n = x.shape[2:]
+    out = _out_shape(n, k)
+    X = pruned_rfftn(x, fft_shape)
+    # crop axes a,b during the inverse as usual; leave axis c at the full
+    # transform length — mpf_pool_window never reads past ``out``.
+    win = (out[0], out[1], int(fft_shape[2]))
+    if fprime_chunk is not None and fprime_chunk < W.shape[0]:
+        bias = jnp.zeros((W.shape[0],), jnp.float32) if b is None else b
+        y = _chunked_mad_inverse(
+            X, W, fft_shape, win, fprime_chunk, use_pallas, b=bias
+        )
+    else:
+        O = cmul_ops.cmul_mad_bias(X, W, b, fft_shape=fft_shape, use_pallas=use_pallas)
+        y = pruned_irfftn(O, fft_shape, (0, 0, 0), win)
+    y = mpf_ops.mpf_pool_window(y, p, out, use_pallas=use_pallas)
+    return jax.nn.relu(y) if relu else y

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import itertools
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ def max_pool3d(x: jnp.ndarray, p: int) -> jnp.ndarray:
 
 
 @partial(jax.jit, static_argnames=("p", "use_pallas"))
-def mpf(x: jnp.ndarray, p: int, *, use_pallas: bool = False) -> jnp.ndarray:
+def mpf(x: jnp.ndarray, p: int, *, use_pallas: Optional[bool] = None) -> jnp.ndarray:
     """Max-pooling fragments. x (S, f, n³) with (n+1)%p==0 -> (S*p³, f, m³).
 
     Fragment o=(ox,oy,oz) (row-major) of batch s lands at output batch

@@ -185,7 +185,7 @@ def os_apply_from_spectra(
     b: Optional[jnp.ndarray],
     spec: OverlapSaveSpec,
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
     """MAD + inverse + reassembly from precomputed input segment spectra.
 
@@ -242,7 +242,7 @@ def os_apply_tail_from_spectra(
     spec: OverlapSaveSpec,
     out_cols: int,
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
     """MAD + inverse + reassembly of the TRAILING ``out_cols`` output columns.
 
@@ -277,7 +277,7 @@ def overlap_save_conv(
     b: Optional[jnp.ndarray],
     spec: OverlapSaveSpec,
     *,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Self-contained segmented 'valid' cross-correlation (no spectra reuse).
 

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ConvNetConfig
+from ..kernels import resolve_use_pallas
 from .cost_model import (
     LayerCost,
     conv_direct_cost,
@@ -52,6 +53,7 @@ from .cost_model import (
 from .direct_conv import direct_conv
 from .fft_conv import (
     fft_conv_data_parallel,
+    fft_conv_pool_fused,
     fft_conv_task_parallel,
     fft_conv_with_precomputed,
     precompute_kernel_fft,
@@ -83,6 +85,7 @@ class PreparedLayer:
     fft_shape: Optional[Tuple[int, int, int]] = None
     kernel_size: Optional[Tuple[int, int, int]] = None
     os_spec: Optional[OverlapSaveSpec] = None  # overlap_save segmentation
+    fprime_chunk: Optional[int] = None  # tuned output-channel MAD chunking
     state: Any = None
 
 
@@ -199,7 +202,7 @@ def _setup_direct(w, b, n, *, index: int = -1) -> PreparedLayer:
     )
 
 
-def _apply_direct(pl, x, state, *, use_pallas: bool = False):
+def _apply_direct(pl, x, state, *, use_pallas: Optional[bool] = None):
     return direct_conv(x, state["w"], state["b"], use_pallas=use_pallas)
 
 
@@ -214,31 +217,34 @@ def _setup_fft(name: str):
     return setup
 
 
-def _apply_fft_data(pl, x, state, *, use_pallas: bool = False):
+def _apply_fft_data(pl, x, state, *, use_pallas: Optional[bool] = None):
     return fft_conv_data_parallel(
         x, state["w"], state["b"], fft_shape=pl.fft_shape, use_pallas=use_pallas
     )
 
 
-def _apply_fft_task(pl, x, state, *, use_pallas: bool = False):
+def _apply_fft_task(pl, x, state, *, use_pallas: Optional[bool] = None):
     return fft_conv_task_parallel(
         x, state["w"], state["b"], fft_shape=pl.fft_shape, use_pallas=use_pallas
     )
 
 
-def _setup_fft_cached(w, b, n, *, index: int = -1) -> PreparedLayer:
+def _setup_fft_cached(
+    w, b, n, *, index: int = -1, fprime_chunk: Optional[int] = None
+) -> PreparedLayer:
     fft_shape = fft_optimal_shape(tuple(int(s) for s in n))
     W = precompute_kernel_fft(w, fft_shape)  # the one-time kernel transform
     return PreparedLayer(
         index, "conv", "fft_cached",
-        fft_shape=fft_shape, kernel_size=_ksize(w), state={"W": W, "b": b},
+        fft_shape=fft_shape, kernel_size=_ksize(w),
+        fprime_chunk=fprime_chunk, state={"W": W, "b": b},
     )
 
 
-def _apply_fft_cached(pl, x, state, *, use_pallas: bool = False):
+def _apply_fft_cached(pl, x, state, *, use_pallas: Optional[bool] = None):
     return fft_conv_with_precomputed(
         x, state["W"], state["b"], pl.fft_shape, pl.kernel_size,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, fprime_chunk=pl.fprime_chunk,
     )
 
 
@@ -259,7 +265,7 @@ def _setup_overlap_save(w, b, n, *, index: int = -1, seg_core=None) -> PreparedL
     )
 
 
-def _apply_overlap_save(pl, x, state, *, use_pallas: bool = False):
+def _apply_overlap_save(pl, x, state, *, use_pallas: Optional[bool] = None):
     return overlap_save_conv(
         x, state["W"], state["b"], pl.os_spec, use_pallas=use_pallas
     )
@@ -271,7 +277,7 @@ def _setup_mpf(p, n, *, index: int = -1) -> PreparedLayer:
     return PreparedLayer(index, "pool", "mpf", pool_size=int(p), state={})
 
 
-def _apply_mpf(pl, x, state, *, use_pallas: bool = False):
+def _apply_mpf(pl, x, state, *, use_pallas: Optional[bool] = None):
     return mpf(x, pl.pool_size, use_pallas=use_pallas)
 
 
@@ -281,7 +287,7 @@ def _setup_pool(p, n, *, index: int = -1) -> PreparedLayer:
     return PreparedLayer(index, "pool", "pool", pool_size=int(p), state={})
 
 
-def _apply_pool(pl, x, state, *, use_pallas: bool = False):
+def _apply_pool(pl, x, state, *, use_pallas: Optional[bool] = None):
     return max_pool3d(x, pl.pool_size)
 
 
@@ -314,7 +320,7 @@ register_pool_primitive(Primitive("pool", "pool", pool_cost, _setup_pool, _apply
 # ---------------------------------------------------------------------------
 
 
-def conv_apply(name: str, x, w, b=None, *, use_pallas: bool = False):
+def conv_apply(name: str, x, w, b=None, *, use_pallas: Optional[bool] = None):
     """Apply a conv primitive without retained state (setup inlined).
 
     For callers that re-chunk weights per call (``sublayer``'s streamed
@@ -358,6 +364,7 @@ def prepare_layers(
     hi: Optional[int] = None,
     *,
     overlap_seg: Optional[int] = None,
+    fprime_chunk: Optional[int] = None,
 ) -> Tuple[PreparedLayer, ...]:
     """Run each layer's one-time setup for layers [lo, hi).
 
@@ -370,6 +377,9 @@ def prepare_layers(
     segment grid of x-adjacent patches coincides and spectra can be reused
     across patches); deeper overlap_save layers keep their local default —
     only the net's input has a cross-patch identity to exploit.
+
+    ``fprime_chunk`` (tuned) bounds the live output spectra of
+    ``fft_cached`` layers; other primitives ignore it.
     """
     if hi is None:
         hi = len(net.layers)
@@ -382,6 +392,10 @@ def prepare_layers(
             w, b = params[i]
             if i == 0 and prim.name == "overlap_save" and overlap_seg:
                 prepared.append(prim.setup(w, b, n, index=i, seg_core=overlap_seg))
+            elif prim.name == "fft_cached" and fprime_chunk is not None:
+                prepared.append(
+                    prim.setup(w, b, n, index=i, fprime_chunk=fprime_chunk)
+                )
             else:
                 prepared.append(prim.setup(w, b, n, index=i))
             n = tuple(x - layer.size + 1 for x in n)
@@ -398,7 +412,8 @@ def apply_prepared_range(
     x,
     *,
     states: Optional[Sequence[Any]] = None,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
+    fuse_pairs: bool = False,
 ):
     """Walk prepared layers over ``x``: the thin core of plan execution.
 
@@ -406,14 +421,45 @@ def apply_prepared_range(
     conv), so chaining ranges composes to a full forward pass.  ``states``
     (when given) substitutes each layer's pytree state — the hook jitted
     callers use to pass cached spectra as arguments rather than constants.
+
+    With ``fuse_pairs`` a consecutive ``fft_cached`` conv + ``mpf`` pool
+    pair dispatches to ``fft_conv_pool_fused`` (bias on the MAD's DC bin,
+    inverse-window crop folded into the pool, ReLU after the pool) instead
+    of two separate primitive applies — numerically equivalent, fewer
+    materialized intermediates.
     """
     last_conv = max(i for i, l in enumerate(net.layers) if l.kind == "conv")
     if states is None:
         states = [pl.state for pl in prepared]
-    for pl, st in zip(prepared, states):
+    else:
+        states = list(states)
+    prepared = tuple(prepared)
+    i = 0
+    while i < len(prepared):
+        pl = prepared[i]
+        st = states[i]
+        nxt = prepared[i + 1] if i + 1 < len(prepared) else None
+        if (
+            fuse_pairs
+            and pl.kind == "conv"
+            and pl.prim == "fft_cached"
+            and pl.index != last_conv  # fused path applies the ReLU
+            and nxt is not None
+            and nxt.kind == "pool"
+            and nxt.prim == "mpf"
+            and nxt.index == pl.index + 1
+        ):
+            x = fft_conv_pool_fused(
+                x, st["W"], st["b"],
+                fft_shape=pl.fft_shape, k=pl.kernel_size, p=nxt.pool_size,
+                use_pallas=use_pallas, fprime_chunk=pl.fprime_chunk,
+            )
+            i += 2
+            continue
         x = _resolve(pl).apply(pl, x, st, use_pallas=use_pallas)
         if pl.kind == "conv" and pl.index != last_conv:
             x = jax.nn.relu(x)
+        i += 1
     return x
 
 
@@ -432,6 +478,7 @@ class CompiledPlan:
     layers: Tuple[PreparedLayer, ...]
     n_in: int
     use_pallas: bool = False
+    fuse_pairs: bool = False  # fused fft_cached+mpf epilogue in apply walks
     plan: Optional[object] = None  # the planner.Plan this was compiled from
 
     @property
@@ -454,6 +501,7 @@ class CompiledPlan:
         return apply_prepared_range(
             self.net, self.layers[lo:hi], x,
             states=states, use_pallas=self.use_pallas,
+            fuse_pairs=self.fuse_pairs,
         )
 
     def apply(self, x, *, states=None, recombine: bool = True):
@@ -473,7 +521,9 @@ def compile_plan(
     prims: Sequence[str],
     n_in: Optional[int] = None,
     m: Optional[int] = None,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
+    fuse_pairs: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
     plan: Optional[object] = None,
     overlap_seg: Optional[int] = None,
 ) -> CompiledPlan:
@@ -483,22 +533,45 @@ def compile_plan(
     fragment size ``m`` (``n_in`` is then derived via ``plan_input_size``).
     ``overlap_seg`` (see ``prepare_layers``) aligns a first-layer
     ``overlap_save`` segment grid with the volume patch grid.
+
+    ``use_pallas=None`` backend-detects (``kernels.resolve_use_pallas``);
+    ``fuse_pairs=None`` follows the resolved ``use_pallas`` — the fused
+    conv+pool epilogue is a Pallas-path optimization, so it switches on
+    with the kernels.  ``fprime_chunk`` is the tuned MAD chunk for
+    ``fft_cached`` layers (``None`` = unchunked).
     """
     prims = tuple(prims)
     if len(prims) != len(net.layers):
         raise ValueError(f"{len(prims)} prims for {len(net.layers)} layers")
+    use_pallas = resolve_use_pallas(use_pallas)
+    if fuse_pairs is None:
+        fuse_pairs = use_pallas
     if n_in is None:
         if m is None:
             raise ValueError("need n_in or m")
         n_in = plan_input_size(net, prims, m)
-    layers = prepare_layers(params, net, prims, n_in, overlap_seg=overlap_seg)
-    return CompiledPlan(net, prims, layers, int(n_in), use_pallas, plan)
+    layers = prepare_layers(
+        params, net, prims, n_in,
+        overlap_seg=overlap_seg, fprime_chunk=fprime_chunk,
+    )
+    return CompiledPlan(
+        net, prims, layers, int(n_in), use_pallas, bool(fuse_pairs), plan
+    )
 
 
-def compile_from_plan(params, net: ConvNetConfig, plan, *, use_pallas: bool = False):
+def compile_from_plan(
+    params,
+    net: ConvNetConfig,
+    plan,
+    *,
+    use_pallas: Optional[bool] = None,
+    fuse_pairs: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
+):
     """CompiledPlan for a ``planner.Plan`` (geometry read off the plan)."""
     return compile_plan(
         params, net, prims=plan.prims, n_in=plan.n_in,
-        use_pallas=use_pallas, plan=plan,
+        use_pallas=use_pallas, fuse_pairs=fuse_pairs, fprime_chunk=fprime_chunk,
+        plan=plan,
         overlap_seg=plan.core if plan.prims[0] == "overlap_save" else None,
     )

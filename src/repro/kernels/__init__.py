@@ -4,8 +4,13 @@ Each kernel is a subpackage with kernel.py (pl.pallas_call + BlockSpec),
 ops.py (jit'd wrapper with a ``use_pallas`` dispatch), and ref.py (the
 pure-jnp oracle the tests sweep against).
 
-The dry-run/roofline paths run the XLA oracle (Pallas cannot lower on the
-CPU backend); on TPU, ``use_pallas=True`` selects the kernels.
+Dispatch rule (``dispatch.py``): every wrapper takes
+``use_pallas: Optional[bool]`` — ``None`` (the default everywhere) means
+``backend_supports_pallas()``, i.e. the compiled kernels are bound
+automatically on TPU and the XLA oracle runs elsewhere.  Tests pass
+``use_pallas=True`` off-TPU to run the kernels in interpret mode against
+the oracles.
 """
 
-from . import cmul_mad, decode_attn, direct_conv3d, mpf_pool  # noqa: F401
+from .dispatch import backend_supports_pallas, resolve_use_pallas  # noqa: F401
+from . import cmul_mad, decode_attn, direct_conv3d, mpf_pool  # noqa: F401, E402

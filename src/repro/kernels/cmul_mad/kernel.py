@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 
 BIN_BLOCK = 512  # lanes per block: multiple of 128 (VPU lane width)
 FP_BLOCK = 8  # output channels per block
+F_CHUNK = 8  # input channels accumulated per fused-epilogue grid step
 
 
 def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
@@ -73,3 +74,89 @@ def cmul_mad_planes(
         out_shape=out_shape,
         interpret=interpret,
     )(xr, xi, wr, wi)
+
+
+def _bias_kernel(xr_ref, xi_ref, wr_ref, wi_ref, nb_ref, or_ref, oi_ref):
+    """Fused epilogue: chunked MAD accumulation + DC-bin bias, one program.
+
+    Grid (S, f'-blocks, bin-blocks, f-chunks); the f-chunk axis is LAST so
+    the output block is revisited across consecutive steps and the partial
+    MAD accumulates in place (VMEM-resident, no HBM round trip per chunk).
+    The bias lands on the final accumulation step of bin-block 0: adding
+    ``b[j]·N`` to the DC bin of the output spectrum is exactly adding the
+    constant ``b[j]`` to every spatial output of the inverse transform
+    (irfftn normalizes by 1/N), so the separate post-inverse bias pass of
+    the unfused path disappears into the MAD kernel.
+    """
+    xr = xr_ref[0]  # (F_CHUNK, Bb)
+    xi = xi_ref[0]
+    wr = wr_ref[...]  # (FP_BLOCK, F_CHUNK, Bb)
+    wi = wi_ref[...]
+    t1 = jnp.einsum("jfb,fb->jb", wr, xr, preferred_element_type=jnp.float32)
+    t2 = jnp.einsum("jfb,fb->jb", wi, xi, preferred_element_type=jnp.float32)
+    t3 = jnp.einsum(
+        "jfb,fb->jb", wr + wi, xr + xi, preferred_element_type=jnp.float32
+    )
+    acc_r = t1 - t2
+    acc_i = t3 - t1 - t2
+    kf = pl.program_id(3)
+
+    @pl.when(kf == 0)
+    def _init():
+        or_ref[0] = acc_r
+        oi_ref[0] = acc_i
+
+    @pl.when(kf > 0)
+    def _accumulate():
+        or_ref[0] += acc_r
+        oi_ref[0] += acc_i
+
+    # bias epilogue: the DC bin is flat bin 0, i.e. lane 0 of bin-block 0
+    # (2D broadcasted_iota — 1D iota does not lower on TPU).  The bias
+    # spectrum of a constant is purely real, so only the real plane moves.
+    @pl.when((kf == pl.num_programs(3) - 1) & (pl.program_id(2) == 0))
+    def _bias():
+        lane = jax.lax.broadcasted_iota(jnp.int32, (FP_BLOCK, BIN_BLOCK), 1)
+        or_ref[0] += jnp.where(lane == 0, nb_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cmul_mad_bias_planes(
+    xr: jnp.ndarray,
+    xi: jnp.ndarray,
+    wr: jnp.ndarray,
+    wi: jnp.ndarray,
+    nb: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    """Fused MAD + bias.  xr/xi (S, f, B), wr/wi (f', f, B), nb (f', 1) f32.
+
+    ``nb`` is the pre-scaled DC contribution ``b · N_total`` per output
+    channel.  B must be a multiple of BIN_BLOCK, f' of FP_BLOCK, and f of
+    F_CHUNK (ops.py pads; zero f-padding contributes nothing to the MAD).
+    Returns (or, oi) (S, f', B).
+    """
+    S, f, B = xr.shape
+    fp = wr.shape[0]
+    grid = (S, fp // FP_BLOCK, B // BIN_BLOCK, f // F_CHUNK)
+    x_spec = pl.BlockSpec((1, F_CHUNK, BIN_BLOCK), lambda s, j, b, kf: (s, kf, b))
+    w_spec = pl.BlockSpec(
+        (FP_BLOCK, F_CHUNK, BIN_BLOCK), lambda s, j, b, kf: (j, kf, b)
+    )
+    nb_spec = pl.BlockSpec((FP_BLOCK, 1), lambda s, j, b, kf: (j, 0))
+    # the out index map ignores kf: consecutive f-chunk steps revisit the
+    # same output block, which is what makes the in-place accumulation legal
+    o_spec = pl.BlockSpec((1, FP_BLOCK, BIN_BLOCK), lambda s, j, b, kf: (s, j, b))
+    out_shape = [
+        jax.ShapeDtypeStruct((S, fp, B), jnp.float32),
+        jax.ShapeDtypeStruct((S, fp, B), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _bias_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, w_spec, w_spec, nb_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, wr, wi, nb)

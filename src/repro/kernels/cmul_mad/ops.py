@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import resolve_use_pallas
 from . import kernel as _k
 from . import ref as _ref
 
@@ -16,16 +17,16 @@ def cmul_mad(
     X: jnp.ndarray,
     W: jnp.ndarray,
     *,
-    use_pallas: bool = False,
+    use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """O[s,j] = Σ_i X[s,i] · W[j,i].  X (S,f,*sp), W (f',f,*sp) complex64.
 
-    ``use_pallas=False`` (default; the dry-run/roofline path) uses the XLA
-    einsum oracle.  ``use_pallas=True`` runs the Pallas kernel —
-    ``interpret`` defaults to True off-TPU.
+    ``use_pallas=None`` resolves via ``kernels.resolve_use_pallas`` (the
+    Pallas kernel on TPU, the XLA einsum oracle elsewhere); an explicit
+    bool overrides.  ``interpret`` defaults to True off-TPU.
     """
-    if not use_pallas:
+    if not resolve_use_pallas(use_pallas):
         return _ref.cmul_mad(X, W)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -48,5 +49,68 @@ def cmul_mad(
         pad = ((0, padF), (0, 0), (0, 0))
         wr, wi = jnp.pad(wr, pad), jnp.pad(wi, pad)
     o_r, o_i = _k.cmul_mad_planes(xr, xi, wr, wi, interpret=interpret)
+    o = jax.lax.complex(o_r, o_i)[:, :fp, :B]
+    return o.reshape(S, fp, *spatial)
+
+
+@partial(jax.jit, static_argnames=("fft_shape", "use_pallas", "interpret"))
+def cmul_mad_bias(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    b: jnp.ndarray | None,
+    *,
+    fft_shape: tuple[int, int, int],
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused epilogue: MAD + channel bias folded into the spectrum DC bin.
+
+    X (S, f, ña, ñb, ñc'') and W (f', f, ña, ñb, ñc'') are pruned spectra at
+    ``fft_shape = (na, nb, nc)`` (the REAL transform extents — needed to
+    scale the bias: DC must carry ``b·na·nb·nc``).  Returns output spectra
+    whose inverse transform already includes the bias, so the unfused
+    path's separate ``add_channel_bias`` pass disappears.  The Pallas path
+    runs MAD accumulation over input-channel chunks + the bias add in ONE
+    ``pallas_call`` (kernel ``_bias_kernel``); the XLA path is the fused
+    oracle in ref.py — same math, checkable against each other.
+    """
+    if not resolve_use_pallas(use_pallas):
+        return _ref.cmul_mad_bias(X, W, b, fft_shape)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S, f = X.shape[:2]
+    fp = W.shape[0]
+    spatial = X.shape[2:]
+    B = 1
+    for s in spatial:
+        B *= int(s)
+    n_total = 1
+    for s in fft_shape:
+        n_total *= int(s)
+    xr = jnp.real(X).reshape(S, f, B)
+    xi = jnp.imag(X).reshape(S, f, B)
+    wr = jnp.real(W).reshape(fp, f, B)
+    wi = jnp.imag(W).reshape(fp, f, B)
+    bias = jnp.zeros((fp,), jnp.float32) if b is None else b.astype(jnp.float32)
+    nb = bias * float(n_total)
+    padB = (-B) % _k.BIN_BLOCK
+    padF = (-fp) % _k.FP_BLOCK
+    padf = (-f) % _k.F_CHUNK
+    if padB:
+        pad = ((0, 0), (0, 0), (0, padB))
+        xr, xi, wr, wi = (jnp.pad(a, pad) for a in (xr, xi, wr, wi))
+    if padf:
+        # zero input-channel padding: contributes nothing to the MAD
+        xr = jnp.pad(xr, ((0, 0), (0, padf), (0, 0)))
+        xi = jnp.pad(xi, ((0, 0), (0, padf), (0, 0)))
+        wr = jnp.pad(wr, ((0, 0), (0, padf), (0, 0)))
+        wi = jnp.pad(wi, ((0, 0), (0, padf), (0, 0)))
+    if padF:
+        pad = ((0, padF), (0, 0), (0, 0))
+        wr, wi = jnp.pad(wr, pad), jnp.pad(wi, pad)
+        nb = jnp.pad(nb, (0, padF))
+    o_r, o_i = _k.cmul_mad_bias_planes(
+        xr, xi, wr, wi, nb.reshape(-1, 1), interpret=interpret
+    )
     o = jax.lax.complex(o_r, o_i)[:, :fp, :B]
     return o.reshape(S, fp, *spatial)

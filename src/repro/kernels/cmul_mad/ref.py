@@ -2,9 +2,35 @@
 
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax.numpy as jnp
 
 
 def cmul_mad(X: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
     """X (S, f, *spatial) complex, W (f', f, *spatial) complex -> (S, f', *spatial)."""
     return jnp.einsum("si...,ji...->sj...", X, W)
+
+
+def cmul_mad_bias(
+    X: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    fft_shape: Sequence[int],
+) -> jnp.ndarray:
+    """Fused-epilogue oracle: MAD + bias folded into the DC bin.
+
+    Adding ``b[j] · N_total`` (N_total = prod(fft_shape), the REAL spatial
+    transform size — not the pruned spectral extent) to spectral bin
+    (0, 0, 0) adds the constant ``b[j]`` to every spatial output of the
+    inverse transform, so downstream ``pruned_irfftn`` + crop needs no
+    separate bias pass.  This is the XLA form of the fused kernel — the
+    interpret-mode Pallas path is checked against it.
+    """
+    O = cmul_mad(X, W)
+    if b is None:
+        return O
+    n_total = 1
+    for s in fft_shape:
+        n_total *= int(s)
+    return O.at[..., 0, 0, 0].add(b.astype(jnp.float32) * float(n_total))

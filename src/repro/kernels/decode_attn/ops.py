@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import resolve_use_pallas
 from . import kernel as _k
 from . import ref as _ref
 
@@ -18,11 +19,11 @@ def decode_attn(
     v: jnp.ndarray,
     lengths: jnp.ndarray,
     *,
-    use_pallas: bool = False,
+    use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """q (B,H,d); k/v (B,S,Hkv,d); lengths (B,) -> (B,H,d).  See ref.py."""
-    if not use_pallas:
+    if not resolve_use_pallas(use_pallas):
         return _ref.decode_attn(q, k, v, lengths)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

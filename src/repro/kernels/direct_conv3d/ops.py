@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import resolve_use_pallas
 from . import kernel as _k
 from . import ref as _ref
 
@@ -23,11 +24,11 @@ def conv3d(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
-    use_pallas: bool = False,
+    use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """'valid' cross-correlation; see ref.py for semantics."""
-    if not use_pallas:
+    if not resolve_use_pallas(use_pallas):
         return _ref.conv3d(x, w)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -1,0 +1,35 @@
+"""The ONE kernel-dispatch rule: ``use_pallas=None`` -> backend detection.
+
+Every kernel op wrapper (and everything above them: ``core/fft_conv``,
+``core/overlap_save``, ``core/mpf``, ``compile_plan``, ``PlanExecutor``,
+``VolumeEngine``) takes ``use_pallas: Optional[bool]`` with a ``None``
+default meaning "use the compiled Pallas kernels iff the backend can lower
+them".  Before this module each call site hard-coded ``use_pallas=False``,
+so the kernels never ran in production paths even on TPU; now the default
+is resolved in exactly one place and an explicit ``True``/``False`` is
+still an override (tests pass ``True`` to exercise interpret mode off-TPU;
+the dry-run/roofline paths pass ``False`` to pin the XLA oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def backend_supports_pallas() -> bool:
+    """True iff the default backend lowers our Pallas kernels compiled.
+
+    Mosaic lowering exists for TPU; on CPU/GPU the kernels only run in
+    interpret mode, which is a correctness tool, not a fast path — so
+    auto-detection enables Pallas on TPU only.
+    """
+    return jax.default_backend() == "tpu"
+
+
+def resolve_use_pallas(use_pallas: Optional[bool] = None) -> bool:
+    """Resolve a tri-state ``use_pallas`` flag to a concrete bool."""
+    if use_pallas is None:
+        return backend_supports_pallas()
+    return bool(use_pallas)

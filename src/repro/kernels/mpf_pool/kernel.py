@@ -52,3 +52,55 @@ def mpf_pool_blocked(x: jnp.ndarray, *, p: int, interpret: bool = True) -> jnp.n
         out_shape=jax.ShapeDtypeStruct((S * P, f, *m), x.dtype),
         interpret=interpret,
     )(x)
+
+
+def _window_kernel(x_ref, o_ref, *, p: int, window):
+    """MPF over the leading ``window`` of an uncropped input block.
+
+    Identical to ``_kernel`` but the fragment extents come from the static
+    ``window``, not the input shape: fragment (ox,oy,oz) reads
+    ``[o, o + p·(w//p))`` per axis, which stays inside ``[0, w]`` because
+    (w+1) % p == 0 — so the crop of the inverse transform's spill region
+    (anything past ``window``) happens *inside* the pool's slicing instead
+    of as a separate materialized copy.
+    """
+    o = pl.program_id(1)
+    ox = o // (p * p)
+    oy = (o // p) % p
+    oz = o % p
+    f = x_ref.shape[1]
+    m = (window[0] // p, window[1] // p, window[2] // p)
+    v = x_ref[0, :, pl.ds(ox, p * m[0]), pl.ds(oy, p * m[1]), pl.ds(oz, p * m[2])]
+    v = v.reshape(f, m[0], p, m[1], p, m[2], p)
+    o_ref[0] = v.max(axis=(2, 4, 6))
+
+
+@functools.partial(jax.jit, static_argnames=("p", "window", "interpret"))
+def mpf_pool_window_blocked(
+    x: jnp.ndarray, *, p: int, window, interpret: bool = True
+) -> jnp.ndarray:
+    """Fused inverse-window + MPF: pool the leading ``window`` of ``x``.
+
+    x (S, f, n³) f32 with n >= window per axis, (window+1) % p == 0, and
+    f % F_BLOCK == 0 (ops.py pads).  Equivalent to
+    ``mpf_pool_blocked(x[..., :wx, :wy, :wz])`` without materializing the
+    crop — the conv+pool fused pair feeds this the uncropped last-axis
+    inverse-FFT output.
+    """
+    S, f = x.shape[:2]
+    nx, ny, nz = x.shape[2:]
+    m = tuple(w // p for w in window)
+    P = p**3
+    grid = (S, P, f // F_BLOCK)
+    x_spec = pl.BlockSpec((1, F_BLOCK, nx, ny, nz), lambda s, o, fb: (s, fb, 0, 0, 0))
+    o_spec = pl.BlockSpec(
+        (1, F_BLOCK, *m), lambda s, o, fb: (s * P + o, fb, 0, 0, 0)
+    )
+    return pl.pallas_call(
+        functools.partial(_window_kernel, p=p, window=tuple(window)),
+        grid=grid,
+        in_specs=[x_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((S * P, f, *m), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import resolve_use_pallas
 from . import kernel as _k
 from . import ref as _ref
 
@@ -16,14 +17,14 @@ def mpf_pool(
     x: jnp.ndarray,
     p: int,
     *,
-    use_pallas: bool = False,
+    use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Max-pooling fragments; see ref.py for semantics."""
     n = x.shape[2:]
     if any((ni + 1) % p for ni in n):
         raise ValueError(f"MPF needs (n+1)%p==0, got n={n}, p={p}")
-    if not use_pallas:
+    if not resolve_use_pallas(use_pallas):
         return _ref.mpf_pool(x, p)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -32,4 +33,41 @@ def mpf_pool(
     if padF:
         x = jnp.pad(x, ((0, 0), (0, padF), (0, 0), (0, 0), (0, 0)))
     o = _k.mpf_pool_blocked(x.astype(jnp.float32), p=p, interpret=interpret)
+    return o[:, :f]
+
+
+@partial(jax.jit, static_argnames=("p", "window", "use_pallas", "interpret"))
+def mpf_pool_window(
+    x: jnp.ndarray,
+    p: int,
+    window: tuple[int, int, int],
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused inverse-window + MPF: pool the leading ``window`` of ``x``.
+
+    ``x`` (S, f, n³) with n >= window per axis; equivalent to
+    ``mpf_pool(x[..., :wx, :wy, :wz], p)``.  The conv+pool fused pair
+    passes the inverse transform's output *uncropped on the last axis*, so
+    the crop never materializes — the pool's fragment slices stay inside
+    the window by the MPF size constraint (window+1) % p == 0.
+    """
+    window = tuple(int(w) for w in window)
+    n = x.shape[2:]
+    if any((wi + 1) % p for wi in window):
+        raise ValueError(f"MPF needs (window+1)%p==0, got window={window}, p={p}")
+    if any(wi > ni for wi, ni in zip(window, n)):
+        raise ValueError(f"window {window} larger than input {n}")
+    if not resolve_use_pallas(use_pallas):
+        return _ref.mpf_pool_window(x, p, window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    f = x.shape[1]
+    padF = (-f) % _k.F_BLOCK
+    if padF:
+        x = jnp.pad(x, ((0, 0), (0, padF), (0, 0), (0, 0), (0, 0)))
+    o = _k.mpf_pool_window_blocked(
+        x.astype(jnp.float32), p=p, window=window, interpret=interpret
+    )
     return o[:, :f]

@@ -22,3 +22,10 @@ def mpf_pool(x: jnp.ndarray, p: int) -> jnp.ndarray:
         frags.append(v)
     y = jnp.stack(frags, axis=1)
     return y.reshape(S * p**3, f, *m)
+
+
+def mpf_pool_window(x: jnp.ndarray, p: int, window) -> jnp.ndarray:
+    """Windowed-MPF oracle: crop to ``window`` then pool (the fused pair's
+    two steps, materialized)."""
+    wx, wy, wz = window
+    return mpf_pool(x[..., :wx, :wy, :wz], p)

@@ -109,7 +109,10 @@ class VolumeEngine:
         prims=None,
         m: Optional[int] = None,
         batch: Optional[int] = None,
-        use_pallas: bool = False,
+        use_pallas: Optional[bool] = None,
+        fuse_pairs: Optional[bool] = None,
+        fprime_chunk: Optional[int] = None,
+        tuned="auto",
         deep_reuse: bool = True,
         bucket_shapes: bool = True,
         age_ticks: int = 8,
@@ -119,7 +122,8 @@ class VolumeEngine:
     ):
         self.executor = PlanExecutor(
             params, net, plan, prims=prims, m=m, batch=batch,
-            use_pallas=use_pallas, deep_reuse=deep_reuse,
+            use_pallas=use_pallas, fuse_pairs=fuse_pairs,
+            fprime_chunk=fprime_chunk, tuned=tuned, deep_reuse=deep_reuse,
             ram_budget=ram_budget, streaming=streaming,
         )
         self.batch = self.executor.batch

@@ -1,0 +1,27 @@
+"""Per-hardware autotuning: sweep executor tunables, persist the winner.
+
+* ``store``     — tuned-config JSON schema + load/save keyed by
+  (device kind, net); ``load_tuned_config`` is what the executor and
+  ``VolumeEngine`` call at construction.
+* ``xla_flags`` — named XLA-flag bundles per hardware family (swept by the
+  tuner, applied before jax init).
+* ``autotune``  — the sweep itself (CLI: ``python -m repro.tuning.autotune``).
+  Imported lazily — it pulls in the volume executor, which itself loads
+  tuned configs from ``store``.
+"""
+
+from .store import (  # noqa: F401
+    TunedConfig,
+    config_key,
+    config_path,
+    load_tuned_config,
+    normalize_device_kind,
+    save_tuned_config,
+)
+from .xla_flags import (  # noqa: F401
+    XLA_FLAG_BUNDLES,
+    apply_bundle,
+    bundle_flags,
+    bundles_for,
+    xla_flags_env,
+)

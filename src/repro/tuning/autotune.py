@@ -1,0 +1,224 @@
+"""Per-hardware autotuner: sweep executor tunables, persist the winner.
+
+ZNNi derives the optimal schedule per machine by measurement (§VII); this
+module is that loop for the repo's runtime.  It sweeps the *execution*
+tunables the planner's analytic model does not price —
+
+* fragment size ``m`` and patch batch (together these set the layer-0
+  segment-grid size: ``seg_core = m * P`` pins the overlap-save segment
+  grid to the patch core, so sweeping ``m`` IS the segment-grid sweep);
+* ``fprime_chunk`` — output-channel chunking of the cached-spectra MAD;
+* ``fuse_pairs`` — the fused conv+pool strip-path epilogue;
+* XLA flag bundles (``repro.tuning.xla_flags``) via subprocess re-exec,
+  since ``XLA_FLAGS`` is read once at backend init —
+
+measuring each candidate end-to-end with ``PlanExecutor`` on a small
+volume (the ``experiments/hillclimb.py`` harness pattern: warmup sweep,
+interleaved repetitions, best-of wall clock), and persists the winning
+``TunedConfig`` under ``src/repro/tuning/configs/`` keyed by
+(device kind, net) — auto-loaded by ``PlanExecutor``/``VolumeEngine``.
+
+Run:  PYTHONPATH=src python -m repro.tuning.autotune --net bench-net
+      [--max-m 2] [--batches 1,2] [--reps 2] [--sweep-xla] [--dry-run]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Optional, Sequence, Tuple
+
+from .store import TunedConfig, normalize_device_kind, save_tuned_config
+from .xla_flags import bundles_for, xla_flags_env
+
+
+def _measure_candidate(
+    params, net, plan, vol, *, fuse_pairs, fprime_chunk, reps: int
+) -> Optional[float]:
+    """Best-of-``reps`` measured vox/s for one candidate, None if it fails."""
+    from ..volume import PlanExecutor
+
+    try:
+        ex = PlanExecutor(
+            params, net, plan, tuned=None,
+            fuse_pairs=fuse_pairs, fprime_chunk=fprime_chunk,
+        )
+        ex.run(vol)  # warmup: compiles + first sweep
+        best = 0.0
+        for _ in range(max(1, reps)):
+            ex.run(vol)
+            best = max(best, ex.last_stats["measured_voxps"])
+        return best
+    except Exception as e:  # infeasible geometry, OOM — skip the point
+        print(f"    candidate failed: {type(e).__name__}: {e}")
+        return None
+
+
+def _os_prims(net) -> list:
+    """The deployed primitive mix: overlap_save at the input conv (the one
+    layer with cross-patch input identity), fft_cached deeper, MPF pools."""
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    return [
+        "overlap_save" if i == first_conv
+        else ("fft_cached" if l.kind == "conv" else "mpf")
+        for i, l in enumerate(net.layers)
+    ]
+
+
+def autotune_net(
+    net_name: str,
+    *,
+    max_m: int = 2,
+    batches: Sequence[int] = (1, 2),
+    fprime_chunks: Sequence[Optional[int]] = (None, 4),
+    fuse_options: Sequence[bool] = (False, True),
+    reps: int = 2,
+    seed: int = 0,
+    xla_bundle: Optional[str] = None,
+) -> Tuple[TunedConfig, Dict[str, float]]:
+    """Sweep the candidate grid for one net on this process's hardware.
+
+    Returns the winning ``TunedConfig`` (not yet persisted) and the full
+    ``candidate-key -> vox/s`` measurement map.
+    """
+    import jax
+    import numpy as np
+
+    from ..configs.znni_nets import net_by_name
+    from ..core import convnet, planner
+    from ..core.hw import TPU_V5E
+    from ..kernels import backend_supports_pallas
+
+    net = net_by_name(net_name)
+    params = convnet.init_params(jax.random.PRNGKey(seed), net)
+    use_pallas = backend_supports_pallas()
+    prims = _os_prims(net)
+    rng = np.random.default_rng(seed)
+
+    results: Dict[str, float] = {}
+    winner: Optional[TunedConfig] = None
+    best_voxps = 0.0
+    for m, batch in itertools.product(range(1, max_m + 1), batches):
+        plan = planner.plan_fixed(
+            net, TPU_V5E, prims, m=m, batch=batch, strategy_name="autotune"
+        )
+        if plan is None:
+            continue
+        # a CI-sized sweep volume: >1 patch per axis with interior x-rows
+        # (the regime the strip path and sweep caches live in)
+        shape = (
+            3 * plan.core + plan.fov - 1 + 1,
+            2 * plan.core + plan.fov - 1,
+            2 * plan.core + plan.fov - 1,
+        )
+        vol = rng.normal(size=(net.in_channels,) + shape).astype(np.float32)
+        for fp_chunk, fuse in itertools.product(fprime_chunks, fuse_options):
+            key = f"m={m} batch={batch} fprime_chunk={fp_chunk} fuse={fuse}"
+            voxps = _measure_candidate(
+                params, net, plan, vol,
+                fuse_pairs=fuse, fprime_chunk=fp_chunk, reps=reps,
+            )
+            if voxps is None:
+                continue
+            results[key] = voxps
+            print(f"  {key:<44s} {voxps:>12,.0f} vox/s")
+            if voxps > best_voxps:
+                best_voxps = voxps
+                winner = TunedConfig(
+                    device_kind=normalize_device_kind(),
+                    net=net.name,
+                    m=m, batch=batch,
+                    fprime_chunk=fp_chunk,
+                    use_pallas=use_pallas,
+                    fuse_pairs=fuse,
+                    seg_core=plan.core,
+                    xla_flags=xla_bundle,
+                    source="autotune",
+                    measured_voxps=best_voxps,
+                    tuned_at=time.strftime("%Y-%m-%d"),
+                )
+    if winner is None:
+        raise RuntimeError(f"no feasible autotune candidate for {net_name}")
+    return winner, results
+
+
+def _sweep_xla_bundles(args) -> TunedConfig:
+    """Re-exec one child per applicable flag bundle; return the best child's
+    winner stamped with its bundle name (XLA_FLAGS is init-time-only)."""
+    import jax  # noqa: F401  (device kind for bundle filtering)
+
+    kind = normalize_device_kind()
+    best: Optional[TunedConfig] = None
+    for bundle in bundles_for(kind):
+        out = Path(f".autotune_{bundle}.json")
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = xla_flags_env(bundle, base=os.environ.get("XLA_FLAGS"))
+        cmd = [
+            sys.executable, "-m", "repro.tuning.autotune",
+            "--net", args.net, "--max-m", str(args.max_m),
+            "--batches", ",".join(map(str, args.batches)),
+            "--reps", str(args.reps), "--xla-bundle", bundle,
+            "--dry-run", "--candidate-out", str(out),
+        ]
+        print(f"-- bundle {bundle}: {env['XLA_FLAGS'] or '(empty)'}")
+        subprocess.run(cmd, env=env, check=True)
+        payload = json.loads(out.read_text())
+        out.unlink()
+        cfg = TunedConfig(**payload["winner"])
+        if best is None or (cfg.measured_voxps or 0) > (best.measured_voxps or 0):
+            best = cfg
+    assert best is not None
+    return best
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--net", default="bench-net")
+    ap.add_argument("--max-m", type=int, default=2)
+    ap.add_argument("--batches", type=lambda s: [int(x) for x in s.split(",")],
+                    default=[1, 2])
+    ap.add_argument("--fprime-chunks", type=lambda s: [
+        None if x == "none" else int(x) for x in s.split(",")
+    ], default=[None, 4])
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--xla-bundle", default=None,
+                    help="record this bundle name in the config (the flags "
+                         "must already be in XLA_FLAGS — init-time-only)")
+    ap.add_argument("--sweep-xla", action="store_true",
+                    help="re-exec one child per applicable XLA flag bundle "
+                         "and keep the best")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="measure but do not persist the config")
+    ap.add_argument("--candidate-out", default=None,
+                    help="also write winner + all measurements to this JSON")
+    args = ap.parse_args(argv)
+
+    if args.sweep_xla:
+        winner = _sweep_xla_bundles(args)
+        results: Dict[str, float] = {}
+    else:
+        winner, results = autotune_net(
+            args.net, max_m=args.max_m, batches=args.batches,
+            fprime_chunks=args.fprime_chunks, reps=args.reps,
+            seed=args.seed, xla_bundle=args.xla_bundle,
+        )
+    print(f"winner: {winner}")
+    if args.candidate_out:
+        Path(args.candidate_out).write_text(json.dumps({
+            "winner": dataclasses.asdict(winner), "results": results,
+        }, indent=2, sort_keys=True))
+    if not args.dry_run:
+        path = save_tuned_config(winner)
+        print(f"persisted {path}")
+
+
+if __name__ == "__main__":
+    main()

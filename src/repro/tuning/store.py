@@ -1,0 +1,122 @@
+"""Persisted per-hardware tuned configs: the autotuner's output, keyed by
+(device kind, net).
+
+ZNNi's central claim is that the throughput-optimal primitive schedule and
+its knobs are a *property of the hardware* — the paper re-derives them per
+machine (Table IV/V differ between the 4-way CPU and the Titan X).  This
+module is the repo's equivalent of those tables: ``repro.tuning.autotune``
+sweeps the executor's tunables on the machine it runs on and persists the
+winner here as JSON; planner/executor/``VolumeEngine`` auto-load it so a
+fresh process on the same hardware starts from the tuned point instead of
+defaults.
+
+Key schema (also docs/architecture.md "Kernels & autotuning"):
+
+* file: ``src/repro/tuning/configs/<device_kind>__<net>.json``
+* ``device_kind`` — ``jax.devices()[0].device_kind`` lower-cased with
+  spaces/slashes collapsed to ``-`` (e.g. ``cpu``, ``tpu-v5e``,
+  ``nvidia-h100-80gb-hbm3``);
+* ``net`` — ``ConvNetConfig.name`` (e.g. ``bench-net``, ``n537``).
+
+A config never overrides plan *geometry* when the caller supplies a Plan
+(m/batch are part of the planner's costed contract); it fills the
+execution-only knobs — ``use_pallas``, ``fuse_pairs``, ``fprime_chunk`` —
+and supplies m/batch only when the caller left them unset.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+
+CONFIG_DIR = Path(__file__).parent / "configs"
+
+_SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class TunedConfig:
+    """One hardware profile's winning knobs for one net.
+
+    ``None`` fields mean "no opinion — keep the caller's value".
+    ``xla_flags`` names a bundle in ``repro.tuning.xla_flags`` (applied at
+    process start, before jax initializes; it cannot be applied
+    retroactively, so loaders only *report* it).
+    """
+
+    device_kind: str
+    net: str
+    m: Optional[int] = None
+    batch: Optional[int] = None
+    fprime_chunk: Optional[int] = None
+    use_pallas: Optional[bool] = None
+    fuse_pairs: Optional[bool] = None
+    seg_core: Optional[int] = None
+    xla_flags: Optional[str] = None  # bundle name, see tuning.xla_flags
+    source: str = "autotune"  # autotune | manual
+    measured_voxps: Optional[float] = None
+    tuned_at: Optional[str] = None  # ISO date, stamped by the tuner CLI
+
+    def provenance(self) -> Dict[str, Any]:
+        """The compact dict benchmark rows embed as ``tuned_config``."""
+        return {
+            "device_kind": self.device_kind,
+            "net": self.net,
+            "fprime_chunk": self.fprime_chunk,
+            "use_pallas": self.use_pallas,
+            "fuse_pairs": self.fuse_pairs,
+            "xla_flags": self.xla_flags,
+            "source": self.source,
+            "tuned_at": self.tuned_at,
+        }
+
+
+def normalize_device_kind(kind: Optional[str] = None) -> str:
+    """Canonical hardware-profile key (filesystem-safe, stable across runs)."""
+    if kind is None:
+        kind = jax.devices()[0].device_kind
+    return re.sub(r"[^a-z0-9.-]+", "-", kind.strip().lower()).strip("-")
+
+
+def config_key(net: str, device_kind: Optional[str] = None) -> str:
+    return f"{normalize_device_kind(device_kind)}__{net}"
+
+
+def config_path(net: str, device_kind: Optional[str] = None,
+                root: Optional[Path] = None) -> Path:
+    return Path(root or CONFIG_DIR) / f"{config_key(net, device_kind)}.json"
+
+
+def save_tuned_config(cfg: TunedConfig, *, root: Optional[Path] = None) -> Path:
+    path = config_path(cfg.net, cfg.device_kind, root=root)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"schema_version": _SCHEMA_VERSION, **dataclasses.asdict(cfg)}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def load_tuned_config(
+    net: str,
+    device_kind: Optional[str] = None,
+    *,
+    root: Optional[Path] = None,
+) -> Optional[TunedConfig]:
+    """The persisted winner for (this hardware, ``net``), or ``None``.
+
+    Missing file → ``None`` (callers fall back to defaults); a file with a
+    future schema version is ignored rather than misread.
+    """
+    path = config_path(net, device_kind, root=root)
+    if not path.exists():
+        return None
+    payload = json.loads(path.read_text())
+    if payload.pop("schema_version", _SCHEMA_VERSION) > _SCHEMA_VERSION:
+        return None
+    fields = {f.name for f in dataclasses.fields(TunedConfig)}
+    return TunedConfig(**{k: v for k, v in payload.items() if k in fields})

@@ -1,0 +1,81 @@
+"""Named XLA-flag bundles per hardware family, applied before jax init.
+
+The autotuner sweeps *bundles* rather than individual flags: a bundle is a
+coherent set known to move 3D-FFT-conv workloads on one hardware family,
+and the winning bundle's NAME is persisted in the tuned config (the flags
+themselves stay here so a stale config can't pin removed flags forever).
+
+XLA reads ``XLA_FLAGS`` once at backend initialization, so bundles must be
+exported before the first jax call — the tuner CLI re-execs itself with the
+environment set (the ``experiments/hillclimb.py`` pattern); in-process
+callers can only *verify* what is already applied.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Tuple
+
+# bundle name -> (family, flags).  ``family`` is a prefix-match against the
+# normalized device kind ("" matches everything).
+XLA_FLAG_BUNDLES: Dict[str, Tuple[str, Tuple[str, ...]]] = {
+    "none": ("", ()),
+    # CPU: the container's default thread pool already matches cores; turn
+    # on the multi-threaded Eigen contraction path explicitly.
+    "cpu-multithread": (
+        "cpu",
+        ("--xla_cpu_multi_thread_eigen=true",),
+    ),
+    # TPU: latency-hiding scheduler + async collectives help the pipelined
+    # two-stage sweeps; SPMD fusion limits tuned for large fused MADs.
+    "tpu-latency-hiding": (
+        "tpu",
+        (
+            "--xla_tpu_enable_latency_hiding_scheduler=true",
+            "--xla_enable_async_all_gather=true",
+            "--xla_enable_async_collective_permute=true",
+        ),
+    ),
+    # GPU: overlap compute with NCCL-style collectives; keep autotuning on.
+    "gpu-overlap": (
+        "gpu",
+        (
+            "--xla_gpu_enable_latency_hiding_scheduler=true",
+            "--xla_gpu_enable_highest_priority_async_stream=true",
+        ),
+    ),
+}
+
+
+def bundles_for(device_kind: str) -> Tuple[str, ...]:
+    """Bundle names applicable to a normalized device kind (always incl. none)."""
+    kind = device_kind.lower()
+    names = []
+    for name, (family, _flags) in XLA_FLAG_BUNDLES.items():
+        if not family or kind.startswith(family) or family in kind:
+            names.append(name)
+    return tuple(names)
+
+
+def bundle_flags(name: str) -> Tuple[str, ...]:
+    try:
+        return XLA_FLAG_BUNDLES[name][1]
+    except KeyError:
+        raise ValueError(
+            f"unknown XLA flag bundle {name!r}; known: {sorted(XLA_FLAG_BUNDLES)}"
+        ) from None
+
+
+def xla_flags_env(name: str, base: Optional[str] = None) -> str:
+    """The ``XLA_FLAGS`` value for a bundle, appended to ``base`` (or the
+    current environment's value)."""
+    if base is None:
+        base = os.environ.get("XLA_FLAGS", "")
+    parts = [base.strip()] if base and base.strip() else []
+    parts.extend(bundle_flags(name))
+    return " ".join(parts)
+
+
+def apply_bundle(name: str) -> None:
+    """Export a bundle into ``os.environ`` — MUST run before jax init."""
+    os.environ["XLA_FLAGS"] = xla_flags_env(name)

@@ -91,7 +91,7 @@ from __future__ import annotations
 import itertools
 import math
 import time
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +111,8 @@ from ..core.primitives import (
     pool_primitive,
     resolve_primitive,
 )
+from ..kernels import resolve_use_pallas
+from ..tuning import TunedConfig, load_tuned_config
 from .tiler import (
     HaloSpec,
     SweepCounts,
@@ -206,7 +208,10 @@ class PlanExecutor:
         m: Optional[int] = None,
         batch: Optional[int] = None,
         theta: int = -1,
-        use_pallas: bool = False,
+        use_pallas: Optional[bool] = None,
+        fuse_pairs: Optional[bool] = None,
+        fprime_chunk: Optional[int] = None,
+        tuned: Union[str, TunedConfig, None] = "auto",
         deep_reuse: bool = True,
         ram_budget: Optional[float] = None,
         streaming: Optional[bool] = None,
@@ -214,6 +219,27 @@ class PlanExecutor:
         self.params = params
         self.net = net
         self.plan = plan
+        # per-hardware tuned config (repro.tuning): ``"auto"`` loads the
+        # persisted winner for (this device kind, net.name) if one exists.
+        # A tuned config fills only knobs the caller left unset — and only
+        # the execution knobs (use_pallas / fuse_pairs / fprime_chunk) when
+        # a Plan is given: m/batch are part of the planner's costed
+        # geometry contract (predicted == measured counters) and are taken
+        # from the tuner only on plan-less explicit-prims construction.
+        self.tuned: Optional[TunedConfig] = (
+            load_tuned_config(net.name) if tuned == "auto"
+            else (tuned if isinstance(tuned, TunedConfig) else None)
+        )
+        if self.tuned is not None:
+            if use_pallas is None:
+                use_pallas = self.tuned.use_pallas
+            if fuse_pairs is None:
+                fuse_pairs = self.tuned.fuse_pairs
+            if fprime_chunk is None:
+                fprime_chunk = self.tuned.fprime_chunk
+            if plan is None and prims is not None:
+                m = m if m is not None else self.tuned.m
+                batch = batch if batch is not None else self.tuned.batch
         if plan is not None:
             prims = plan.prims
             m = plan.m_final
@@ -238,7 +264,7 @@ class PlanExecutor:
         self.m = m
         self.batch = max(1, batch or 1)
         self.theta = theta
-        self.use_pallas = use_pallas
+        self.use_pallas = resolve_use_pallas(use_pallas)
 
         self.P = net.total_pooling()
         self.fov = net.field_of_view()
@@ -260,9 +286,11 @@ class PlanExecutor:
         # patches share segment spectra (cross-patch input-FFT reuse).
         self.compiled: CompiledPlan = compile_plan(
             params, net, prims=self.prims, n_in=self.n_in,
-            use_pallas=use_pallas, plan=plan,
+            use_pallas=self.use_pallas, fuse_pairs=fuse_pairs,
+            fprime_chunk=fprime_chunk, plan=plan,
             overlap_seg=self.core if self.prims[0] == "overlap_save" else None,
         )
+        self.fuse_pairs = self.compiled.fuse_pairs
 
         recombine = self.uses_mpf
 
@@ -329,6 +357,11 @@ class PlanExecutor:
         strip_states = getattr(self, "_strip_states", [])
         self._ledger.alloc(_tree_nbytes(self.params, self.compiled.states, strip_states))
         self._predict_memory_cache: Dict[Tuple[int, int, int], Any] = {}
+
+    def tuned_provenance(self) -> Optional[Dict[str, Any]]:
+        """The tuned config this executor runs under (bench-row provenance
+        dict, see ``TunedConfig.provenance``) — ``None`` when untuned."""
+        return None if self.tuned is None else self.tuned.provenance()
 
     # -- geometry ------------------------------------------------------------
 

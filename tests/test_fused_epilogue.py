@@ -1,0 +1,179 @@
+"""Fused strip-path epilogue: Pallas (interpret=True) vs ref.py oracles.
+
+Three layers of equivalence, bottom-up:
+
+* ``cmul_mad_bias`` — the fused MAD-accumulate-across-f-chunks + DC-bin
+  bias ``pallas_call`` against the einsum+``.at[...,0,0,0]`` oracle,
+  across ragged/padded shapes, odd channel counts, and multi-f-chunk
+  grids;
+* ``mpf_pool_window`` — the fused inverse-window + MPF kernel against
+  crop-then-pool, including windows strictly inside the input (the
+  uncropped-last-axis case the conv+pool pair produces);
+* ``fft_conv_pool_fused`` / ``compile_plan(fuse_pairs=True)`` — the whole
+  fused pair against the unfused conv -> bias -> relu -> pool walk,
+  including ``fprime_chunk`` splits (which route bias through the chunked
+  DC-bin path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ConvLayerSpec as L
+from repro.configs.base import ConvNetConfig
+from repro.core import convnet
+from repro.core.fft_conv import (
+    fft_conv_pool_fused,
+    fft_conv_task_parallel,
+    precompute_kernel_fft,
+)
+from repro.core.mpf import mpf
+from repro.core.primitives import compile_plan
+from repro.core.pruned_fft import fft_optimal_shape
+from repro.kernels.cmul_mad import ops as cmul_ops
+from repro.kernels.cmul_mad import ref as cmul_ref
+from repro.kernels.mpf_pool import ops as mp_ops
+from repro.kernels.mpf_pool import ref as mp_ref
+
+
+# --------------------------------------------------------------------------
+# cmul_mad_bias: fused MAD + DC-bin bias kernel vs oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,f,fp,sp", [
+    (1, 1, 1, (4, 4, 3)),
+    (2, 3, 5, (5, 4, 3)),      # ragged everything
+    (1, 17, 9, (8, 9, 9)),     # odd f -> multi f-chunk; B > one bin block
+    (3, 8, 2, (2, 3, 3)),      # fp < FP_BLOCK
+    (1, 16, 12, (6, 5, 7)),    # exact f-chunk multiple
+])
+def test_cmul_mad_bias_sweep(S, f, fp, sp, rng):
+    X = jnp.asarray(
+        (rng.normal(size=(S, f) + sp) + 1j * rng.normal(size=(S, f) + sp))
+        .astype(np.complex64)
+    )
+    W = jnp.asarray(
+        (rng.normal(size=(fp, f) + sp) + 1j * rng.normal(size=(fp, f) + sp))
+        .astype(np.complex64)
+    )
+    b = jnp.asarray(rng.normal(size=(fp,)).astype(np.float32))
+    got = cmul_ops.cmul_mad_bias(X, W, b, fft_shape=sp, use_pallas=True)
+    want = cmul_ref.cmul_mad_bias(X, W, b, sp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_cmul_mad_bias_none_matches_plain(rng):
+    sp = (5, 4, 3)
+    X = jnp.asarray(
+        (rng.normal(size=(2, 3) + sp) + 1j * rng.normal(size=(2, 3) + sp))
+        .astype(np.complex64)
+    )
+    W = jnp.asarray(
+        (rng.normal(size=(4, 3) + sp) + 1j * rng.normal(size=(4, 3) + sp))
+        .astype(np.complex64)
+    )
+    got = cmul_ops.cmul_mad_bias(X, W, None, fft_shape=sp, use_pallas=True)
+    want = cmul_ref.cmul_mad(X, W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_dc_bin_bias_equals_spatial_bias(rng):
+    """Adding b*N to spectral bin (0,0,0) == adding b after the inverse."""
+    n, k, f, fp = (7, 7, 7), (3, 3, 3), 3, 5
+    fs = fft_optimal_shape(n)
+    x = jnp.asarray(rng.normal(size=(2, f) + n).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(fp, f) + k).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(fp,)).astype(np.float32))
+    W = precompute_kernel_fft(w, fs)
+    got = fft_conv_pool_fused(
+        x, W, b, fft_shape=fs, k=k, p=2, use_pallas=False, relu=False
+    )
+    want = mpf(fft_conv_task_parallel(x, w, b, fft_shape=fs, use_pallas=False), 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# mpf_pool_window: fused inverse-window + pool kernel vs crop-then-pool
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,f,p,n,window", [
+    (1, 2, 2, (7, 8, 9), (5, 7, 7)),   # window strictly inside per axis
+    (2, 9, 3, (6, 6, 6), (5, 5, 5)),   # f not multiple of F_BLOCK; p=3
+    (1, 1, 2, (3, 3, 3), (3, 3, 3)),   # window == input (degenerate crop)
+])
+def test_mpf_pool_window_sweep(S, f, p, n, window, rng):
+    x = jnp.asarray(rng.normal(size=(S, f) + n).astype(np.float32))
+    got = mp_ops.mpf_pool_window(x, p, window, use_pallas=True)
+    want = mp_ref.mpf_pool_window(x, p, window)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mpf_pool_window_validates():
+    x = jnp.zeros((1, 1, 6, 6, 6))
+    with pytest.raises(ValueError, match=r"\(window\+1\)%p"):
+        mp_ops.mpf_pool_window(x, 2, (4, 5, 5), use_pallas=False)
+    with pytest.raises(ValueError, match="larger than input"):
+        mp_ops.mpf_pool_window(x, 2, (7, 5, 5), use_pallas=False)
+
+
+# --------------------------------------------------------------------------
+# whole fused pair vs the unfused walk
+# --------------------------------------------------------------------------
+
+NET = ConvNetConfig(
+    name="fused-test-net",
+    in_channels=2,
+    layers=(L("conv", 3, 4), L("pool", 2), L("conv", 3, 5), L("pool", 2),
+            L("conv", 3, 3)),
+)
+PRIMS = ("fft_cached", "mpf", "fft_cached", "mpf", "fft_cached")
+
+
+@pytest.mark.parametrize("fprime_chunk", [None, 3, 1])
+def test_compiled_fused_pairs_match_unfused(fprime_chunk, rng):
+    """fuse_pairs=True walks bit-match the unfused registry walk, with and
+    without fprime_chunk splits (which route bias through the chunked
+    DC-bin path)."""
+    params = convnet.init_params(jax.random.PRNGKey(0), NET)
+    base = compile_plan(params, NET, prims=PRIMS, m=2,
+                        use_pallas=False, fuse_pairs=False)
+    fused = compile_plan(params, NET, prims=PRIMS, m=2, use_pallas=False,
+                         fuse_pairs=True, fprime_chunk=fprime_chunk)
+    assert fused.fuse_pairs and not base.fuse_pairs
+    x = jnp.asarray(
+        rng.normal(size=(2, NET.in_channels) + (base.n_in,) * 3)
+        .astype(np.float32)
+    )
+    y0, y1 = base.apply(x), fused.apply(x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_fused_pair_interpret_pallas_matches_oracle(rng):
+    """The fused pair with the Pallas kernels (interpret mode) against the
+    pure-XLA fused pair — the end-to-end kernel-dispatch equivalence."""
+    n, k, f, fp, p = (9, 9, 9), (3, 3, 3), 2, 3, 2
+    fs = fft_optimal_shape(n)
+    x = jnp.asarray(rng.normal(size=(1, f) + n).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(fp, f) + k).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(fp,)).astype(np.float32))
+    W = precompute_kernel_fft(w, fs)
+    got = fft_conv_pool_fused(x, W, b, fft_shape=fs, k=k, p=p, use_pallas=True)
+    want = fft_conv_pool_fused(x, W, b, fft_shape=fs, k=k, p=p, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_relu_commutes_with_pool(rng):
+    """relu(mpf(y)) == mpf(relu(y)) bitwise — the reordering the fused
+    epilogue relies on to shrink ReLU to the pooled extent."""
+    y = jnp.asarray(rng.normal(size=(2, 3, 7, 7, 7)).astype(np.float32))
+    a = jax.nn.relu(mpf(y, 2))
+    b = mpf(jax.nn.relu(y), 2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,190 @@
+"""Tuned-config store + dispatch rule + executor/engine auto-load."""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ConvLayerSpec as L
+from repro.configs.base import ConvNetConfig
+from repro.configs.znni_nets import BENCH_NET, net_by_name
+from repro.core import convnet
+from repro.kernels import backend_supports_pallas, resolve_use_pallas
+from repro.serving.volume_engine import VolumeEngine
+from repro.tuning import (
+    TunedConfig,
+    config_path,
+    load_tuned_config,
+    normalize_device_kind,
+    save_tuned_config,
+)
+from repro.tuning.xla_flags import bundle_flags, bundles_for, xla_flags_env
+from repro.volume import PlanExecutor
+
+NET = ConvNetConfig(
+    name="tune-test-net",
+    in_channels=2,
+    layers=(L("conv", 3, 4), L("pool", 2), L("conv", 3, 4), L("pool", 2),
+            L("conv", 3, 3)),
+)
+PRIMS = ("overlap_save", "mpf", "fft_cached", "mpf", "fft_cached")
+
+
+# --------------------------------------------------------------------------
+# dispatch rule
+# --------------------------------------------------------------------------
+
+
+def test_resolve_use_pallas_rule():
+    # None -> backend detection; explicit bools always win
+    assert resolve_use_pallas(None) == backend_supports_pallas()
+    assert resolve_use_pallas(True) is True
+    assert resolve_use_pallas(False) is False
+    # this container is CPU: the Pallas path must NOT be the default
+    assert jax.default_backend() != "tpu"
+    assert backend_supports_pallas() is False
+
+
+# --------------------------------------------------------------------------
+# store round-trip
+# --------------------------------------------------------------------------
+
+
+def test_config_round_trip(tmp_path):
+    cfg = TunedConfig(
+        device_kind="cpu", net="tune-test-net", m=2, batch=1,
+        fprime_chunk=4, use_pallas=False, fuse_pairs=True, seg_core=8,
+        xla_flags="none", measured_voxps=123.0, tuned_at="2026-08-07",
+    )
+    path = save_tuned_config(cfg, root=tmp_path)
+    assert path == config_path("tune-test-net", "cpu", root=tmp_path)
+    assert load_tuned_config("tune-test-net", "cpu", root=tmp_path) == cfg
+    # missing -> None, not an error
+    assert load_tuned_config("no-such-net", "cpu", root=tmp_path) is None
+    # a future schema version is ignored rather than misread
+    payload = json.loads(path.read_text())
+    payload["schema_version"] = 999
+    path.write_text(json.dumps(payload))
+    assert load_tuned_config("tune-test-net", "cpu", root=tmp_path) is None
+
+
+def test_normalize_device_kind():
+    assert normalize_device_kind("cpu") == "cpu"
+    assert normalize_device_kind("NVIDIA H100 80GB HBM3") == "nvidia-h100-80gb-hbm3"
+    assert normalize_device_kind("TPU v5e") == "tpu-v5e"
+    # current process's device resolves to something non-empty and stable
+    assert normalize_device_kind() == normalize_device_kind()
+
+
+def test_provenance_shape():
+    cfg = TunedConfig(device_kind="cpu", net="x", fuse_pairs=True)
+    p = cfg.provenance()
+    assert p["device_kind"] == "cpu" and p["net"] == "x"
+    assert p["fuse_pairs"] is True
+    assert set(p) <= {f.name for f in dataclasses.fields(TunedConfig)}
+
+
+def test_committed_bench_config_loads():
+    """The repo ships an autotuned config for (cpu, bench-net) — the one CI
+    machines (cpu device kind) auto-load for the fused_tuned bench row."""
+    cfg = load_tuned_config(BENCH_NET.name, "cpu")
+    assert cfg is not None
+    assert cfg.net == BENCH_NET.name and cfg.device_kind == "cpu"
+    assert cfg.source == "autotune"
+    assert cfg.measured_voxps and cfg.measured_voxps > 0
+
+
+def test_net_by_name():
+    assert net_by_name("bench-net") is BENCH_NET
+    assert net_by_name("n537").name == "n537"
+    with pytest.raises(ValueError, match="unknown net"):
+        net_by_name("n000")
+
+
+# --------------------------------------------------------------------------
+# XLA flag bundles
+# --------------------------------------------------------------------------
+
+
+def test_xla_flag_bundles():
+    assert "none" in bundles_for("cpu")
+    assert "cpu-multithread" in bundles_for("cpu")
+    assert "tpu-latency-hiding" not in bundles_for("cpu")
+    assert bundle_flags("none") == ()
+    env = xla_flags_env("cpu-multithread", base="--existing_flag=1")
+    assert env.startswith("--existing_flag=1 ")
+    with pytest.raises(ValueError, match="unknown XLA flag bundle"):
+        bundle_flags("nope")
+
+
+# --------------------------------------------------------------------------
+# executor / engine auto-load
+# --------------------------------------------------------------------------
+
+
+def _tuned(tmp_path, **kw):
+    cfg = TunedConfig(device_kind=normalize_device_kind(),
+                      net="tune-test-net", **kw)
+    save_tuned_config(cfg, root=tmp_path)
+    return cfg
+
+
+def test_executor_applies_tuned_config(rng):
+    """An explicit TunedConfig fills the knobs the caller left unset; the
+    executor's compiled plan reflects them and output matches untuned."""
+    params = convnet.init_params(jax.random.PRNGKey(0), NET)
+    cfg = TunedConfig(
+        device_kind=normalize_device_kind(), net=NET.name,
+        m=2, batch=1, fprime_chunk=2, use_pallas=False, fuse_pairs=True,
+    )
+    ex = PlanExecutor(params, NET, prims=PRIMS, tuned=cfg)
+    assert ex.m == 2 and ex.batch == 1
+    assert ex.fuse_pairs is True and ex.use_pallas is False
+    assert ex.compiled.fuse_pairs is True
+    fft_cached = [pl for pl in ex.compiled.layers if pl.prim == "fft_cached"]
+    assert fft_cached and all(pl.fprime_chunk == 2 for pl in fft_cached)
+    assert ex.tuned_provenance()["fuse_pairs"] is True
+
+    base = PlanExecutor(params, NET, prims=PRIMS, m=2, batch=1, tuned=None)
+    assert base.tuned is None and base.tuned_provenance() is None
+    assert base.fuse_pairs is False  # CPU default: unfused
+    vol = rng.normal(size=(NET.in_channels, 30, 26, 26)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ex.run(vol)), np.asarray(base.run(vol)), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_executor_caller_knobs_beat_tuned():
+    params = convnet.init_params(jax.random.PRNGKey(0), NET)
+    cfg = TunedConfig(
+        device_kind=normalize_device_kind(), net=NET.name,
+        m=2, batch=4, fuse_pairs=True, fprime_chunk=2,
+    )
+    ex = PlanExecutor(params, NET, prims=PRIMS, m=1, batch=2,
+                      fuse_pairs=False, fprime_chunk=3, tuned=cfg)
+    assert ex.m == 1 and ex.batch == 2
+    assert ex.fuse_pairs is False
+    fft_cached = [pl for pl in ex.compiled.layers if pl.prim == "fft_cached"]
+    assert fft_cached and all(pl.fprime_chunk == 3 for pl in fft_cached)
+
+
+def test_engine_auto_loads_tuned_config(tmp_path, monkeypatch, rng):
+    """tuned="auto" loads the persisted config for (device kind, net.name)
+    through VolumeEngine — the serving path the acceptance pins."""
+    from repro.tuning import store
+
+    monkeypatch.setattr(store, "CONFIG_DIR", tmp_path)
+    _tuned(tmp_path, m=2, batch=1, fuse_pairs=True, fprime_chunk=2)
+    params = convnet.init_params(jax.random.PRNGKey(0), NET)
+    eng = VolumeEngine(params, NET, prims=PRIMS)
+    ex = eng.executor
+    assert ex.tuned is not None and ex.m == 2
+    assert ex.fuse_pairs is True and ex.compiled.fuse_pairs is True
+    # a net with no persisted config falls back to defaults
+    other = ConvNetConfig(name="untuned-net", in_channels=NET.in_channels,
+                          layers=NET.layers)
+    eng2 = VolumeEngine(params, other, prims=PRIMS, m=2)
+    assert eng2.executor.tuned is None
+    assert eng2.executor.fuse_pairs is False
