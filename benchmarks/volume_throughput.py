@@ -46,6 +46,7 @@ plan's predictions — the hand-off *bytes* must match exactly
 import argparse
 import json
 import math
+import time
 
 import jax
 import numpy as np
@@ -191,6 +192,85 @@ def bench_plans(plans: dict, params, vol, reps: int = 3, net=NET) -> dict:
     return rows
 
 
+def bench_sharded(params, net, os_prims, plan, vol, *, workers, m, batch,
+                  reps, ram_budget=None) -> dict:
+    """The ``sharded`` row (ISSUE 8): the N-worker serving fleet.
+
+    Each sweep's x-planes are partitioned across ``workers`` executors
+    with boundary halo handoff; one request per worker is queued so the
+    wavefront pipelines and every worker is busy in steady state.  The
+    row pins the fleet's halo accounting: measured halo-exchange bytes
+    must equal the tiler's ``predict_shard_handoff`` schedule EXACTLY
+    (``scripts/check_bench_json.py`` enforces it), and it carries the
+    re-dispatch counters (0 in a fault-free bench run).
+    """
+    from repro.serving import ShardedVolumeEngine, VolumeRequest
+
+    eng = ShardedVolumeEngine(
+        params, net, prims=os_prims, m=m, batch=batch, tuned="auto",
+        n_workers=workers, ram_budget=ram_budget,
+    )
+    base = eng.workers[0].executor
+    rid = 0
+
+    def _round():
+        nonlocal rid
+        reqs = [VolumeRequest(rid + i, vol) for i in range(workers)]
+        rid += workers
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        vox = sum(float(np.prod(r.out.shape[1:])) for r in reqs)
+        return vox / dt if dt > 0 else float("inf"), dt
+
+    _round()  # warmup: compiles every (worker, bucket) specialization
+    best_voxps, best_dt = max(_round() for _ in range(reps))
+    s = eng.last_stats
+    halo_ok = s["halo_bytes_in"] == s["predicted_halo_bytes_in"]
+    print(
+        f"{'sharded(x' + str(workers) + ')':<18s} n_in={base.n_in:>3d} "
+        f"S={base.batch} patches={s['patches']:>3.0f}  "
+        f"measured={best_voxps:>12,.0f} vox/s  "
+        f"predicted={plan.throughput * workers:>14,.0f} vox/s  "
+        f"halo={s['halo_exchange_bytes']/2**20:.2f}MiB "
+        f"({'exact' if halo_ok else 'MISMATCH'})  "
+        f"redispatches={s['redispatches']}"
+    )
+    mem = base.predict_memory(vol.shape[1:])
+    return {
+        "workers": workers,
+        "n_in": base.n_in,
+        "batch": base.batch,
+        "batch_buckets": list(eng.batch_buckets),
+        "patches": s["patches"],
+        "seconds": best_dt,
+        "measured_voxps": best_voxps,
+        # ideal linear scaling of the single-device plan: the fleet
+        # pipelines whole requests across workers, so N requests in
+        # flight approach N x the plan's throughput
+        "predicted_voxps": plan.throughput * workers,
+        # fleet peak = max worker ledger peak (each worker sweeps only
+        # its shard's slab, so the per-worker peak is the budget unit)
+        "peak_device_bytes": s["peak_device_bytes"],
+        "predicted_peak_device_bytes": mem.device_bytes,
+        "ram_budget": ram_budget,
+        "predicted_memory": None,
+        "tuned_config": base.tuned_provenance(),
+        # the fleet's halo-handoff accounting: per-worker measured bytes
+        # vs. the tiler's predicted schedule (exact match required)
+        "halo_bytes_in": list(s["halo_bytes_in"]),
+        "predicted_halo_bytes_in": list(s["predicted_halo_bytes_in"]),
+        "halo_exchange_bytes": s["halo_exchange_bytes"],
+        "predicted_halo_exchange_bytes": s["predicted_halo_exchange_bytes"],
+        "redispatches": s["redispatches"],
+        "rebalances": s["rebalances"],
+        "duplicates_dropped": s["duplicates_dropped"],
+        "retraces": s["retraces"],
+    }
+
+
 def budget_sweep(shape, batch, max_m, net=NET) -> list:
     """Planner-side throughput-vs-RAM curve (the paper's Fig. 5 analog).
 
@@ -253,6 +333,9 @@ def main(argv=None) -> None:
                     help="write machine-readable per-row results here")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run: m=1, batch=1, small volume, 1 rep")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker count for the sharded serving-fleet row "
+                         "(0 disables the row)")
     ap.add_argument("--ram-budget", type=float, default=None,
                     help="device RAM budget in bytes for the overlap_save "
                          "rows (plans stream host-staged and pin measured "
@@ -343,6 +426,12 @@ def main(argv=None) -> None:
         else:
             feasible[name] = (plan, kwargs)
     rows = bench_plans(feasible, params, vol, reps=args.reps, net=net)
+    if args.workers > 0:
+        rows["sharded"] = bench_sharded(
+            params, net, os_prims, deep_plan, vol, workers=args.workers,
+            m=args.m, batch=args.batch, reps=args.reps,
+            ram_budget=args.ram_budget,
+        )
     if {"overlap_save", "fft_cached"} <= rows.keys():
         r = rows["overlap_save"]["measured_voxps"] / rows["fft_cached"]["measured_voxps"]
         print(f"overlap_save / fft_cached: {r:.2f}x "

@@ -36,6 +36,18 @@ REQUIRED_ROW_KEYS = (
     "tuned_config",
 )
 
+SHARDED_ROW_KEYS = (
+    "workers",
+    "batch_buckets",
+    "halo_bytes_in",
+    "predicted_halo_bytes_in",
+    "halo_exchange_bytes",
+    "predicted_halo_exchange_bytes",
+    "redispatches",
+    "rebalances",
+    "duplicates_dropped",
+)
+
 HETERO_ROW_KEYS = (
     "theta",
     "devices",
@@ -87,6 +99,36 @@ def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
         devs = hetero.get("devices")
         if devs is not None and len(devs) != 2:
             errors.append(f"row 'hetero': expected 2 devices, got {devs!r}")
+    # the sharded serving-fleet row (ISSUE 8) is part of the contract:
+    # its measured per-worker halo-exchange bytes must equal the tiler's
+    # predicted handoff schedule EXACTLY (the boundary package size is
+    # chunk-size independent — a mismatch is a contract break, not noise),
+    # and a fault-free bench run must report zero re-dispatches
+    sharded = (rows or {}).get("sharded")
+    if sharded is None:
+        errors.append("missing mandatory 'sharded' row")
+    else:
+        for key in SHARDED_ROW_KEYS:
+            if key not in sharded:
+                errors.append(f"row 'sharded': missing {key!r}")
+        got = sharded.get("halo_bytes_in")
+        want = sharded.get("predicted_halo_bytes_in")
+        if got is not None and want is not None and got != want:
+            errors.append(
+                f"row 'sharded': measured halo_bytes_in {got!r} != "
+                f"predicted {want!r} (must match exactly)"
+            )
+        nw = sharded.get("workers")
+        if got is not None and nw is not None and len(got) != nw:
+            errors.append(
+                f"row 'sharded': {nw} workers but {len(got)} halo counters"
+            )
+        for key in ("redispatches", "rebalances", "duplicates_dropped"):
+            if sharded.get(key):
+                errors.append(
+                    f"row 'sharded': fault-free bench run reported "
+                    f"{key}={sharded[key]!r}"
+                )
     # the tuned row (ISSUE 7) must really be tuned: non-null provenance
     # carrying the (device kind, net) key the config was persisted under
     fused = (rows or {}).get("fused_tuned")

@@ -7,10 +7,78 @@ These are the shard_map-level building blocks behind DESIGN.md §3's
 
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+
+Coord = Tuple[int, int, int]
+
+
+# ---------------------------------------------------------------------------
+# Plane-boundary halo exchange (sharded volume serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HaloPackage:
+    """Host-staged boundary state handed from one sweep shard to the next.
+
+    A shard covering x-planes [x_a, x_b) of a sweep owns, when it finishes,
+    exactly the executor cache entries the successor shard (starting at
+    ``x_lo = x_b``) would have inherited on a single device: layer-0 segment
+    spectra and per-layer activation halos whose absolute-x key is >= x_lo
+    (everything left of it is evicted on a single device too).  Keys are the
+    tiler's ``HaloSpec`` absolute coordinates, so import on any worker files
+    entries bit-identically to where a single-device sweep would have them.
+
+    Arrays are host ndarrays (output-to-host staging on export, host-to-
+    device on import) — the fleet exchanges bytes through host RAM, never
+    device-to-device.
+    """
+
+    x_lo: int
+    spectra: Mapping[Coord, np.ndarray] = field(default_factory=dict)
+    halos: Mapping[Coord, Tuple[np.ndarray, ...]] = field(default_factory=dict)
+
+    @property
+    def n_spectra(self) -> int:
+        return len(self.spectra)
+
+    @property
+    def n_halos(self) -> int:
+        return len(self.halos)
+
+    @property
+    def nbytes(self) -> int:
+        seg = sum(int(a.nbytes) for a in self.spectra.values())
+        hal = sum(int(h.nbytes) for entry in self.halos.values() for h in entry)
+        return seg + hal
+
+    def is_empty(self) -> bool:
+        return not self.spectra and not self.halos
+
+
+def empty_halo_package(x_lo: int = 0) -> HaloPackage:
+    """The package a shard with no predecessor starts from."""
+    return HaloPackage(x_lo=x_lo, spectra={}, halos={})
+
+
+def halo_exchange(src_executor, src_token: int, dst_executor, dst_token: int,
+                  x_lo: int) -> HaloPackage:
+    """Move boundary caches from one worker's sweep scope to another's.
+
+    Stages ``src_executor``'s segment-spectra / activation-halo entries at
+    absolute x >= ``x_lo`` out to host (``export_handoff``), then uploads
+    them into ``dst_executor``'s scope (``import_handoff``).  Returns the
+    package so callers can account exchanged bytes (`HaloPackage.nbytes`).
+    Executors are duck-typed: anything with export_handoff/import_handoff.
+    """
+    pkg = src_executor.export_handoff(src_token, x_lo)
+    dst_executor.import_handoff(dst_token, pkg)
+    return pkg
 
 
 def ring_allgather_matmul(

@@ -76,13 +76,19 @@ class HeartbeatMonitor:
         for i in range(self.n_workers):
             self.workers[i] = WorkerState()
 
-    def heartbeat(self, worker: int, step: int, step_time: float, now: Optional[float] = None):
+    def heartbeat(self, worker: int, step: int, step_time: Optional[float] = None,
+                  now: Optional[float] = None):
+        """Record a heartbeat.  ``step_time=None`` is a *keepalive*: the
+        worker is responsive but did no compute this step (idle/blocked),
+        so it proves liveness without feeding a sample into the rolling
+        median it didn't earn."""
         w = self.workers[worker]
         w.last_step = step
         w.last_seen = time.monotonic() if now is None else now
-        w.step_times.append(step_time)
-        if len(w.step_times) > self.window:
-            w.step_times.pop(0)
+        if step_time is not None:
+            w.step_times.append(step_time)
+            if len(w.step_times) > self.window:
+                w.step_times.pop(0)
 
     def median_step_time(self) -> float:
         allt = [t for w in self.workers.values() for t in w.step_times]
@@ -103,6 +109,18 @@ class HeartbeatMonitor:
             else:
                 out[i] = "ok"
         return out
+
+    def evict(self, worker: int) -> None:
+        """Remove a worker from monitoring (post-EVICT): its frozen
+        heartbeat must stop skewing the rolling median, and it must not be
+        re-reported failed every subsequent classify."""
+        self.workers.pop(worker, None)
+
+    def revive(self, worker: int, now: Optional[float] = None) -> None:
+        """Re-admit a (previously evicted) worker with a fresh state."""
+        w = WorkerState()
+        w.last_seen = time.monotonic() if now is None else now
+        self.workers[worker] = w
 
     def plan(self, now: Optional[float] = None) -> Dict[str, Any]:
         """Action plan: evict failed workers, rebalance stragglers."""

@@ -69,7 +69,12 @@ from ..volume.tiler import (
 )
 
 
-@dataclass
+# eq=False: requests are identities, not values.  Generated dataclass
+# equality would compare the ndarray fields — ambiguous-truth-value
+# errors on any membership test (``req in engine.active``) as soon as two
+# requests carry the same payload (the same-payload duplicate regression
+# in tests/test_volume_engine_sched.py).
+@dataclass(eq=False)
 class VolumeRequest:
     rid: int
     volume: np.ndarray  # (f, X, Y, Z)
@@ -95,6 +100,65 @@ class VolumeRequest:
     _plane_order: Tuple[int, ...] = field(default=(), repr=False)
     _next_plane: int = field(default=0, repr=False)
     _sweep_bytes_est: float = field(default=0.0, repr=False)
+
+
+# -- request lifecycle helpers shared with serving.sharded_engine ----------
+#
+# Both engines drive the same per-request bookkeeping: plane counters at
+# submit, per-patch completion accounting, in-order strip finalization.
+# Keeping them module-level (not methods) is what lets the sharded fleet
+# reuse the exact single-device semantics — identical strip order is an
+# acceptance property, not a coincidence.
+
+
+def init_plane_accounting(req: VolumeRequest, tiling: VolumeTiling) -> None:
+    """Reset the request's per-plane completion counters for ``tiling``."""
+    req._plane_order = plane_starts(tiling)
+    req._plane_remaining = {x0: 0 for x0 in req._plane_order}
+    for p in tiling.patches:
+        req._plane_remaining[p.start[0]] += 1
+    req._next_plane = 0
+    req.final_rows = 0
+
+
+def advance_strips(req: VolumeRequest, plane_x0: int) -> None:
+    """Finalize output strips whose contributing planes all completed.
+
+    Bucket padding is handled by clipping to the TRUE dense extent:
+    planes living entirely in the padding finalize zero new rows (no
+    callback fires for an empty strip).  Planes finalize strictly in
+    sweep order (``_next_plane`` never skips), so ``on_strip`` callbacks
+    fire identically however patch completions interleave — the property
+    that makes sharded out-of-order completion invisible to callers.
+    """
+    req._plane_remaining[plane_x0] -= 1
+    while req._next_plane < len(req._plane_order):
+        x0 = req._plane_order[req._next_plane]
+        if req._plane_remaining[x0] > 0:
+            return
+        req._next_plane += 1
+        hi = min(final_rows_after_plane(req._tiling, x0), req.out.shape[1])
+        lo = req.final_rows
+        if hi > lo:
+            req.final_rows = hi
+            if req.on_strip is not None:
+                req.on_strip(lo, hi, req.out[:, lo:hi])
+
+
+def finish_patch(req: VolumeRequest, plane_x0: int) -> bool:
+    """Account one completed patch write; True when the request finished.
+
+    The caller owns what completion *means* (close sweep scopes, move the
+    request to its finished list) — this helper owns the shared counters,
+    so the two engines cannot drift on when a request is done.
+    """
+    req._remaining -= 1
+    advance_strips(req, plane_x0)
+    if req._remaining == 0:
+        req.done = True
+        req._padded = None  # drop the padded copy early
+        return True
+    return False
 
 
 class VolumeEngine:
@@ -165,12 +229,7 @@ class VolumeEngine:
         req.done = False
         # streaming completion bookkeeping: patches per x-plane; a plane's
         # last write finalizes every output row no later plane can touch
-        req._plane_order = plane_starts(tiling)
-        req._plane_remaining = {x0: 0 for x0 in req._plane_order}
-        for p in tiling.patches:
-            req._plane_remaining[p.start[0]] += 1
-        req._next_plane = 0
-        req.final_rows = 0
+        init_plane_accounting(req, tiling)
         if self.device_budget is not None and ex._os_reuse:
             req._sweep_bytes_est = ex.sweep_bytes_estimate(shape)
         # the output buffer has the TRUE dense shape; patches over the
@@ -222,6 +281,24 @@ class VolumeEngine:
             > self.device_budget
         )
 
+    def _pop_plane_capped(
+        self, req: VolumeRequest, items: List[Tuple[VolumeRequest, int]]
+    ) -> None:
+        """Pop ``req``'s patches into ``items`` up to the batch, never past
+        an x-plane boundary.  The cap makes a single request's chunk
+        sequence exactly ``tiler.chunk_patches`` — the canonical schedule
+        the reuse simulations and the sharded fleet both reproduce — and
+        keeps a serving chunk from degrading its later-plane patches to
+        the full path (strip eligibility is frozen at chunk start)."""
+        plane = None
+        while req._patches and len(items) < self.batch:
+            x0 = req._tiling.patches[req._patches[0]].start[0]
+            if plane is None:
+                plane = x0
+            elif x0 != plane:
+                break
+            items.append((req, req._patches.popleft()))
+
     def step(self) -> int:
         """One fused batch over the priority-ordered patch queue; returns
         the number of real (non-padding) patches processed."""
@@ -233,19 +310,24 @@ class VolumeEngine:
                 deferred.append(req)
                 continue
             took = len(items)
-            while req._patches and len(items) < self.batch:
-                items.append((req, req._patches.popleft()))
+            self._pop_plane_capped(req, items)
             if len(items) > took and req._sweep is None:
                 pending_est += req._sweep_bytes_est
             if len(items) >= self.batch:
+                break
+            if req._patches:
+                # the plane cap (not exhaustion) stopped the pop: leave the
+                # leftover slots empty rather than mixing lower-ranked
+                # requests in — strict priority draining is preserved, and
+                # the ragged chunk runs through a smaller compiled batch
+                # anyway.  Mixing still happens when this request is fully
+                # drained mid-batch.
                 break
         if not items and deferred:
             # progress guarantee: when every runnable request is waiting on
             # the budget, admit the highest-ranked one anyway (one sweep at
             # a time always fits by construction of the estimate)
-            req = deferred[0]
-            while req._patches and len(items) < self.batch:
-                items.append((req, req._patches.popleft()))
+            self._pop_plane_capped(deferred[0], items)
         if not items:
             return 0
         ex = self.executor
@@ -288,46 +370,25 @@ class VolumeEngine:
                     [xs, np.repeat(xs[-1:], S_run - len(items), axis=0)]
                 )
             ys = ex.run_patch_batch(xs)
+        completed: List[VolumeRequest] = []
         for (req, idx), y in zip(items, ys):
             ex.write_core(req.out, req._tiling, req._tiling.patches[idx], y)
-            req._remaining -= 1
-            self._advance_strips(req, req._tiling.patches[idx].start[0])
-            if req._remaining == 0:
-                req.done = True
-                req._padded = None  # drop the padded copy early
+            if finish_patch(req, req._tiling.patches[idx].start[0]):
                 ex.end_sweep(req._sweep)  # free boundary spectra + halos
-                # remove by IDENTITY: dataclass equality would compare the
-                # ndarray fields and raise on duplicate rids
-                self.active = [r for r in self.active if r is not req]
-                self.finished.append(req)
+                completed.append(req)
+        if completed:
+            # one identity-keyed removal pass AFTER the write loop — the
+            # old per-completion rebuild of ``self.active`` mutated the
+            # list mid-iteration of this very loop's item source
+            gone = {id(r) for r in completed}
+            self.active = [r for r in self.active if id(r) not in gone]
+            self.finished.extend(completed)
         self.ticks += 1
         ex.last_stats["retraces"] = len(ex._trace_keys)
         # lifetime peak across all sweeps served so far (the shared budget
         # the scheduler defends)
         ex.last_stats["peak_device_bytes"] = ex._ledger.peak
         return len(items)
-
-    def _advance_strips(self, req: VolumeRequest, plane_x0: int) -> None:
-        """Finalize output strips whose contributing planes all completed.
-
-        Bucket padding is handled by clipping to the TRUE dense extent:
-        planes living entirely in the padding finalize zero new rows (no
-        callback fires for an empty strip).
-        """
-        req._plane_remaining[plane_x0] -= 1
-        while req._next_plane < len(req._plane_order):
-            x0 = req._plane_order[req._next_plane]
-            if req._plane_remaining[x0] > 0:
-                return
-            req._next_plane += 1
-            hi = min(
-                final_rows_after_plane(req._tiling, x0), req.out.shape[1]
-            )
-            lo = req.final_rows
-            if hi > lo:
-                req.final_rows = hi
-                if req.on_strip is not None:
-                    req.on_strip(lo, hi, req.out[:, lo:hi])
 
     def run_until_drained(self, max_ticks: int = 100_000) -> List[VolumeRequest]:
         for _ in range(max_ticks):

@@ -561,6 +561,91 @@ class PlanExecutor:
                 {x for x in self._sweep_slabs.get(token, {}) if x >= x_lo},
             )
 
+    # -- shard boundary handoff (sharded serving fleet) ----------------------
+
+    def export_handoff(self, token: int, x_lo: int):
+        """Stage this sweep scope's boundary caches out to host.
+
+        Returns a ``distributed.collectives.HaloPackage`` holding every
+        segment-spectra row and activation-halo entry whose absolute-x key
+        is >= ``x_lo`` — exactly the entries a single-device sweep would
+        still hold when its next chunk starts at plane ``x_lo`` (everything
+        left of it is ``_evict_left_of`` food).  Rows are materialized to
+        host ndarrays (output-to-host staging), so the package can cross
+        workers; re-import round-trips bit-exactly (no arithmetic touches
+        the values, only copies).
+        """
+        from repro.distributed.collectives import HaloPackage
+
+        spectra = {}
+        for key, ref in self._sweeps.get(token, {}).items():
+            if key[0] >= x_lo and isinstance(ref, _SpectrumRef):
+                spectra[key] = np.asarray(ref.parent[ref.idx])
+        halos = {}
+        for key, entry in self._halo_caches.get(token, {}).items():
+            if key[0] >= x_lo:
+                halos[key] = tuple(np.asarray(h) for h in entry)
+        return HaloPackage(x_lo=x_lo, spectra=spectra, halos=halos)
+
+    def import_handoff(self, token: int, pkg) -> None:
+        """File a predecessor shard's boundary package into this scope.
+
+        Spectra rows are grouped by absolute segment x and uploaded as one
+        parent per x (the same split ``_store_spectra`` maintains, so the
+        per-key eviction sweep keeps really freeing device memory); halo
+        entries upload per key.  The ledger accounts both, mirroring what
+        a single-device sweep would have resident at this boundary.
+        """
+        if pkg is None or pkg.is_empty():
+            return
+        cache = self._sweeps.setdefault(token, {})
+        by_x: Dict[int, List] = {}
+        for key in sorted(pkg.spectra):
+            by_x.setdefault(key[0], []).append(key)
+        for _x, keys in sorted(by_x.items()):
+            parent = jnp.asarray(np.stack([pkg.spectra[k] for k in keys]))
+            share = parent.nbytes / len(keys)
+            self._ledger.alloc(parent.nbytes)
+            for i, key in enumerate(keys):
+                cache[key] = _SpectrumRef(parent, i)
+                self._key_bytes[(token, key)] = share
+        halo_cache = self._halo_caches.setdefault(token, {})
+        for key in sorted(pkg.halos):
+            entry = [jnp.asarray(h) for h in pkg.halos[key]]
+            halo_cache[key] = entry
+            self._ledger.alloc(sum(h.nbytes for h in entry))
+
+    def handoff_entry_nbytes(self) -> Tuple[int, int]:
+        """Per-entry byte sizes of boundary-package contents.
+
+        Returns ``(seg_row_bytes, halo_entry_bytes)``: one layer-0 segment
+        spectrum row is the complex64 rfftn of an (f_in, *fft_shape) block;
+        one activation-halo entry stacks, per layer below the input, the
+        (frag, C_in, size-1, n, n) float32 capture of the strip walk.
+        Every key's entry has the same size (patch extent is constant), so
+        ``predict_shard_handoff`` counts x per-entry sizes give the exact
+        exchanged bytes.
+        """
+        if not self._os_reuse:
+            raise ValueError("handoff accounting needs an overlap-save plan")
+        spec0 = self.compiled.layers[0].os_spec
+        fa, fb, fc = spec0.fft_shape
+        seg_row = self.net.in_channels * fa * fb * (fc // 2 + 1) * 8
+        halo_entry = 0
+        if self.deep_reuse:
+            c = self.net.in_channels
+            n = self.n_in
+            for i, layer in enumerate(self.net.layers):
+                if i > 0:
+                    h, frag = self._strip_info[i]
+                    halo_entry += frag * c * h * n * n * 4
+                if layer.kind == "conv":
+                    c = layer.out_channels
+                    n = n - layer.size + 1
+                else:
+                    n = n // layer.size
+        return int(seg_row), int(halo_entry)
+
     def _walk_below_input(self, states, x, S, *, capture: bool):
         """Layers 1.. over a layer-0 output, optionally capturing halos.
 

@@ -283,6 +283,7 @@ def _simulate_sweep(
     base_bytes: float = 0.0,
     streaming: bool = True,
     dense_vol_bytes: float = 0.0,
+    handoff: Optional[dict] = None,
 ) -> Tuple[SweepCounts, StreamPeak]:
     """One pass that produces both the reuse counts and the byte peak.
 
@@ -318,6 +319,11 @@ def _simulate_sweep(
         for key in [kk for kk in halo_ready if kk[0] < x_lo]:
             halo_ready.discard(key)
             halo_cache_bytes -= halo_entry_bytes
+        # shard-boundary snapshot: the cache state here (post-evict, before
+        # this chunk inserts anything) is exactly what a predecessor shard
+        # ending at x_lo exports and the successor imports
+        if handoff is not None and x_lo in handoff and handoff[x_lo] is None:
+            handoff[x_lo] = (len(cache), len(halo_ready))
         # staged slabs: current plane plus the prefetched next plane
         if streaming:
             x_cur = chunk[0].start[0]
@@ -451,6 +457,97 @@ def predict_stream_peak(
         dense_vol_bytes=dense_vol_bytes,
     )
     return mem_peak
+
+
+def plane_shards(
+    tiling: VolumeTiling,
+    n_workers: int,
+    weights: Optional[Sequence[float]] = None,
+) -> Tuple[Tuple[int, ...], ...]:
+    """Partition the sweep's x-planes into ``n_workers`` contiguous runs.
+
+    Returns one tuple of plane x-starts per worker, in sweep order (worker
+    w's run is strictly left of worker w+1's).  Contiguity is what makes a
+    shard exactly one prefix/suffix of the single-device sweep: the only
+    cross-shard state is the cache contents at the boundary plane, which
+    ``predict_shard_handoff`` sizes and ``PlanExecutor.export_handoff``
+    ships.  Every plane holds the same y×z patch grid, so balancing plane
+    counts balances patch counts; ``weights`` (e.g. 1/step-time, the
+    straggler-rebalance lever) skews the split via ``elastic_shard_sizes``.
+    Workers may receive empty runs when there are fewer planes than
+    workers — an empty shard is a no-op with an empty handoff.
+    """
+    if n_workers < 1:
+        raise ValueError("n_workers must be >= 1")
+    from repro.distributed.fault_tolerance import elastic_shard_sizes
+
+    planes = plane_starts(tiling)
+    sizes = elastic_shard_sizes(
+        len(planes), n_workers,
+        list(weights) if weights is not None else None,
+    )
+    out: List[Tuple[int, ...]] = []
+    pos = 0
+    for s in sizes:
+        out.append(planes[pos:pos + s])
+        pos += s
+    assert pos == len(planes)
+    return tuple(out)
+
+
+def shard_input_span(
+    tiling: VolumeTiling, planes: Sequence[int]
+) -> Tuple[int, int]:
+    """Input x-range [lo, hi) one shard's patches read (its host slab).
+
+    Patches of plane x0 read input rows [x0, x0 + extent); consecutive
+    shards overlap by ``extent - core`` rows (= FOV - 1, the halo) — that
+    overlap is what the boundary handoff carries in transformed form.
+    """
+    if not planes:
+        return (0, 0)
+    return (min(planes), max(planes) + tiling.extent)
+
+
+@dataclass(frozen=True)
+class ShardHandoff:
+    """Predicted boundary-package contents at one shard boundary."""
+
+    boundary_x: int  # successor shard's first plane start
+    seg_keys: int  # layer-0 segment-spectra entries crossing the boundary
+    halo_entries: int  # activation-halo entries (0 unless deep reuse)
+
+
+def predict_shard_handoff(
+    tiling: VolumeTiling,
+    boundaries: Sequence[int],
+    *,
+    batch: int = 1,
+    deep_reuse: bool = False,
+    strip_segments: Optional[int] = None,
+) -> Tuple[ShardHandoff, ...]:
+    """Predict the cache entries each shard boundary hands to its successor.
+
+    Runs the same sweep simulation as ``predict_sweep_counts`` and
+    snapshots both caches at each boundary plane's first chunk, after
+    eviction and before any insert — exactly the entry set (absolute-key
+    x >= boundary) the predecessor shard exports.  Multiplying by the
+    executor's per-entry byte sizes (``handoff_entry_nbytes``) gives the
+    exact exchanged byte count, which tests pin against the measured
+    ``HaloPackage.nbytes``.
+    """
+    snap = {int(b): None for b in boundaries}
+    _simulate_sweep(
+        tiling, batch=batch, deep_reuse=deep_reuse,
+        strip_segments=strip_segments, handoff=snap,
+    )
+    out = []
+    for b in boundaries:
+        got = snap[int(b)]
+        if got is None:  # boundary past the last plane: nothing crosses
+            got = (0, 0)
+        out.append(ShardHandoff(int(b), got[0], got[1]))
+    return tuple(out)
 
 
 def tile_for_net(

@@ -1,0 +1,72 @@
+"""Deterministic fault injection for ShardedVolumeEngine drills.
+
+The sharded fleet consults two hooks per (worker, tick):
+
+* ``down(wid, tick)``  — True: the worker is dead/hung this tick (runs no
+  chunk, sends no heartbeat; the monitor's synthetic-clock deadline does
+  the detecting);
+* ``step_time(wid, tick)`` — the tick's reported step duration (feeds the
+  monitor's rolling median; a factor > the monitor's ``straggler_factor``
+  flags the worker).
+
+``FaultScript`` turns scripted events — kill/revive/slowdown at a chosen
+tick — into those hooks.  Everything is tick-indexed and the engine clock
+is synthetic, so fault drills are ordinary fast tier-1 tests: no
+wall-clock sleeps, no flakiness, same outcome on every run.
+
+Note revival is two-sided: ``revive(wid, at_tick)`` makes ``down`` False
+again, but an *evicted* worker also needs the engine's consent —
+``ShardedVolumeEngine.revive_worker(wid)`` re-admits it, after which it
+resumes its zombie tasks (whose completions the done-set drops as
+duplicates — the idempotency drill).
+"""
+
+from typing import Dict, Optional, Tuple
+
+
+class FaultScript:
+    """Scripted per-tick worker faults (death, revival, slowdown)."""
+
+    def __init__(self) -> None:
+        self._death: Dict[int, int] = {}  # wid -> first down tick
+        self._revival: Dict[int, int] = {}  # wid -> first up-again tick
+        self._slow: Dict[int, Tuple[int, Optional[int], float]] = {}
+
+    # -- scripting ----------------------------------------------------------
+
+    def kill(self, wid: int, at_tick: int) -> "FaultScript":
+        """Worker ``wid`` stops running and heartbeating from ``at_tick``."""
+        self._death[wid] = at_tick
+        return self
+
+    def revive(self, wid: int, at_tick: int) -> "FaultScript":
+        """Worker ``wid`` is up again from ``at_tick`` (pair with the
+        engine's ``revive_worker`` if it was evicted meanwhile)."""
+        self._revival[wid] = at_tick
+        return self
+
+    def slow(
+        self, wid: int, at_tick: int, factor: float,
+        until: Optional[int] = None,
+    ) -> "FaultScript":
+        """Worker ``wid`` reports ``factor``x step times in
+        [``at_tick``, ``until``) (open-ended when ``until`` is None)."""
+        self._slow[wid] = (at_tick, until, float(factor))
+        return self
+
+    # -- engine hooks -------------------------------------------------------
+
+    def down(self, wid: int, tick: int) -> bool:
+        d = self._death.get(wid)
+        if d is None or tick < d:
+            return False
+        r = self._revival.get(wid)
+        return r is None or tick < r
+
+    def step_time(self, wid: int, tick: int) -> float:
+        s = self._slow.get(wid)
+        if s is not None:
+            start, until, factor = s
+            if tick >= start and (until is None or tick < until):
+                return factor
+        return 1.0

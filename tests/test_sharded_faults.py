@@ -1,0 +1,155 @@
+"""Fault drills for the sharded serving fleet (ISSUE 8).
+
+Every drill is deterministic: ``tests/_fault_harness.FaultScript`` injects
+death/slowdown at a chosen tick, the engine clock is synthetic (no
+wall-clock sleeps), and the ``HeartbeatMonitor`` deadline math runs on
+scripted step times.  The acceptance property throughout: whatever the
+fleet suffers, the output stays **bitwise equal** to the single-device
+engine — recovery replays shards from their retained boundary packages,
+and replayed completions are dropped idempotently.
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet
+from repro.serving import ShardedVolumeEngine, VolumeEngine, VolumeRequest
+
+from _fault_harness import FaultScript
+
+import pytest
+
+NET = ConvNetConfig(
+    "fault-toy", 1,
+    (L("conv", 3, 4), L("pool", 2), L("conv", 3, 4), L("pool", 2), L("conv", 3, 2)),
+)
+MIX = [
+    "overlap_save" if i == 0 else ("fft_cached" if l.kind == "conv" else "mpf")
+    for i, l in enumerate(NET.layers)
+]
+FOV = NET.field_of_view()
+CORE = NET.total_pooling()
+XC = 8  # planes per sweep: shard 0 = planes 0-3 (worker 0), shard 1 = 4-7
+
+
+@pytest.fixture(scope="module")
+def params():
+    return convnet.init_params(jax.random.PRNGKey(3), NET)
+
+
+@pytest.fixture(scope="module")
+def volume():
+    rng = np.random.default_rng(8)
+    shape = (XC * CORE + FOV - 1, CORE + FOV - 1, CORE + FOV - 1)
+    return rng.normal(size=(1,) + shape).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def reference(params, volume):
+    eng = VolumeEngine(params, NET, prims=MIX, m=1, batch=3, tuned=None)
+    req = VolumeRequest(0, volume)
+    eng.submit(req)
+    eng.run_until_drained()
+    return req.out
+
+
+def _fleet(params, faults, **kw):
+    return ShardedVolumeEngine(
+        params, NET, prims=MIX, m=1, batch=3, tuned=None,
+        n_workers=2, fault_hooks=faults, **kw,
+    )
+
+
+def test_worker_death_redispatches_bitwise(params, volume, reference):
+    """Kill worker 1 mid-shard: its unfinished planes re-queue onto the
+    survivor as a replay from the retained boundary package; the output
+    is still bitwise-equal and every counter is exactly accountable."""
+    faults = FaultScript().kill(1, at_tick=5)
+    eng = _fleet(params, faults)
+    req = VolumeRequest(0, volume)
+    eng.submit(req)
+    eng.run_until_drained()
+    st = eng.last_stats
+    assert np.array_equal(req.out, reference)  # BITWISE under failure
+    assert st["redispatches"] == 1
+    assert st["alive_workers"] == 1
+    # worker 1 finished some patches before dying; the replay re-completed
+    # them and the done-set dropped every one
+    assert st["duplicates_dropped"] >= 1
+    # halo accounting stays exact: the no-fault schedule predicts the
+    # boundary package once (worker 1's import); the replay imports the
+    # SAME package again on the survivor, so measured = predicted + one
+    # extra delivery of that boundary — nothing else moved
+    pred = st["predicted_halo_bytes_in"]
+    boundary_bytes = pred[1]
+    assert boundary_bytes > 0
+    assert st["halo_exchange_bytes"] == sum(pred) + boundary_bytes
+    assert st["halo_bytes_in"] == [boundary_bytes, boundary_bytes]
+
+
+def test_straggler_rebalances_before_evict(params, volume, reference):
+    """A slow-but-alive worker keeps heartbeating, so the policy REBALANCEs
+    (its trailing unstarted planes split off to the fast worker) and never
+    EVICTs; the contiguous re-partition keeps the output bitwise."""
+    faults = FaultScript().slow(1, at_tick=0, factor=5.0)
+    eng = _fleet(params, faults)
+    req = VolumeRequest(0, volume)
+    eng.submit(req)
+    shard_planes = len(req._tasks[1].planes)
+    eng.run_until_drained()
+    st = eng.last_stats
+    assert np.array_equal(req.out, reference)
+    assert st["rebalances"] >= 1
+    assert st["redispatches"] == 0  # shrunk, not evicted
+    assert st["alive_workers"] == 2
+    # the straggler's plane share really shrank...
+    straggler_task = eng.workers[1].tasks[0]
+    assert len(straggler_task.planes) < shard_planes
+    # ...and the split-off tail ran on the other worker
+    assert any(
+        t.req is req and t.planes and t.planes[0] > straggler_task.planes[-1]
+        for t in eng.workers[0].tasks
+    )
+
+
+def test_revived_worker_duplicates_dropped(params, volume, reference):
+    """Kill, recover via re-dispatch, then revive the dead worker: it
+    finishes its zombie shard, and every completion lands in the request's
+    done-set as a duplicate — dropped idempotently, output unchanged."""
+    faults = FaultScript().kill(1, at_tick=5)
+    eng = _fleet(params, faults)
+    req = VolumeRequest(0, volume)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.done and np.array_equal(req.out, reference)
+    dups_before = eng.last_stats["duplicates_dropped"]
+    zombie = eng.workers[1].tasks[0]
+    assert zombie.zombie and not zombie.done and len(zombie.queue) > 0
+    pending = len(zombie.queue)
+    # the worker comes back: both the script and the engine re-admit it
+    faults.revive(1, at_tick=eng.ticks)
+    eng.revive_worker(1)
+    for _ in range(pending + 2):
+        eng.step()
+    assert zombie.done
+    assert eng.last_stats["duplicates_dropped"] == dups_before + pending
+    assert np.array_equal(req.out, reference)  # replays never corrupt
+
+
+def test_death_before_handoff_replays_from_start(params, volume, reference):
+    """Worker 0 dies before exporting its boundary: the whole first shard
+    replays on worker 1, which then hands off to ITSELF-chained successor
+    state and finishes the sweep alone, still bitwise."""
+    faults = FaultScript().kill(0, at_tick=1)
+    eng = _fleet(params, faults)
+    req = VolumeRequest(0, volume)
+    eng.submit(req)
+    eng.run_until_drained()
+    st = eng.last_stats
+    assert np.array_equal(req.out, reference)
+    assert st["redispatches"] == 1
+    # both shards ultimately ran on worker 1, with the boundary package
+    # exchanged between its own two sweep scopes
+    assert st["halo_bytes_in"][1] == st["predicted_halo_bytes_in"][1]

@@ -128,3 +128,26 @@ def test_bucketing_is_exact_for_undersized_axes(rng):
     bad = rng.normal(size=(1, FOV - 2, FOV, FOV)).astype(np.float32)
     with pytest.raises(ValueError, match="no valid output"):
         eng.submit(VolumeRequest(1, bad))
+
+
+def test_same_payload_duplicate_requests_stay_distinct(rng):
+    """Regression: VolumeRequest compares by identity (eq=False), so two
+    requests with an identical payload — same rid, same volume array,
+    same priority — are distinct queue entries.  Field-based equality
+    made membership tests and live-list removal conflate them: finishing
+    one "finished" both, and the second was dropped half-served."""
+    params = convnet.init_params(jax.random.PRNGKey(4), NET)
+    eng = VolumeEngine(params, NET, prims=MIX, m=1, batch=2)
+    vol = _vol(rng)
+    a = VolumeRequest(7, vol, priority=1)
+    b = VolumeRequest(7, vol, priority=1)  # same payload, different request
+    assert a is not b and a != b
+    eng.submit(a)
+    eng.submit(b)
+    assert len({id(e[0]) for e in eng.queue}) == 2  # both admitted, distinct
+    eng.run_until_drained()
+    assert a.done and b.done
+    ref = _dense(params, vol)
+    np.testing.assert_allclose(a.out, ref, atol=1e-3)
+    np.testing.assert_allclose(b.out, ref, atol=1e-3)
+    assert a.out is not b.out  # each served to its own output buffer
