@@ -35,6 +35,15 @@ It also emits a planner-side **budget sweep** — throughput vs. RAM, the
 paper's Fig. 5 analog — showing where a faster primitive's patch stops
 fitting and a slower-but-leaner one takes over.
 
+The ``fused_os`` row (ISSUE 9) runs the deep plan with the halo-emitting
+fused strip-path epilogue (``fuse_os=True``): eligible conv+pool pairs of
+the capture/strip walks collapse to one fused call each.  Its JSON row
+carries ``bitwise_equal_unfused`` (the identically-knobbed unfused walk
+must produce a bit-identical dense output) and the fused counters next to
+their exact sweep predictions — ``scripts/check_bench_json.py`` gates
+both, plus a throughput trend gate against the previous committed
+``BENCH_*.json``.
+
 The ``hetero`` row (ISSUE 6) plans over the paper's CPU+GPU device set
 (``hw.PAPER_MACHINES``) and executes the split as a two-backend pipeline
 (host CPU backend + default accelerator, host-RAM hand-off at θ); its
@@ -64,6 +73,7 @@ NET = BENCH_NET
 REUSE_KEYS = (
     "os_seg_fft", "os_seg_hits", "os_mad_segments",
     "deep_strip_patches", "deep_full_patches", "retraces",
+    "fused_pair_calls", "os_fused_segments",
 )
 
 
@@ -109,6 +119,8 @@ def bench_plans(plans: dict, params, vol, reps: int = 3, net=NET) -> dict:
                     f"  MAD-segs={s['os_mad_segments']:.0f}"
                     f"  strip={s['deep_strip_patches']:.0f}/{s['patches']:.0f}"
                 )
+            if s.get("fused_pair_calls"):
+                extra += f"  fused-pairs={s['fused_pair_calls']:.0f}"
             if plan.sweep is not None:
                 c = plan.sweep
                 ok = (
@@ -399,6 +411,12 @@ def main(argv=None) -> None:
         # use_pallas) from the autotuner — the paired row that shows what
         # tuning buys on THIS machine
         "fused_tuned": (deep_plan, {"tuned": "auto"}),
+        # ISSUE 9: the halo-emitting fused strip-path epilogue — same deep
+        # plan, eligible conv+pool pairs of the capture/strip walks run as
+        # ONE fused call each; the row carries a bitwise parity bit vs.
+        # the identically-knobbed unfused walk (check_bench_json gates it)
+        "fused_os": (deep_plan, {"tuned": "auto", "fuse_pairs": True,
+                                 "fuse_os": True}),
         "baseline_naive": (planner.plan_single(
             net, TPU_V5E, max_m=args.m, batches=(args.batch,),
             use_mpf=False, strategy_name="baseline_naive",
@@ -426,6 +444,28 @@ def main(argv=None) -> None:
         else:
             feasible[name] = (plan, kwargs)
     rows = bench_plans(feasible, params, vol, reps=args.reps, net=net)
+    if "fused_os" in rows:
+        # parity gate: the SAME knobs with fuse_os flipped must produce a
+        # bitwise-identical dense output (the fused epilogue moves no
+        # arithmetic off the Pallas path), and the fused-pair counter must
+        # equal the planner's sweep prediction exactly
+        ex_f = PlanExecutor(params, net, deep_plan, tuned="auto",
+                            fuse_pairs=True, fuse_os=True)
+        ex_u = PlanExecutor(params, net, deep_plan, tuned="auto",
+                            fuse_pairs=True, fuse_os=False)
+        bitwise_equal = bool(np.array_equal(ex_f.run(vol), ex_u.run(vol)))
+        c = ex_f.predict_counts(vol.shape[1:])
+        predicted_pairs = (
+            (c.strip_patches + c.full_patches) * len(ex_f._fused_pairs)
+        )
+        rows["fused_os"]["bitwise_equal_unfused"] = bitwise_equal
+        rows["fused_os"]["predicted_fused_pair_calls"] = predicted_pairs
+        pairs_ok = rows["fused_os"]["fused_pair_calls"] == predicted_pairs
+        print(
+            f"fused_os parity: bitwise_equal_unfused={bitwise_equal}  "
+            f"fused_pair_calls={rows['fused_os']['fused_pair_calls']:.0f} "
+            f"({'exact' if pairs_ok else 'MISMATCH'})"
+        )
     if args.workers > 0:
         rows["sharded"] = bench_sharded(
             params, net, os_prims, deep_plan, vol, workers=args.workers,

@@ -9,18 +9,29 @@ hand-off bytes equal to the plan's prediction EXACTLY (per-patch hand-off
 size is chunk-size independent, so any mismatch is a contract break, not
 noise).
 
-``--baseline BENCH_NNN.json`` adds a throughput-regression gate against a
-committed breadcrumb: a row present in both files must not lose more than
-``--tolerance`` (default 50%) of the baseline's measured vox/s.  The wide
-tolerance absorbs shared-CI noise while still catching order-of-magnitude
-breakage; per-counter exactness is enforced separately above.
+The throughput trend gate runs by default: the baseline is the highest-
+numbered committed ``BENCH_NNN.json`` next to the checked file (the
+previous PR's breadcrumb), and a row present in both files must not lose
+more than ``--tolerance`` (default 50%) of the baseline's measured vox/s.
+The wide tolerance absorbs shared-CI noise while still catching order-of-
+magnitude breakage; per-counter exactness is enforced separately above.
+``--baseline PATH`` pins an explicit baseline, ``--baseline none``
+disables the gate (e.g. for the very first breadcrumb).
+
+The ``fused_os`` row (ISSUE 9) is mandatory: it must report
+``bitwise_equal_unfused: true`` (fused strip-path output identical to the
+unfused walk) and its measured ``fused_pair_calls`` must equal the sweep
+prediction exactly.
 
 Usage: python scripts/check_bench_json.py BENCH_volume_throughput.json \
-           [--baseline BENCH_006.json] [--tolerance 0.5]
+           [--baseline BENCH_006.json | --baseline none] [--tolerance 0.5]
 """
 
 import argparse
+import glob
 import json
+import os
+import re
 import sys
 
 REQUIRED_ROW_KEYS = (
@@ -60,6 +71,24 @@ HETERO_ROW_KEYS = (
     "predicted_xfer_seconds",
     "predicted_xfer_bytes",
 )
+
+
+def discover_baseline(path: str) -> str:
+    """The previous committed breadcrumb: the highest-numbered
+    ``BENCH_NNN.json`` in the checked file's directory, excluding the
+    checked file itself.  Returns None when there is none (first PR)."""
+    root = os.path.dirname(os.path.abspath(path)) or "."
+    best, best_n = None, -1
+    for cand in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(cand))
+        if m is None:
+            continue
+        if os.path.exists(path) and os.path.samefile(cand, path):
+            continue
+        n = int(m.group(1))
+        if n > best_n:
+            best, best_n = cand, n
+    return best
 
 
 def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
@@ -143,6 +172,34 @@ def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
             for key in ("device_kind", "net"):
                 if not tc.get(key):
                     errors.append(f"row 'fused_tuned': tuned_config missing {key!r}")
+    # the fused strip-path row (ISSUE 9) is part of the contract: fused
+    # output bitwise-identical to the unfused walk, fused-pair counter
+    # equal to the sweep prediction exactly
+    fos = (rows or {}).get("fused_os")
+    if fos is None:
+        errors.append("missing mandatory 'fused_os' row")
+    else:
+        for key in ("bitwise_equal_unfused", "fused_pair_calls",
+                    "predicted_fused_pair_calls", "os_fused_segments"):
+            if key not in fos:
+                errors.append(f"row 'fused_os': missing {key!r}")
+        if fos.get("bitwise_equal_unfused") is not True:
+            errors.append(
+                "row 'fused_os': bitwise_equal_unfused is not true — fused "
+                "strip-path output diverged from the unfused walk"
+            )
+        got = fos.get("fused_pair_calls")
+        want = fos.get("predicted_fused_pair_calls")
+        if got is not None and want is not None and got != want:
+            errors.append(
+                f"row 'fused_os': fused_pair_calls {got!r} != predicted "
+                f"{want!r} (must match exactly)"
+            )
+        if not fos.get("fused_pair_calls"):
+            errors.append(
+                "row 'fused_os': fused_pair_calls is 0 — the fused "
+                "epilogue never dispatched"
+            )
     sweep = payload.get("budget_sweep")
     if not sweep:
         errors.append("missing budget_sweep block")
@@ -189,9 +246,19 @@ def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("path", nargs="?", default="BENCH_volume_throughput.json")
-    ap.add_argument("--baseline", default=None,
-                    help="committed BENCH_NNN.json to gate throughput against")
+    ap.add_argument("--baseline", default="auto",
+                    help="committed BENCH_NNN.json to gate throughput "
+                         "against; 'auto' (default) picks the highest-"
+                         "numbered one next to PATH, 'none' disables")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="max fractional measured_voxps drop vs baseline")
     args = ap.parse_args()
-    sys.exit(check(args.path, baseline=args.baseline, tolerance=args.tolerance))
+    baseline = args.baseline
+    if baseline == "auto":
+        baseline = discover_baseline(args.path)
+        if baseline is None:
+            print("BENCH JSON: no committed BENCH_NNN.json found — "
+                  "trend gate skipped")
+    elif baseline == "none":
+        baseline = None
+    sys.exit(check(args.path, baseline=baseline, tolerance=args.tolerance))

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.cmul_mad import ops as cmul_ops
+from ..kernels.dispatch import resolve_use_pallas
 from ..kernels.mpf_pool import ops as mpf_ops
 from .bias import add_channel_bias
 from .pruned_fft import (
@@ -229,3 +230,66 @@ def fft_conv_pool_fused(
         y = pruned_irfftn(O, fft_shape, (0, 0, 0), win)
     y = mpf_ops.mpf_pool_window(y, p, out, use_pallas=use_pallas)
     return jax.nn.relu(y) if relu else y
+
+
+@partial(
+    jax.jit,
+    static_argnames=("fft_shape", "k", "p", "halo_cols", "use_pallas", "fprime_chunk"),
+)
+def fft_conv_pool_fused_halo(
+    x: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    *,
+    fft_shape: Tuple[int, int, int],
+    k: Tuple[int, int, int],
+    p: int,
+    halo_cols: int,
+    lead: Optional[jnp.ndarray] = None,
+    use_pallas: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Halo-emitting fused conv + ReLU + MPF: ``(pooled, boundary_halo)``.
+
+    The volume executor's halo-capturing and strip walks were unfused by
+    design: deep reuse needs the *pool layer's input* materialized so its
+    trailing x-columns can seed the next patch's activation cache.  This
+    variant returns that boundary slab as a SECOND output — the pool input
+    never becomes a separate executor-visible materialization step, so the
+    fused pair can run inside the capture/strip walks.
+
+    ``lead`` (strip path) is the cached activation halo prepended to the
+    conv's ReLU output before pooling — the halo then comes from the
+    *concatenated* tensor, exactly like the unfused strip walk.  ReLU is
+    always applied (a pool follows, so the conv is never the net's last).
+
+    Parity contract: off the Pallas path this runs literally the unfused
+    op sequence (spatial bias conv, ReLU, concat, slice, MPF) — fused
+    strip output and exported halos are BITWISE equal to the unfused walk
+    (relu∘max == max∘relu exactly; the slice/concat move no arithmetic).
+    On the Pallas path the conv collapses to the DC-bin-bias MAD kernel +
+    pruned inverse (allclose, like ``fft_conv_pool_fused``).
+    """
+    if resolve_use_pallas(use_pallas):
+        n = x.shape[2:]
+        out = _out_shape(n, k)
+        X = pruned_rfftn(x, fft_shape)
+        if fprime_chunk is not None and fprime_chunk < W.shape[0]:
+            bias = jnp.zeros((W.shape[0],), jnp.float32) if b is None else b
+            y = _chunked_mad_inverse(
+                X, W, fft_shape, out, fprime_chunk, use_pallas, b=bias
+            )
+        else:
+            O = cmul_ops.cmul_mad_bias(
+                X, W, b, fft_shape=fft_shape, use_pallas=use_pallas
+            )
+            y = pruned_irfftn(O, fft_shape, (0, 0, 0), out)
+    else:
+        y = fft_conv_with_precomputed(
+            x, W, b, fft_shape, k, use_pallas=use_pallas, fprime_chunk=fprime_chunk
+        )
+    y = jax.nn.relu(y)
+    if lead is not None:
+        y = jnp.concatenate([lead, y], axis=2)
+    halo = y[:, :, -int(halo_cols):]
+    return mpf_ops.mpf_pool(y, p, use_pallas=use_pallas), halo

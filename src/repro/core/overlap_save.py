@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.cmul_mad import ops as cmul_ops
+from ..kernels.dispatch import resolve_use_pallas
+from ..kernels.os_segment import ops as seg_ops
 from .bias import add_channel_bias
 from .pruned_fft import fft_optimal_shape, pruned_irfftn, pruned_rfftn
 
@@ -179,6 +181,33 @@ def os_input_spectra(x: jnp.ndarray, spec: OverlapSaveSpec) -> jnp.ndarray:
     return segment_spectrum(segs, spec)  # leading dims pass through rfftn
 
 
+def _mad_inverse_segment(
+    Fj: jnp.ndarray,
+    W: jnp.ndarray,
+    spec: OverlapSaveSpec,
+    crop: Tuple[int, ...],
+    use_pallas: Optional[bool],
+    fprime_chunk: Optional[int],
+) -> jnp.ndarray:
+    """One segment's MAD + pruned inverse, optionally f'-chunked.
+
+    Chunking the OUTPUT channels bounds the live output-spectra column to
+    ``fprime_chunk`` channels (the same staged-memory knob as
+    ``fft_conv._chunked_mad_inverse``); each channel's reduction is
+    untouched, so the result is value-identical to the unchunked form.
+    """
+    fp = W.shape[0]
+    if not fprime_chunk or int(fprime_chunk) >= fp:
+        O = cmul_ops.cmul_mad(Fj, W, use_pallas=use_pallas)
+        return pruned_irfftn(O, spec.fft_shape, (0, 0, 0), crop)
+    fc = int(fprime_chunk)
+    parts = []
+    for i in range(0, fp, fc):
+        O = cmul_ops.cmul_mad(Fj, W[i : i + fc], use_pallas=use_pallas)
+        parts.append(pruned_irfftn(O, spec.fft_shape, (0, 0, 0), crop))
+    return jnp.concatenate(parts, axis=1)
+
+
 def os_apply_from_spectra(
     F: jnp.ndarray,
     W: jnp.ndarray,
@@ -186,6 +215,7 @@ def os_apply_from_spectra(
     spec: OverlapSaveSpec,
     *,
     use_pallas: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
 ) -> jnp.ndarray:
     """MAD + inverse + reassembly from precomputed input segment spectra.
 
@@ -201,7 +231,16 @@ def os_apply_from_spectra(
     that overlapped segments could hold more; see the cost docstring's
     known approximations).  The input segment spectra F are all live by
     design: they are the executor's reuse currency.
+
+    When the Pallas path is on (``kernels.resolve_use_pallas``), the whole
+    per-segment chain runs as ONE fused kernel over the segment grid
+    (``kernels.os_segment``) — MAD, DC-bin bias, inverse, and crop never
+    leave VMEM; ``fprime_chunk`` becomes the kernel's output-channel block.
     """
+    if resolve_use_pallas(use_pallas):
+        return seg_ops.os_segment_fused(
+            F, W, b, spec, fprime_chunk=fprime_chunk, use_pallas=True
+        )
     n_seg = F.shape[1]
     s = spec.seg_core
     crop = (s,) + spec.out[1:]
@@ -213,8 +252,7 @@ def os_apply_from_spectra(
     # keeps is the small spatial core).
     parts = []
     for j in range(n_seg):
-        O = cmul_ops.cmul_mad(F[:, j], W, use_pallas=use_pallas)
-        seg = pruned_irfftn(O, spec.fft_shape, (0, 0, 0), crop)
+        seg = _mad_inverse_segment(F[:, j], W, spec, crop, use_pallas, fprime_chunk)
         # aligned grid: segment j owns outputs [j·s, (j+1)·s); the tail's
         # outputs past the true extent came from padding and are dropped.
         parts.append(seg if j < n_seg - 1 else seg[:, :, : spec.tail_len])
@@ -243,6 +281,7 @@ def os_apply_tail_from_spectra(
     out_cols: int,
     *,
     use_pallas: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
 ) -> jnp.ndarray:
     """MAD + inverse + reassembly of the TRAILING ``out_cols`` output columns.
 
@@ -251,8 +290,14 @@ def os_apply_tail_from_spectra(
     ``spec.starts[-q:]``); returns (S, f', out_cols, *spec.out[1:]).  The
     executor's strip path uses this for interior patches: their leading
     output columns are assembled from the deep activation cache, so only
-    the trailing segments' MAD + inverse work is paid per patch.
+    the trailing segments' MAD + inverse work is paid per patch.  The
+    Pallas path runs the same fused segment kernel as
+    ``os_apply_from_spectra`` with the lead crop folded in.
     """
+    if resolve_use_pallas(use_pallas):
+        return seg_ops.os_segment_fused_tail(
+            F, W, b, spec, out_cols, fprime_chunk=fprime_chunk, use_pallas=True
+        )
     n_seg = spec.n_segments
     q = tail_segments(spec, out_cols)
     j0 = n_seg - q
@@ -261,8 +306,7 @@ def os_apply_tail_from_spectra(
     parts = []
     for jj in range(q):
         j = j0 + jj
-        O = cmul_ops.cmul_mad(F[:, jj], W, use_pallas=use_pallas)
-        seg = pruned_irfftn(O, spec.fft_shape, (0, 0, 0), crop)
+        seg = _mad_inverse_segment(F[:, jj], W, spec, crop, use_pallas, fprime_chunk)
         parts.append(seg if j < n_seg - 1 else seg[:, :, : spec.tail_len])
     x = jnp.concatenate(parts, axis=2)
     lead = (spec.out[0] - out_cols) - j0 * s
@@ -278,15 +322,24 @@ def overlap_save_conv(
     spec: OverlapSaveSpec,
     *,
     use_pallas: Optional[bool] = None,
+    fprime_chunk: Optional[int] = None,
 ) -> jnp.ndarray:
     """Self-contained segmented 'valid' cross-correlation (no spectra reuse).
 
     The registry ``apply`` for layers the executor cannot amortize (deeper
     layers, one-shot ``conv_apply`` callers, the plain-pool subsampling
-    sweep).  x (S, f, *spec.n) -> (S, f', *spec.out).
+    sweep).  x (S, f, *spec.n) -> (S, f', *spec.out).  On the Pallas path
+    the miss-segment FFT itself moves into the fused kernel
+    (``os_segment_conv``: forward matmul DFT + MAD + bias + inverse in one
+    ``pallas_call`` over the segment grid).
     """
+    if resolve_use_pallas(use_pallas):
+        return seg_ops.os_segment_conv(
+            x, W, b, spec, fprime_chunk=fprime_chunk, use_pallas=True
+        )
     return os_apply_from_spectra(
-        os_input_spectra(x, spec), W, b, spec, use_pallas=use_pallas
+        os_input_spectra(x, spec), W, b, spec,
+        use_pallas=use_pallas, fprime_chunk=fprime_chunk,
     )
 
 

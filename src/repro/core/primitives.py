@@ -248,12 +248,17 @@ def _apply_fft_cached(pl, x, state, *, use_pallas: Optional[bool] = None):
     )
 
 
-def _setup_overlap_save(w, b, n, *, index: int = -1, seg_core=None) -> PreparedLayer:
+def _setup_overlap_save(
+    w, b, n, *, index: int = -1, seg_core=None, fprime_chunk: Optional[int] = None
+) -> PreparedLayer:
     """Segment grid + cached kernel spectra at the SEGMENT FFT shape.
 
     ``seg_core`` aligns the layer's segment grid to an external stride (the
     volume executor passes the plan's patch core so x-adjacent patches
     share segment spectra); default is a small local grid.
+    ``fprime_chunk`` (tuned) bounds the live output spectra per segment —
+    on the Pallas path it becomes the fused segment kernel's
+    output-channel block.
     """
     k = _ksize(w)
     spec = plan_overlap_save(tuple(int(s) for s in n), k, seg_core)
@@ -261,13 +266,14 @@ def _setup_overlap_save(w, b, n, *, index: int = -1, seg_core=None) -> PreparedL
     return PreparedLayer(
         index, "conv", "overlap_save",
         fft_shape=spec.fft_shape, kernel_size=k, os_spec=spec,
-        state={"W": W, "b": b},
+        fprime_chunk=fprime_chunk, state={"W": W, "b": b},
     )
 
 
 def _apply_overlap_save(pl, x, state, *, use_pallas: Optional[bool] = None):
     return overlap_save_conv(
-        x, state["W"], state["b"], pl.os_spec, use_pallas=use_pallas
+        x, state["W"], state["b"], pl.os_spec,
+        use_pallas=use_pallas, fprime_chunk=pl.fprime_chunk,
     )
 
 
@@ -355,6 +361,22 @@ def plan_input_size(net: ConvNetConfig, prims: Sequence[str], m: int) -> int:
     return n
 
 
+def layer_fprime_chunk(fprime_chunk, i: int) -> Optional[int]:
+    """Resolve a tuned ``fprime_chunk`` for ABSOLUTE layer index ``i``.
+
+    The knob is either one int applied to every eligible conv layer, or a
+    per-layer schedule (tuple/list indexed by absolute layer position,
+    ``None`` entries — e.g. at pools — meaning unchunked).  Schedules
+    shorter than the net apply ``None`` past their end.
+    """
+    if fprime_chunk is None:
+        return None
+    if isinstance(fprime_chunk, (tuple, list)):
+        v = fprime_chunk[i] if i < len(fprime_chunk) else None
+        return None if v is None else int(v)
+    return int(fprime_chunk)
+
+
 def prepare_layers(
     params,
     net: ConvNetConfig,
@@ -364,7 +386,7 @@ def prepare_layers(
     hi: Optional[int] = None,
     *,
     overlap_seg: Optional[int] = None,
-    fprime_chunk: Optional[int] = None,
+    fprime_chunk=None,
 ) -> Tuple[PreparedLayer, ...]:
     """Run each layer's one-time setup for layers [lo, hi).
 
@@ -379,7 +401,9 @@ def prepare_layers(
     only the net's input has a cross-patch identity to exploit.
 
     ``fprime_chunk`` (tuned) bounds the live output spectra of
-    ``fft_cached`` layers; other primitives ignore it.
+    ``fft_cached`` and ``overlap_save`` layers; other primitives ignore
+    it.  An int applies globally; a per-layer schedule (see
+    ``layer_fprime_chunk``) tunes each conv independently.
     """
     if hi is None:
         hi = len(net.layers)
@@ -390,12 +414,15 @@ def prepare_layers(
         if layer.kind == "conv":
             prim = conv_primitive(prims[i])
             w, b = params[i]
+            fc_i = layer_fprime_chunk(fprime_chunk, i)
             if i == 0 and prim.name == "overlap_save" and overlap_seg:
-                prepared.append(prim.setup(w, b, n, index=i, seg_core=overlap_seg))
-            elif prim.name == "fft_cached" and fprime_chunk is not None:
                 prepared.append(
-                    prim.setup(w, b, n, index=i, fprime_chunk=fprime_chunk)
+                    prim.setup(
+                        w, b, n, index=i, seg_core=overlap_seg, fprime_chunk=fc_i
+                    )
                 )
+            elif prim.name in ("fft_cached", "overlap_save") and fc_i is not None:
+                prepared.append(prim.setup(w, b, n, index=i, fprime_chunk=fc_i))
             else:
                 prepared.append(prim.setup(w, b, n, index=i))
             n = tuple(x - layer.size + 1 for x in n)
@@ -523,7 +550,7 @@ def compile_plan(
     m: Optional[int] = None,
     use_pallas: Optional[bool] = None,
     fuse_pairs: Optional[bool] = None,
-    fprime_chunk: Optional[int] = None,
+    fprime_chunk=None,
     plan: Optional[object] = None,
     overlap_seg: Optional[int] = None,
 ) -> CompiledPlan:
@@ -538,7 +565,8 @@ def compile_plan(
     ``fuse_pairs=None`` follows the resolved ``use_pallas`` — the fused
     conv+pool epilogue is a Pallas-path optimization, so it switches on
     with the kernels.  ``fprime_chunk`` is the tuned MAD chunk for
-    ``fft_cached`` layers (``None`` = unchunked).
+    ``fft_cached``/``overlap_save`` layers — one int, or a per-layer
+    schedule (``None`` = unchunked).
     """
     prims = tuple(prims)
     if len(prims) != len(net.layers):
@@ -566,7 +594,7 @@ def compile_from_plan(
     *,
     use_pallas: Optional[bool] = None,
     fuse_pairs: Optional[bool] = None,
-    fprime_chunk: Optional[int] = None,
+    fprime_chunk=None,
 ):
     """CompiledPlan for a ``planner.Plan`` (geometry read off the plan)."""
     return compile_plan(

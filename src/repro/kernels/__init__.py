@@ -13,4 +13,4 @@ the oracles.
 """
 
 from .dispatch import backend_supports_pallas, resolve_use_pallas  # noqa: F401
-from . import cmul_mad, decode_attn, direct_conv3d, mpf_pool  # noqa: F401, E402
+from . import cmul_mad, decode_attn, direct_conv3d, mpf_pool, os_segment  # noqa: F401, E402

@@ -1,0 +1,3 @@
+"""Fused overlap-save segment pipeline (segment FFT→MAD→bias→inverse→crop)."""
+
+from . import kernel, ops, ref  # noqa: F401

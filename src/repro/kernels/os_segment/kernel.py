@@ -1,0 +1,241 @@
+"""Pallas TPU kernel for the fused overlap-save segment pipeline.
+
+One ``pallas_call`` over the segment grid runs, per aligned segment:
+
+    [conv mode] segment FFT (matmul DFT, once per input-channel chunk)
+    -> cached-kernel complex MAD, accumulated across input-channel chunks
+    -> channel bias folded into the spectrum DC bin
+    -> inverse transform (matmul DFT per axis, crop folded into the
+       inverse matrices)
+    -> one valid ``seg_core`` output column block per segment
+
+replacing the unfused path's per-segment chain of 5+ XLA dispatches
+(FFT, einsum, three inverse passes, bias) with a single kernel whose
+output spectra never leave VMEM.
+
+Transforms are matmul DFTs: per-segment extents are deliberately small
+(``seg_core + k - 1``), so an O(n²) dense transform per axis is a few
+small MXU GEMMs — and, unlike an in-kernel FFT, lets the *inverse* fold
+its valid-crop into the matrix (only ``seg_core`` output rows are ever
+computed; the paper's output-side pruning taken to its limit).  The
+c-axis inverse bakes the hermitian weighting (w_c = 1 at DC/Nyquist,
+2 elsewhere) into a real matrix pair, so only ``nc//2+1`` bins are
+stored, exactly like the pruned spectra everywhere else in the repo.
+
+Grid: (N, Q, f'-blocks, f-chunks) — the f-chunk axis LAST so the
+per-(segment, f'-block) spectral accumulator lives in VMEM scratch
+across consecutive steps (same revisit discipline as
+``cmul_mad._bias_kernel``).  In conv mode the forward DFT of chunk kf
+runs once at f'-block 0 and is cached in a second scratch buffer for
+the remaining f'-blocks.
+
+Layout: complex tensors are separate float32 real/imag planes; complex
+multiplies use 3-real-mult Karatsuba.  ops.py pads bins to the lane
+width and channels to the block sizes (zero padding is inert in the MAD
+and multiplies zero matrix rows/columns in the transforms).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+FP_BLOCK = 8  # output channels per block (fprime_chunk overrides)
+F_CHUNK = 8  # input channels accumulated per grid step
+
+
+def _ein(expr, a, b):
+    return jnp.einsum(expr, a, b, preferred_element_type=jnp.float32)
+
+
+def _mad_accumulate(accr, acci, wr, wi, xr, xi, kf):
+    """acc += W·X (complex, Karatsuba) for one input-channel chunk."""
+    t1 = _ein("jfabc,fabc->jabc", wr, xr)
+    t2 = _ein("jfabc,fabc->jabc", wi, xi)
+    t3 = _ein("jfabc,fabc->jabc", wr + wi, xr + xi)
+
+    @pl.when(kf == 0)
+    def _init():
+        accr[...] = t1 - t2
+        acci[...] = t3 - t1 - t2
+
+    @pl.when(kf > 0)
+    def _accum():
+        accr[...] += t1 - t2
+        acci[...] += t3 - t1 - t2
+
+
+def _emit(accr, acci, nb_ref, ear, eai, ebr, ebi, mr, mi, out_ref):
+    """DC-bin bias + per-axis inverse matmul DFT + write the output block.
+
+    The bias lands on spectral bin (0,0,0): the inverse matrices carry
+    the 1/(na·nb·nc) normalization, so adding ``b·na·nb·nc`` there adds
+    the constant ``b`` to every spatial output (the same identity as
+    ``cmul_mad._bias_kernel``).  The a/b inverse matrices have only the
+    cropped output rows; the c inverse is the real hermitian-weighted
+    pair, so the spatial result appears directly in float32.
+    """
+    zr = accr[...]
+    zi = acci[...]
+    fpb = zr.shape[0]
+    a_id = jax.lax.broadcasted_iota(jnp.int32, zr.shape, 1)
+    b_id = jax.lax.broadcasted_iota(jnp.int32, zr.shape, 2)
+    c_id = jax.lax.broadcasted_iota(jnp.int32, zr.shape, 3)
+    dc = (a_id == 0) & (b_id == 0) & (c_id == 0)
+    zr = zr + jnp.where(dc, nb_ref[...].reshape(fpb, 1, 1, 1), 0.0)
+    # inverse axis a (x), output rows = the segment's seg_core columns
+    y1r = _ein("jabc,ax->jxbc", zr, ear[...]) - _ein("jabc,ax->jxbc", zi, eai[...])
+    y1i = _ein("jabc,ax->jxbc", zr, eai[...]) + _ein("jabc,ax->jxbc", zi, ear[...])
+    # inverse axis b (y)
+    y2r = _ein("jxbc,by->jxyc", y1r, ebr[...]) - _ein("jxbc,by->jxyc", y1i, ebi[...])
+    y2i = _ein("jxbc,by->jxyc", y1r, ebi[...]) + _ein("jxbc,by->jxyc", y1i, ebr[...])
+    # inverse axis c (z), real output via the hermitian-weighted pair
+    out_ref[0, 0] = _ein("jxyc,cz->jxyz", y2r, mr[...]) + _ein(
+        "jxyc,cz->jxyz", y2i, mi[...]
+    )
+
+
+def _fused_kernel(
+    fr_ref, fi_ref, wr_ref, wi_ref, nb_ref,
+    ear, eai, ebr, ebi, mr, mi,
+    out_ref, accr, acci,
+):
+    """From cached segment spectra: MAD -> bias -> inverse -> crop."""
+    kf = pl.program_id(3)
+    _mad_accumulate(
+        accr, acci, wr_ref[...], wi_ref[...], fr_ref[0, 0], fi_ref[0, 0], kf
+    )
+
+    @pl.when(kf == pl.num_programs(3) - 1)
+    def _():
+        _emit(accr, acci, nb_ref, ear, eai, ebr, ebi, mr, mi, out_ref)
+
+
+def _conv_kernel(
+    xs_ref, fzr, fzi, fyr, fyi, fxr, fxi, wr_ref, wi_ref, nb_ref,
+    ear, eai, ebr, ebi, mr, mi,
+    out_ref, sr, si, accr, acci,
+):
+    """From raw segments: forward matmul DFT (cached across f'-blocks)
+    -> MAD -> bias -> inverse -> crop."""
+    jp = pl.program_id(2)
+    kf = pl.program_id(3)
+    fc = xs_ref.shape[2]
+
+    @pl.when(jp == 0)
+    def _forward():
+        x = xs_ref[0, 0]  # (F_CHUNK, E, ny, nz)
+        # axis c: real -> complex (rfft bins only)
+        xcr = _ein("feyz,zc->feyc", x, fzr[...])
+        xci = _ein("feyz,zc->feyc", x, fzi[...])
+        # axis b: full complex DFT
+        x2r = _ein("feyc,yb->febc", xcr, fyr[...]) - _ein("feyc,yb->febc", xci, fyi[...])
+        x2i = _ein("feyc,yb->febc", xcr, fyi[...]) + _ein("feyc,yb->febc", xci, fyr[...])
+        # axis a: full complex DFT over the segment extent
+        x3r = _ein("febc,ea->fabc", x2r, fxr[...]) - _ein("febc,ea->fabc", x2i, fxi[...])
+        x3i = _ein("febc,ea->fabc", x2r, fxi[...]) + _ein("febc,ea->fabc", x2i, fxr[...])
+        sr[pl.ds(kf * fc, fc)] = x3r
+        si[pl.ds(kf * fc, fc)] = x3i
+
+    _mad_accumulate(
+        accr, acci, wr_ref[...], wi_ref[...],
+        sr[pl.ds(kf * fc, fc)], si[pl.ds(kf * fc, fc)], kf,
+    )
+
+    @pl.when(kf == pl.num_programs(3) - 1)
+    def _():
+        _emit(accr, acci, nb_ref, ear, eai, ebr, ebi, mr, mi, out_ref)
+
+
+def _full_spec(shape):
+    n = len(shape)
+    return pl.BlockSpec(shape, lambda nn, q, jp, kf, _n=n: (0,) * _n)
+
+
+@functools.partial(jax.jit, static_argnames=("fp_block", "interpret"))
+def os_segment_planes(
+    fr, fi, wr, wi, nb, ear, eai, ebr, ebi, mr, mi,
+    *, fp_block: int = FP_BLOCK, interpret: bool = True,
+):
+    """fr/fi (N, Q, f, A, B, C''), wr/wi (f', f, A, B, C''), nb (f', 1),
+    inverse matrices ea (A, s), eb (B, oy), m (C'', oz) — all float32,
+    pre-padded by ops.py — -> out (N, Q, f', s, oy, oz)."""
+    N, Q, f, A, B, Cb = fr.shape
+    fp = wr.shape[0]
+    s = ear.shape[1]
+    oy = ebr.shape[1]
+    oz = mr.shape[1]
+    grid = (N, Q, fp // fp_block, f // F_CHUNK)
+    f_spec = pl.BlockSpec(
+        (1, 1, F_CHUNK, A, B, Cb), lambda n, q, jp, kf: (n, q, kf, 0, 0, 0)
+    )
+    w_spec = pl.BlockSpec(
+        (fp_block, F_CHUNK, A, B, Cb), lambda n, q, jp, kf: (jp, kf, 0, 0, 0)
+    )
+    nb_spec = pl.BlockSpec((fp_block, 1), lambda n, q, jp, kf: (jp, 0))
+    # out block revisited across kf steps: the accumulator is scratch
+    o_spec = pl.BlockSpec(
+        (1, 1, fp_block, s, oy, oz), lambda n, q, jp, kf: (n, q, jp, 0, 0, 0)
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[f_spec, f_spec, w_spec, w_spec, nb_spec]
+        + [_full_spec(m.shape) for m in (ear, eai, ebr, ebi, mr, mi)],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((N, Q, fp, s, oy, oz), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((fp_block, A, B, Cb), jnp.float32),
+            pltpu.VMEM((fp_block, A, B, Cb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(fr, fi, wr, wi, nb, ear, eai, ebr, ebi, mr, mi)
+
+
+@functools.partial(jax.jit, static_argnames=("fp_block", "interpret"))
+def os_segment_conv_planes(
+    xs, fzr, fzi, fyr, fyi, fxr, fxi, wr, wi, nb,
+    ear, eai, ebr, ebi, mr, mi,
+    *, fp_block: int = FP_BLOCK, interpret: bool = True,
+):
+    """xs (N, Q, f, E, ny, nz) real segments; forward DFT matrices
+    fz (nz, C''), fy (ny, B), fx (E, A); the rest as in
+    ``os_segment_planes`` -> out (N, Q, f', s, oy, oz)."""
+    N, Q, f, E, ny, nz = xs.shape
+    fp = wr.shape[0]
+    A, B, Cb = wr.shape[2:]
+    s = ear.shape[1]
+    oy = ebr.shape[1]
+    oz = mr.shape[1]
+    grid = (N, Q, fp // fp_block, f // F_CHUNK)
+    x_spec = pl.BlockSpec(
+        (1, 1, F_CHUNK, E, ny, nz), lambda n, q, jp, kf: (n, q, kf, 0, 0, 0)
+    )
+    w_spec = pl.BlockSpec(
+        (fp_block, F_CHUNK, A, B, Cb), lambda n, q, jp, kf: (jp, kf, 0, 0, 0)
+    )
+    nb_spec = pl.BlockSpec((fp_block, 1), lambda n, q, jp, kf: (jp, 0))
+    o_spec = pl.BlockSpec(
+        (1, 1, fp_block, s, oy, oz), lambda n, q, jp, kf: (n, q, jp, 0, 0, 0)
+    )
+    return pl.pallas_call(
+        _conv_kernel,
+        grid=grid,
+        in_specs=[x_spec]
+        + [_full_spec(m.shape) for m in (fzr, fzi, fyr, fyi, fxr, fxi)]
+        + [w_spec, w_spec, nb_spec]
+        + [_full_spec(m.shape) for m in (ear, eai, ebr, ebi, mr, mi)],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((N, Q, fp, s, oy, oz), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((f, A, B, Cb), jnp.float32),
+            pltpu.VMEM((f, A, B, Cb), jnp.float32),
+            pltpu.VMEM((fp_block, A, B, Cb), jnp.float32),
+            pltpu.VMEM((fp_block, A, B, Cb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xs, fzr, fzi, fyr, fyi, fxr, fxi, wr, wi, nb, ear, eai, ebr, ebi, mr, mi)

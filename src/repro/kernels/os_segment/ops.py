@@ -1,0 +1,292 @@
+"""Jitted wrappers for the fused overlap-save segment kernel.
+
+Pads/splits complex operands into float32 planes, builds the per-spec
+DFT matrices (host-side, memoized — they are trace-time constants of
+the frozen ``OverlapSaveSpec``), dispatches kernel vs ref, and
+reassembles the per-segment output blocks into the valid output
+columns (the ``tail_len`` / ``lead`` crops of the unfused path).
+
+Three entry points mirror ``core/overlap_save.py``:
+
+* ``os_segment_fused``      — full grid from cached spectra
+                              (``os_apply_from_spectra``'s fused form);
+* ``os_segment_fused_tail`` — trailing segments only
+                              (``os_apply_tail_from_spectra``'s form);
+* ``os_segment_conv``       — from raw input, segment FFT in-kernel
+                              (``overlap_save_conv``'s form).
+
+``fprime_chunk`` maps onto the kernel's output-channel block size, so a
+per-layer schedule tunes how much spectral accumulator each grid step
+holds in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..dispatch import resolve_use_pallas
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _pad_up(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+@functools.lru_cache(maxsize=None)
+def _inverse_mats(
+    fft_shape: Tuple[int, int, int], crop: Tuple[int, int, int]
+) -> Tuple[np.ndarray, ...]:
+    """Per-axis inverse matmul-DFT matrices with the crop folded in.
+
+    ea (A, s) complex: e^{+2πi a x/A}/A — only the segment's ``seg_core``
+    output rows.  eb (B', oy') complex, zero-filled in the padded rows/
+    columns.  m (C'', oz') REAL pair: the hermitian-weighted inverse of
+    the rfft bins — w_c·cos(2πcz/C)/C and −w_c·sin(2πcz/C)/C with w_c=1
+    at DC and (even C) Nyquist, 2 elsewhere; sin vanishes at those bins,
+    so the imaginary residue of the accumulated spectra is ignored there
+    exactly like a c2r transform.
+    """
+    A, B, C = fft_shape
+    s, oy, oz = crop
+    Cb = C // 2 + 1
+    Bp = _pad_up(B, 8)
+    Cbp = _pad_up(Cb, 128)
+    oyp = _pad_up(oy, 8)
+    ozp = _pad_up(oz, 128)
+
+    a = np.arange(A)[:, None]
+    x = np.arange(s)[None, :]
+    ea = np.exp(2j * np.pi * a * x / A) / A
+
+    eb = np.zeros((Bp, oyp), np.complex128)
+    bb = np.arange(B)[:, None]
+    y = np.arange(oy)[None, :]
+    eb[:B, :oy] = np.exp(2j * np.pi * bb * y / B) / B
+
+    w = np.full(Cb, 2.0)
+    w[0] = 1.0
+    if C % 2 == 0:
+        w[-1] = 1.0
+    c = np.arange(Cb)[:, None]
+    z = np.arange(oz)[None, :]
+    ang = 2.0 * np.pi * c * z / C
+    mr = np.zeros((Cbp, ozp), np.float32)
+    mi = np.zeros((Cbp, ozp), np.float32)
+    mr[:Cb, :oz] = w[:, None] * np.cos(ang) / C
+    mi[:Cb, :oz] = -w[:, None] * np.sin(ang) / C
+
+    return (
+        ea.real.astype(np.float32), ea.imag.astype(np.float32),
+        eb.real.astype(np.float32), eb.imag.astype(np.float32),
+        mr, mi,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _forward_mats(
+    fft_shape: Tuple[int, int, int], in_shape: Tuple[int, int, int]
+) -> Tuple[np.ndarray, ...]:
+    """Per-axis forward matmul-DFT matrices (zero-filled padding).
+
+    fz (nz', C''): e^{-2πi t c/C} over the rfft bins; fy (ny', B'):
+    full DFT of length B from ny live rows; fx (E, A): full DFT over
+    the segment extent.  Zero rows multiply the (zero) spatial padding
+    and zero columns keep the padded spectral bins inert.
+    """
+    A, B, C = fft_shape
+    E, ny, nz = in_shape
+    Cb = C // 2 + 1
+    Bp = _pad_up(B, 8)
+    Cbp = _pad_up(Cb, 128)
+    nyp = _pad_up(ny, 8)
+    nzp = _pad_up(nz, 128)
+
+    fz = np.zeros((nzp, Cbp), np.complex128)
+    t = np.arange(nz)[:, None]
+    c = np.arange(Cb)[None, :]
+    fz[:nz, :Cb] = np.exp(-2j * np.pi * t * c / C)
+
+    fy = np.zeros((nyp, Bp), np.complex128)
+    y = np.arange(ny)[:, None]
+    b = np.arange(B)[None, :]
+    fy[:ny, :B] = np.exp(-2j * np.pi * y * b / B)
+
+    e = np.arange(E)[:, None]
+    a = np.arange(A)[None, :]
+    fx = np.exp(-2j * np.pi * e * a / A)
+
+    return (
+        fz.real.astype(np.float32), fz.imag.astype(np.float32),
+        fy.real.astype(np.float32), fy.imag.astype(np.float32),
+        fx.real.astype(np.float32), fx.imag.astype(np.float32),
+    )
+
+
+def _split_pad_W(W, fprime_chunk):
+    """Real/imag planes of W (f', f, A, B, C''), padded: bins to the
+    lane/sublane tile, f to F_CHUNK, f' to the output-channel block
+    (``fprime_chunk`` or the default)."""
+    fp, f = W.shape[:2]
+    fpb = int(fprime_chunk) if fprime_chunk else _k.FP_BLOCK
+    B, Cb = W.shape[3], W.shape[4]
+    padB = (-B) % 8
+    padC = (-Cb) % 128
+    padf = (-f) % _k.F_CHUNK
+    padF = (-fp) % fpb
+    wr, wi = jnp.real(W).astype(jnp.float32), jnp.imag(W).astype(jnp.float32)
+    pad = ((0, padF), (0, padf), (0, 0), (0, padB), (0, padC))
+    if padF or padf or padB or padC:
+        wr, wi = jnp.pad(wr, pad), jnp.pad(wi, pad)
+    return wr, wi, fpb
+
+
+def _split_pad_F(F):
+    """Real/imag planes of F (N, Q, f, A, B, C''), same padding as W."""
+    B, Cb = F.shape[4], F.shape[5]
+    padB = (-B) % 8
+    padC = (-Cb) % 128
+    padf = (-F.shape[2]) % _k.F_CHUNK
+    fr, fi = jnp.real(F).astype(jnp.float32), jnp.imag(F).astype(jnp.float32)
+    pad = ((0, 0), (0, 0), (0, padf), (0, 0), (0, padB), (0, padC))
+    if padf or padB or padC:
+        fr, fi = jnp.pad(fr, pad), jnp.pad(fi, pad)
+    return fr, fi
+
+
+def _nb_bias(b, fp, fpb, fft_shape):
+    """DC-bin bias column ``b·na·nb·nc`` padded to the f' block grid."""
+    n_total = 1.0
+    for d in fft_shape:
+        n_total *= float(d)
+    bias = jnp.zeros((fp,), jnp.float32) if b is None else b.astype(jnp.float32)
+    padF = (-fp) % fpb
+    if padF:
+        bias = jnp.pad(bias, (0, padF))
+    return (bias * n_total).reshape(-1, 1)
+
+
+def _reassemble(out, spec, j0, fp, out_cols):
+    """(N, Q, f'', s, oy'', oz'') kernel blocks -> trailing ``out_cols``
+    valid output columns (the unfused path's tail/lead crops)."""
+    s = spec.seg_core
+    oy, oz = spec.out[1], spec.out[2]
+    N, Q = out.shape[:2]
+    o = out[:, :, :fp, :, :oy, :oz]
+    o = jnp.transpose(o, (0, 2, 1, 3, 4, 5)).reshape(N, fp, Q * s, oy, oz)
+    L = spec.out[0] if out_cols is None else int(out_cols)
+    lead = (spec.out[0] - L) - j0 * s
+    return o[:, :, lead : lead + L]
+
+
+@partial(jax.jit, static_argnames=("spec", "out_cols", "fprime_chunk", "use_pallas", "interpret"))
+def os_segment_fused(
+    F: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec,
+    *,
+    out_cols: Optional[int] = None,
+    fprime_chunk: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused segment MAD + DC-bias + inverse + crop from cached spectra.
+
+    F (N, q, f, ña, ñb, ñc'') — spectra of the q TRAILING segments of
+    ``spec`` (q = n_segments for the full grid); W (f', f, ...) cached
+    conjugate kernel spectra; returns the trailing ``out_cols`` output
+    columns (default all of ``spec.out[0]``) as (N, f', L, oy, oz).
+    """
+    if not resolve_use_pallas(use_pallas):
+        return _ref.os_segment_fused(F, W, b, spec, out_cols)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q = F.shape[1]
+    j0 = spec.n_segments - q
+    fp = W.shape[0]
+    wr, wi, fpb = _split_pad_W(W, fprime_chunk)
+    fr, fi = _split_pad_F(F)
+    nb = _nb_bias(b, fp, fpb, spec.fft_shape)
+    crop = (spec.seg_core,) + tuple(spec.out[1:])
+    mats = [jnp.asarray(m) for m in _inverse_mats(tuple(spec.fft_shape), crop)]
+    out = _k.os_segment_planes(
+        fr, fi, wr, wi, nb, *mats, fp_block=fpb, interpret=interpret
+    )
+    return _reassemble(out, spec, j0, fp, out_cols)
+
+
+def os_segment_fused_tail(
+    F: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec,
+    out_cols: int,
+    *,
+    fprime_chunk: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Trailing-segments form (the strip path's tail MAD)."""
+    return os_segment_fused(
+        F, W, b, spec,
+        out_cols=int(out_cols), fprime_chunk=fprime_chunk,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("spec", "fprime_chunk", "use_pallas", "interpret"))
+def os_segment_conv(
+    x: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec,
+    *,
+    fprime_chunk: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Self-contained fused segmented conv: miss-segment FFT in-kernel.
+
+    x (N, f, *spec.n) real -> (N, f', *spec.out).  The registry
+    ``overlap_save`` apply dispatches here when the Pallas path is on.
+    """
+    if not resolve_use_pallas(use_pallas):
+        return _ref.os_segment_conv(x, W, b, spec)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fp = W.shape[0]
+    f = x.shape[1]
+    E = spec.seg_extent
+    ny, nz = x.shape[3], x.shape[4]
+    # aligned segment windows, tail zero-padded past the input extent
+    if spec.input_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, spec.input_pad), (0, 0), (0, 0)))
+    xs = jnp.stack([x[:, :, st : st + E] for st in spec.starts], axis=1)
+    xs = xs.astype(jnp.float32)
+    padf = (-f) % _k.F_CHUNK
+    pady = (-ny) % 8
+    padz = (-nz) % 128
+    if padf or pady or padz:
+        xs = jnp.pad(
+            xs, ((0, 0), (0, 0), (0, padf), (0, 0), (0, pady), (0, padz))
+        )
+    wr, wi, fpb = _split_pad_W(W, fprime_chunk)
+    nb = _nb_bias(b, fp, fpb, spec.fft_shape)
+    fwd = [
+        jnp.asarray(m)
+        for m in _forward_mats(tuple(spec.fft_shape), (E, ny, nz))
+    ]
+    crop = (spec.seg_core,) + tuple(spec.out[1:])
+    inv = [jnp.asarray(m) for m in _inverse_mats(tuple(spec.fft_shape), crop)]
+    out = _k.os_segment_conv_planes(
+        xs, *fwd, wr, wi, nb, *inv, fp_block=fpb, interpret=interpret
+    )
+    return _reassemble(out, spec, 0, fp, None)

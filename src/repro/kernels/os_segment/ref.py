@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for the fused overlap-save segment pipeline.
+
+The fused kernel runs, per aligned segment of ``core/overlap_save.py``'s
+grid: (optional) segment FFT -> cached-kernel complex MAD over input
+channels -> channel bias folded into the spectrum DC bin -> inverse
+transform -> valid crop.  This module is the same pipeline as plain XLA
+ops — jnp.fft transforms, one einsum per segment — deliberately free of
+repro.core imports so the kernels package stays a leaf.
+
+The oracle is mathematically identical to the unfused
+``os_apply_from_spectra`` + ``add_channel_bias`` chain (the DC-bin bias
+of a constant IS the spatial bias after the normalized inverse), so the
+interpret-mode kernel is swept against it AND the unfused path in
+``tests/test_os_fused.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+
+def _irfftn_crop(
+    Z: jnp.ndarray,
+    fft_shape: Sequence[int],
+    crop: Sequence[int],
+) -> jnp.ndarray:
+    """Inverse 3D transform of pruned spectra, cropped to ``crop`` per axis.
+
+    Same pass order as ``core.pruned_fft.pruned_irfftn`` with zero crop
+    starts (all the segment pipeline needs): ifft a, crop; ifft b, crop;
+    irfft c, crop.
+    """
+    nc = int(fft_shape[2])
+    la, lb, lc = (int(s) for s in crop)
+    Y = jnp.fft.ifft(Z, axis=-3)[..., :la, :, :]
+    Y = jnp.fft.ifft(Y, axis=-2)[..., :, :lb, :]
+    return jnp.fft.irfft(Y, n=nc, axis=-1)[..., :lc]
+
+
+def _segment_spectra(x: jnp.ndarray, spec) -> jnp.ndarray:
+    """Aligned segment spectra of raw input x (S, f, *spec.n).
+
+    Returns (S, n_seg, f, na, nb, nc'') — the 'miss-segment FFT' stage of
+    the fused pipeline, zero-padding the tail window like
+    ``os_input_spectra``.
+    """
+    if spec.input_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, spec.input_pad), (0, 0), (0, 0)))
+    segs = jnp.stack(
+        [x[:, :, st : st + spec.seg_extent] for st in spec.starts], axis=1
+    )
+    na, nb, nc = spec.fft_shape
+    Z = jnp.fft.rfft(segs.astype(jnp.float32), n=nc, axis=-1)
+    Z = jnp.fft.fft(Z, n=nb, axis=-2)
+    return jnp.fft.fft(Z, n=na, axis=-3)
+
+
+def os_segment_fused(
+    F: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec,
+    out_cols: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fused MAD + DC-bin bias + inverse + crop over the segment grid.
+
+    F (S, q, f, na, nb, nc'') — spectra of the q TRAILING segments of
+    ``spec``'s grid (q = n_segments for the full grid); W (f', f, ...)
+    cached conjugate kernel spectra.  Returns the trailing ``out_cols``
+    output columns (default: the full ``spec.out``) — (S, f', L, oy, oz).
+    """
+    q = F.shape[1]
+    n_seg = spec.n_segments
+    j0 = n_seg - q
+    s = spec.seg_core
+    crop = (s,) + tuple(spec.out[1:])
+    n_total = 1
+    for d in spec.fft_shape:
+        n_total *= int(d)
+    parts = []
+    for jj in range(q):
+        j = j0 + jj
+        O = jnp.einsum("si...,ji...->sj...", F[:, jj], W)
+        if b is not None:
+            O = O.at[..., 0, 0, 0].add(b.astype(jnp.float32) * float(n_total))
+        seg = _irfftn_crop(O, spec.fft_shape, crop)
+        parts.append(seg if j < n_seg - 1 else seg[:, :, : spec.tail_len])
+    x = jnp.concatenate(parts, axis=2)
+    L = spec.out[0] if out_cols is None else int(out_cols)
+    lead = (spec.out[0] - L) - j0 * s
+    return x[:, :, lead : lead + L]
+
+
+def os_segment_conv(
+    x: jnp.ndarray,
+    W: jnp.ndarray,
+    b: Optional[jnp.ndarray],
+    spec,
+) -> jnp.ndarray:
+    """Self-contained oracle: segment FFT + fused MAD/bias/inverse/crop.
+
+    x (S, f, *spec.n) real -> (S, f', *spec.out).  The from-raw-input form
+    the registry's ``overlap_save`` apply dispatches to when the Pallas
+    path is on (miss-segment FFT inside the same pipeline).
+    """
+    return os_segment_fused(_segment_spectra(x, spec), W, b, spec)

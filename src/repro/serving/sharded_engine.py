@@ -137,7 +137,8 @@ class ShardedVolumeEngine:
         batch: Optional[int] = None,
         use_pallas: Optional[bool] = None,
         fuse_pairs: Optional[bool] = None,
-        fprime_chunk: Optional[int] = None,
+        fprime_chunk=None,
+        fuse_os: Optional[bool] = None,
         tuned="auto",
         deep_reuse: bool = True,
         ram_budget: Optional[float] = None,
@@ -149,7 +150,7 @@ class ShardedVolumeEngine:
             _Worker(w, PlanExecutor(
                 params, net, plan, prims=prims, m=m, batch=batch,
                 use_pallas=use_pallas, fuse_pairs=fuse_pairs,
-                fprime_chunk=fprime_chunk, tuned=tuned,
+                fprime_chunk=fprime_chunk, fuse_os=fuse_os, tuned=tuned,
                 deep_reuse=deep_reuse, ram_budget=ram_budget,
                 streaming=streaming,
             ))

@@ -175,7 +175,8 @@ class VolumeEngine:
         batch: Optional[int] = None,
         use_pallas: Optional[bool] = None,
         fuse_pairs: Optional[bool] = None,
-        fprime_chunk: Optional[int] = None,
+        fprime_chunk=None,
+        fuse_os: Optional[bool] = None,
         tuned="auto",
         deep_reuse: bool = True,
         bucket_shapes: bool = True,
@@ -187,8 +188,8 @@ class VolumeEngine:
         self.executor = PlanExecutor(
             params, net, plan, prims=prims, m=m, batch=batch,
             use_pallas=use_pallas, fuse_pairs=fuse_pairs,
-            fprime_chunk=fprime_chunk, tuned=tuned, deep_reuse=deep_reuse,
-            ram_budget=ram_budget, streaming=streaming,
+            fprime_chunk=fprime_chunk, fuse_os=fuse_os, tuned=tuned,
+            deep_reuse=deep_reuse, ram_budget=ram_budget, streaming=streaming,
         )
         self.batch = self.executor.batch
         self.bucket_shapes = bucket_shapes

@@ -8,7 +8,11 @@ tunables the planner's analytic model does not price —
   segment-grid size: ``seg_core = m * P`` pins the overlap-save segment
   grid to the patch core, so sweeping ``m`` IS the segment-grid sweep);
 * ``fprime_chunk`` — output-channel chunking of the cached-spectra MAD;
-* ``fuse_pairs`` — the fused conv+pool strip-path epilogue;
+  a scalar, or a per-conv-layer schedule (``a:b:c`` on the CLI, expanded
+  to an absolute-layer tuple with ``None`` at pools — schema v2);
+* ``fuse_pairs`` — the fused conv+pool epilogue in the plain walks;
+* ``fuse_os`` — the halo-emitting fused epilogue in the volume executor's
+  capture/strip walks (swept only on top of ``fuse_pairs``);
 * XLA flag bundles (``repro.tuning.xla_flags``) via subprocess re-exec,
   since ``XLA_FLAGS`` is read once at backend init —
 
@@ -18,8 +22,19 @@ interleaved repetitions, best-of wall clock), and persists the winning
 ``TunedConfig`` under ``src/repro/tuning/configs/`` keyed by
 (device kind, net) — auto-loaded by ``PlanExecutor``/``VolumeEngine``.
 
+Cost-model pruning (``--shortlist K``): before measuring, every
+candidate's (m, batch) geometry is priced by ``planner.plan_fixed``'s
+analytic model over the sweep volume, and only the predicted Pareto
+frontier over (throughput up, peak device bytes down) — filled to K by
+predicted throughput — is measured.  Knobs the model does not price
+(fprime_chunk / fuse flags) share their geometry's score, so the
+shortlist keeps every knob variant of a surviving geometry until the K
+cut.  ``--quick`` shrinks the sweep volume and drops to one repetition
+(CI smoke).
+
 Run:  PYTHONPATH=src python -m repro.tuning.autotune --net bench-net
-      [--max-m 2] [--batches 1,2] [--reps 2] [--sweep-xla] [--dry-run]
+      [--max-m 2] [--batches 1,2] [--shortlist 8] [--quick]
+      [--reps 2] [--sweep-xla] [--dry-run]
 """
 
 from __future__ import annotations
@@ -32,15 +47,148 @@ import os
 import subprocess
 import sys
 import time
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .store import TunedConfig, normalize_device_kind, save_tuned_config
 from .xla_flags import bundles_for, xla_flags_env
 
+FprimeSpec = Union[int, Tuple[Optional[int], ...], None]
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One point of the tuner's knob grid (geometry + execution knobs)."""
+
+    m: int
+    batch: int
+    fprime_chunk: FprimeSpec
+    fuse_pairs: bool
+    fuse_os: bool
+
+    @property
+    def key(self) -> str:
+        fp = self.fprime_chunk
+        if isinstance(fp, tuple):
+            fp = ":".join("none" if v is None else str(v) for v in fp)
+        return (
+            f"m={self.m} batch={self.batch} fprime_chunk={fp} "
+            f"fuse={self.fuse_pairs} fuse_os={self.fuse_os}"
+        )
+
+
+def build_candidate_grid(
+    max_m: int,
+    batches: Sequence[int],
+    fprime_chunks: Sequence[FprimeSpec],
+    fuse_options: Sequence[bool],
+    fuse_os_options: Sequence[bool] = (False,),
+) -> List[Candidate]:
+    """The full knob product the tuner would measure without pruning.
+
+    ``fuse_os`` is swept only on top of ``fuse_pairs`` — it is the same
+    fused-epilogue family extended into the strip walks, and gating it
+    halves the grid without losing the interesting points.
+    """
+    grid: List[Candidate] = []
+    for m, batch in itertools.product(range(1, max_m + 1), batches):
+        for fp, fuse in itertools.product(fprime_chunks, fuse_options):
+            for fos in fuse_os_options:
+                if fos and not fuse:
+                    continue
+                grid.append(Candidate(m, batch, fp, fuse, fos))
+    return grid
+
+
+def _sweep_shape(net, m: int, *, quick: bool) -> Tuple[int, int, int]:
+    """The measurement volume for fragment size ``m``: >1 patch per axis
+    with interior x-rows (the regime the strip path and sweep caches live
+    in); ``--quick`` drops to the minimal interior-bearing volume."""
+    core = m * net.total_pooling()
+    fov = net.field_of_view()
+    if quick:
+        return (2 * core + fov - 1, core + fov - 1, core + fov - 1)
+    return (3 * core + fov, 2 * core + fov - 1, 2 * core + fov - 1)
+
+
+def expand_fprime_schedule(net, sched: FprimeSpec) -> FprimeSpec:
+    """Per-CONV-layer schedule -> per-ABSOLUTE-layer tuple (schema v2).
+
+    Scalars and ``None`` pass through; a tuple/list is read as one entry
+    per conv layer in network order and expanded with ``None`` at pools
+    (and past the end), the layout ``primitives.layer_fprime_chunk``
+    resolves at prepare time.
+    """
+    if sched is None or isinstance(sched, int):
+        return sched
+    vals = list(sched)
+    out: List[Optional[int]] = []
+    j = 0
+    for layer in net.layers:
+        if layer.kind == "conv":
+            out.append(vals[j] if j < len(vals) else None)
+            j += 1
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def shortlist_candidates(
+    net,
+    prims: Sequence[str],
+    grid: Sequence[Candidate],
+    k: int,
+    *,
+    quick: bool = False,
+) -> Tuple[List[Candidate], Dict[Tuple[int, int], object]]:
+    """Analytic pre-pruning: keep only the predicted-Pareto shortlist.
+
+    Each distinct (m, batch) geometry is priced once with
+    ``planner.plan_fixed`` over the sweep volume (exact cache-simulated
+    amortization).  Geometries on the Pareto frontier of (predicted
+    throughput up, predicted peak device bytes down) rank first, the rest
+    by predicted throughput; candidates inherit their geometry's rank and
+    the first ``k`` survive.  Returns ``(shortlist, plans)`` with the
+    priced Plans keyed by geometry so the measurement loop reuses them.
+    """
+    from ..core import planner
+    from ..core.hw import TPU_V5E
+
+    scores: Dict[Tuple[int, int], Tuple[float, float]] = {}
+    plans: Dict[Tuple[int, int], object] = {}
+    for cand in grid:
+        geo = (cand.m, cand.batch)
+        if geo in plans:
+            continue
+        plan = planner.plan_fixed(
+            net, TPU_V5E, prims, m=cand.m, batch=cand.batch,
+            strategy_name="autotune",
+            volume_shape=_sweep_shape(net, cand.m, quick=quick),
+        )
+        plans[geo] = plan
+        if plan is not None:
+            mem = plan.memory.device_bytes if plan.memory else plan.peak_bytes
+            scores[geo] = (plan.throughput, float(mem))
+    frontier = {
+        geo for geo, (thr, mem) in scores.items()
+        if not any(
+            (t2 >= thr and m2 <= mem and (t2 > thr or m2 < mem))
+            for t2, m2 in scores.values()
+        )
+    }
+    ranked = sorted(
+        (c for c in grid if (c.m, c.batch) in scores),
+        key=lambda c: (
+            (c.m, c.batch) not in frontier,  # frontier geometries first
+            -scores[(c.m, c.batch)][0],
+        ),
+    )
+    return ranked[: max(1, k)], plans
+
 
 def _measure_candidate(
-    params, net, plan, vol, *, fuse_pairs, fprime_chunk, reps: int
+    params, net, plan, vol, *, fuse_pairs, fprime_chunk, fuse_os, reps: int
 ) -> Optional[float]:
     """Best-of-``reps`` measured vox/s for one candidate, None if it fails."""
     from ..volume import PlanExecutor
@@ -48,7 +196,7 @@ def _measure_candidate(
     try:
         ex = PlanExecutor(
             params, net, plan, tuned=None,
-            fuse_pairs=fuse_pairs, fprime_chunk=fprime_chunk,
+            fuse_pairs=fuse_pairs, fprime_chunk=fprime_chunk, fuse_os=fuse_os,
         )
         ex.run(vol)  # warmup: compiles + first sweep
         best = 0.0
@@ -77,22 +225,28 @@ def autotune_net(
     *,
     max_m: int = 2,
     batches: Sequence[int] = (1, 2),
-    fprime_chunks: Sequence[Optional[int]] = (None, 4),
+    fprime_chunks: Sequence[FprimeSpec] = (None, 4),
     fuse_options: Sequence[bool] = (False, True),
+    fuse_os_options: Sequence[bool] = (False, True),
     reps: int = 2,
     seed: int = 0,
     xla_bundle: Optional[str] = None,
-) -> Tuple[TunedConfig, Dict[str, float]]:
-    """Sweep the candidate grid for one net on this process's hardware.
+    shortlist: Optional[int] = None,
+    quick: bool = False,
+) -> Tuple[TunedConfig, Dict[str, float], Dict[str, List[str]]]:
+    """Sweep (or shortlist-then-sweep) the candidate grid for one net.
 
-    Returns the winning ``TunedConfig`` (not yet persisted) and the full
-    ``candidate-key -> vox/s`` measurement map.
+    Returns the winning ``TunedConfig`` (not yet persisted), the
+    ``candidate-key -> vox/s`` measurement map, and a meta dict with the
+    full ``grid`` and measured ``shortlist`` key lists (the CI smoke job
+    asserts shortlist ⊆ grid).
     """
     import jax
     import numpy as np
 
     from ..configs.znni_nets import net_by_name
-    from ..core import convnet, planner
+    from ..core import planner
+    from ..core import convnet
     from ..core.hw import TPU_V5E
     from ..kernels import backend_supports_pallas
 
@@ -101,52 +255,71 @@ def autotune_net(
     use_pallas = backend_supports_pallas()
     prims = _os_prims(net)
     rng = np.random.default_rng(seed)
+    if quick:
+        reps = 1
+
+    grid = build_candidate_grid(
+        max_m, batches,
+        [expand_fprime_schedule(net, fp) for fp in fprime_chunks],
+        fuse_options, fuse_os_options,
+    )
+    plans: Dict[Tuple[int, int], object] = {}
+    if shortlist is not None:
+        cands, plans = shortlist_candidates(
+            net, prims, grid, shortlist, quick=quick
+        )
+        print(f"shortlist: measuring {len(cands)}/{len(grid)} candidates")
+    else:
+        cands = list(grid)
 
     results: Dict[str, float] = {}
     winner: Optional[TunedConfig] = None
     best_voxps = 0.0
-    for m, batch in itertools.product(range(1, max_m + 1), batches):
-        plan = planner.plan_fixed(
-            net, TPU_V5E, prims, m=m, batch=batch, strategy_name="autotune"
-        )
+    for cand in cands:
+        geo = (cand.m, cand.batch)
+        if geo not in plans:
+            plans[geo] = planner.plan_fixed(
+                net, TPU_V5E, prims, m=cand.m, batch=cand.batch,
+                strategy_name="autotune",
+                volume_shape=_sweep_shape(net, cand.m, quick=quick),
+            )
+        plan = plans[geo]
         if plan is None:
             continue
-        # a CI-sized sweep volume: >1 patch per axis with interior x-rows
-        # (the regime the strip path and sweep caches live in)
-        shape = (
-            3 * plan.core + plan.fov - 1 + 1,
-            2 * plan.core + plan.fov - 1,
-            2 * plan.core + plan.fov - 1,
-        )
+        shape = _sweep_shape(net, cand.m, quick=quick)
         vol = rng.normal(size=(net.in_channels,) + shape).astype(np.float32)
-        for fp_chunk, fuse in itertools.product(fprime_chunks, fuse_options):
-            key = f"m={m} batch={batch} fprime_chunk={fp_chunk} fuse={fuse}"
-            voxps = _measure_candidate(
-                params, net, plan, vol,
-                fuse_pairs=fuse, fprime_chunk=fp_chunk, reps=reps,
+        voxps = _measure_candidate(
+            params, net, plan, vol,
+            fuse_pairs=cand.fuse_pairs, fprime_chunk=cand.fprime_chunk,
+            fuse_os=cand.fuse_os, reps=reps,
+        )
+        if voxps is None:
+            continue
+        results[cand.key] = voxps
+        print(f"  {cand.key:<58s} {voxps:>12,.0f} vox/s")
+        if voxps > best_voxps:
+            best_voxps = voxps
+            winner = TunedConfig(
+                device_kind=normalize_device_kind(),
+                net=net.name,
+                m=cand.m, batch=cand.batch,
+                fprime_chunk=cand.fprime_chunk,
+                use_pallas=use_pallas,
+                fuse_pairs=cand.fuse_pairs,
+                fuse_os=cand.fuse_os,
+                seg_core=plan.core,
+                xla_flags=xla_bundle,
+                source="autotune",
+                measured_voxps=best_voxps,
+                tuned_at=time.strftime("%Y-%m-%d"),
             )
-            if voxps is None:
-                continue
-            results[key] = voxps
-            print(f"  {key:<44s} {voxps:>12,.0f} vox/s")
-            if voxps > best_voxps:
-                best_voxps = voxps
-                winner = TunedConfig(
-                    device_kind=normalize_device_kind(),
-                    net=net.name,
-                    m=m, batch=batch,
-                    fprime_chunk=fp_chunk,
-                    use_pallas=use_pallas,
-                    fuse_pairs=fuse,
-                    seg_core=plan.core,
-                    xla_flags=xla_bundle,
-                    source="autotune",
-                    measured_voxps=best_voxps,
-                    tuned_at=time.strftime("%Y-%m-%d"),
-                )
     if winner is None:
         raise RuntimeError(f"no feasible autotune candidate for {net_name}")
-    return winner, results
+    meta = {
+        "grid": [c.key for c in grid],
+        "shortlist": [c.key for c in cands],
+    }
+    return winner, results, meta
 
 
 def _sweep_xla_bundles(args) -> TunedConfig:
@@ -167,15 +340,36 @@ def _sweep_xla_bundles(args) -> TunedConfig:
             "--reps", str(args.reps), "--xla-bundle", bundle,
             "--dry-run", "--candidate-out", str(out),
         ]
+        if args.shortlist is not None:
+            cmd += ["--shortlist", str(args.shortlist)]
+        if args.quick:
+            cmd += ["--quick"]
         print(f"-- bundle {bundle}: {env['XLA_FLAGS'] or '(empty)'}")
         subprocess.run(cmd, env=env, check=True)
         payload = json.loads(out.read_text())
         out.unlink()
-        cfg = TunedConfig(**payload["winner"])
+        w = payload["winner"]
+        if isinstance(w.get("fprime_chunk"), list):
+            w["fprime_chunk"] = tuple(w["fprime_chunk"])
+        cfg = TunedConfig(**w)
         if best is None or (cfg.measured_voxps or 0) > (best.measured_voxps or 0):
             best = cfg
     assert best is not None
     return best
+
+
+def _parse_fprime(s: str) -> List[FprimeSpec]:
+    """CLI grammar: comma-separated specs; each spec is ``none``, an int,
+    or a colon-joined per-conv-layer schedule (``4:none:2``)."""
+    specs: List[FprimeSpec] = []
+    for item in s.split(","):
+        if ":" in item:
+            specs.append(tuple(
+                None if x == "none" else int(x) for x in item.split(":")
+            ))
+        else:
+            specs.append(None if item == "none" else int(item))
+    return specs
 
 
 def main(argv=None) -> None:
@@ -184,9 +378,16 @@ def main(argv=None) -> None:
     ap.add_argument("--max-m", type=int, default=2)
     ap.add_argument("--batches", type=lambda s: [int(x) for x in s.split(",")],
                     default=[1, 2])
-    ap.add_argument("--fprime-chunks", type=lambda s: [
-        None if x == "none" else int(x) for x in s.split(",")
-    ], default=[None, 4])
+    ap.add_argument("--fprime-chunks", type=_parse_fprime, default=[None, 4],
+                    help="comma-separated: none, an int, or a per-conv-layer "
+                         "schedule like 4:none:2")
+    ap.add_argument("--no-fuse-os", action="store_true",
+                    help="drop the fuse_os axis from the grid")
+    ap.add_argument("--shortlist", type=int, default=None,
+                    help="measure only the top-K cost-model-predicted "
+                         "Pareto candidates instead of the full grid")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal sweep volume + one repetition (CI smoke)")
     ap.add_argument("--reps", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--xla-bundle", default=None,
@@ -198,22 +399,26 @@ def main(argv=None) -> None:
     ap.add_argument("--dry-run", action="store_true",
                     help="measure but do not persist the config")
     ap.add_argument("--candidate-out", default=None,
-                    help="also write winner + all measurements to this JSON")
+                    help="also write winner + measurements + grid/shortlist "
+                         "key lists to this JSON")
     args = ap.parse_args(argv)
 
     if args.sweep_xla:
         winner = _sweep_xla_bundles(args)
         results: Dict[str, float] = {}
+        meta: Dict[str, List[str]] = {}
     else:
-        winner, results = autotune_net(
+        winner, results, meta = autotune_net(
             args.net, max_m=args.max_m, batches=args.batches,
-            fprime_chunks=args.fprime_chunks, reps=args.reps,
-            seed=args.seed, xla_bundle=args.xla_bundle,
+            fprime_chunks=args.fprime_chunks,
+            fuse_os_options=(False,) if args.no_fuse_os else (False, True),
+            reps=args.reps, seed=args.seed, xla_bundle=args.xla_bundle,
+            shortlist=args.shortlist, quick=args.quick,
         )
     print(f"winner: {winner}")
     if args.candidate_out:
         Path(args.candidate_out).write_text(json.dumps({
-            "winner": dataclasses.asdict(winner), "results": results,
+            "winner": dataclasses.asdict(winner), "results": results, **meta,
         }, indent=2, sort_keys=True))
     if not args.dry_run:
         path = save_tuned_config(winner)

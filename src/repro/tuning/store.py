@@ -20,8 +20,16 @@ Key schema (also docs/architecture.md "Kernels & autotuning"):
 
 A config never overrides plan *geometry* when the caller supplies a Plan
 (m/batch are part of the planner's costed contract); it fills the
-execution-only knobs — ``use_pallas``, ``fuse_pairs``, ``fprime_chunk`` —
-and supplies m/batch only when the caller left them unset.
+execution-only knobs — ``use_pallas``, ``fuse_pairs``, ``fprime_chunk``,
+``fuse_os`` — and supplies m/batch only when the caller left them unset.
+
+Schema v2 (this file): ``fprime_chunk`` may be a per-ABSOLUTE-layer
+schedule (a list in JSON, loaded as a tuple; ``None`` entries at pools
+and past the end — ``primitives.layer_fprime_chunk`` resolves it per
+layer) and ``fuse_os`` selects the halo-emitting fused epilogue in the
+volume executor's capture/strip walks.  v1 files (scalar
+``fprime_chunk``, no ``fuse_os``) load unchanged; files from FUTURE
+schema versions are ignored rather than misread.
 """
 
 from __future__ import annotations
@@ -31,13 +39,13 @@ import json
 import re
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 
 CONFIG_DIR = Path(__file__).parent / "configs"
 
-_SCHEMA_VERSION = 1
+_SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -54,9 +62,12 @@ class TunedConfig:
     net: str
     m: Optional[int] = None
     batch: Optional[int] = None
-    fprime_chunk: Optional[int] = None
+    # scalar (every chunked layer) or per-absolute-layer schedule (tuple,
+    # None at pools / unchunked layers) — see primitives.layer_fprime_chunk
+    fprime_chunk: Union[int, Tuple[Optional[int], ...], None] = None
     use_pallas: Optional[bool] = None
     fuse_pairs: Optional[bool] = None
+    fuse_os: Optional[bool] = None  # fused halo-emitting strip epilogue
     seg_core: Optional[int] = None
     xla_flags: Optional[str] = None  # bundle name, see tuning.xla_flags
     source: str = "autotune"  # autotune | manual
@@ -71,6 +82,7 @@ class TunedConfig:
             "fprime_chunk": self.fprime_chunk,
             "use_pallas": self.use_pallas,
             "fuse_pairs": self.fuse_pairs,
+            "fuse_os": self.fuse_os,
             "xla_flags": self.xla_flags,
             "source": self.source,
             "tuned_at": self.tuned_at,
@@ -118,5 +130,10 @@ def load_tuned_config(
     payload = json.loads(path.read_text())
     if payload.pop("schema_version", _SCHEMA_VERSION) > _SCHEMA_VERSION:
         return None
+    fp = payload.get("fprime_chunk")
+    if isinstance(fp, list):  # JSON has no tuples: schedule round-trip
+        payload["fprime_chunk"] = tuple(
+            None if v is None else int(v) for v in fp
+        )
     fields = {f.name for f in dataclasses.fields(TunedConfig)}
     return TunedConfig(**{k: v for k, v in payload.items() if k in fields})

@@ -62,6 +62,15 @@ race on intra-chunk dependencies.  ``last_stats`` adds
 jit specializations seen).  ``predict_counts`` returns the planner-side
 ``SweepCounts`` for a volume shape — by construction these equal the
 measured counters exactly (the sweep-aware planning acceptance property).
+``fuse_os`` additionally routes eligible ``fft_cached``+``mpf`` pairs of
+the capture and strip walks through the halo-emitting fused epilogue
+(``fft_conv_pool_fused_halo``): the pool input is never materialized as a
+walk step but its trailing columns still reach the halo cache via the
+fused call's second output — dense output and exported halos are bitwise
+equal to the unfused walks off the Pallas path.  ``last_stats`` adds
+``fused_pair_calls`` ((strip+full patches) × eligible pairs) and
+``os_fused_segments`` (segments run through the fused Pallas segment
+kernel; equals ``os_mad_segments`` on the Pallas path, else 0).
 
 Host-staged streaming (``ram_budget``/``streaming``, ISSUE 5): a plan
 solved under a RAM budget executes with the volume resident in HOST
@@ -99,6 +108,7 @@ import numpy as np
 
 from ..configs.base import ConvNetConfig
 from ..core import overlap_save as os_mod
+from ..core.fft_conv import fft_conv_pool_fused_halo
 from ..core.mpf import recombine_fragments
 from ..core.pipeline import hetero_stage_devices, make_stage_fns, pipelined_apply
 from ..core.planner import Plan
@@ -210,7 +220,8 @@ class PlanExecutor:
         theta: int = -1,
         use_pallas: Optional[bool] = None,
         fuse_pairs: Optional[bool] = None,
-        fprime_chunk: Optional[int] = None,
+        fprime_chunk=None,
+        fuse_os: Optional[bool] = None,
         tuned: Union[str, TunedConfig, None] = "auto",
         deep_reuse: bool = True,
         ram_budget: Optional[float] = None,
@@ -237,6 +248,8 @@ class PlanExecutor:
                 fuse_pairs = self.tuned.fuse_pairs
             if fprime_chunk is None:
                 fprime_chunk = self.tuned.fprime_chunk
+            if fuse_os is None:
+                fuse_os = getattr(self.tuned, "fuse_os", None)
             if plan is None and prims is not None:
                 m = m if m is not None else self.tuned.m
                 batch = batch if batch is not None else self.tuned.batch
@@ -322,6 +335,34 @@ class PlanExecutor:
         self._os_mad_segments = 0
         self._deep_strips = 0
         self._deep_fulls = 0
+        self._fused_pair_calls = 0
+        self._os_fused_segments = 0
+        # layers below the input the halo-emitting fused epilogue can serve
+        # as a conv+pool pair (same eligibility as apply_prepared_range's
+        # fuse_pairs: fft_cached conv, not the net's last conv, immediately
+        # followed by its mpf pool)
+        _last_conv = max(
+            i for i, l in enumerate(net.layers) if l.kind == "conv"
+        )
+        pairs = []
+        for i in range(1, len(net.layers) - 1):
+            pl_i = self.compiled.layers[i]
+            nxt = self.compiled.layers[i + 1]
+            if (
+                pl_i.kind == "conv"
+                and pl_i.prim == "fft_cached"
+                and pl_i.index != _last_conv
+                and nxt.kind == "pool"
+                and nxt.prim == "mpf"
+                and nxt.index == pl_i.index + 1
+            ):
+                pairs.append(i)
+        self._fused_pairs: Tuple[int, ...] = tuple(pairs)
+        # fused halo-emitting epilogue in the capture/strip walks: off by
+        # default (conservative; tuned configs switch it on per hardware),
+        # and a no-op unless the plan has fusable pairs and runs the
+        # overlap-save reuse walks at all
+        self.fuse_os = bool(fuse_os) and bool(pairs) and self._os_reuse
         self._trace_keys: set = set()  # distinct jit specializations seen
         # deep activation reuse: interior patches run a strip walk assembled
         # from cached per-layer activation halos (see module docstring)
@@ -657,21 +698,42 @@ class PlanExecutor:
         trace-time constant — jitted callers that discard halos (deep
         reuse off, the mixed-sweep fallback) must not materialize them as
         jit outputs.  Returns ``(out, halos)``.
+
+        With ``fuse_os`` every eligible conv+pool pair dispatches to
+        ``fft_conv_pool_fused_halo``: the pool layer's input is never a
+        separate walk step, yet its trailing columns still reach the halo
+        cache via the fused call's second output (bitwise-identical to the
+        unfused capture off the Pallas path).
         """
         last_conv = max(
             i for i, l in enumerate(self.net.layers) if l.kind == "conv"
         )
         halos = []
-        for i in range(1, len(self.net.layers)):
+        i = 1
+        while i < len(self.net.layers):
             pl = self.compiled.layers[i]
             if capture:
                 h = self.net.layers[i].size - 1
                 halos.append(x[:, :, -h:])
+            if self.fuse_os and i in self._fused_pairs:
+                nxt = self.compiled.layers[i + 1]
+                x, pool_halo = fft_conv_pool_fused_halo(
+                    x, states[i]["W"], states[i]["b"],
+                    fft_shape=pl.fft_shape, k=pl.kernel_size,
+                    p=nxt.pool_size, halo_cols=nxt.pool_size - 1,
+                    use_pallas=self.use_pallas,
+                    fprime_chunk=pl.fprime_chunk,
+                )
+                if capture:
+                    halos.append(pool_halo)
+                i += 2
+                continue
             x = resolve_primitive(pl).apply(
                 pl, x, states[i], use_pallas=self.use_pallas
             )
             if pl.kind == "conv" and i != last_conv:
                 x = jax.nn.relu(x)
+            i += 1
         if self.uses_mpf:
             x = recombine_fragments(x, list(self.compiled.mpf_pools), S)
         return x, tuple(halos)
@@ -754,16 +816,35 @@ class PlanExecutor:
         if last_conv != 0:
             x = jax.nn.relu(x)
         new_halos = []
-        for i in range(1, len(self.net.layers)):
+        i = 1
+        while i < len(self.net.layers):
             pl = self._strip_layers[i]
             h, _ = self._strip_info[i]
             x = jnp.concatenate([halos[i - 1], x], axis=2)
             new_halos.append(x[:, :, -h:])
+            if self.fuse_os and i in self._fused_pairs:
+                # fused pair: the pool layer's input is the cached lead
+                # halo ``halos[i]`` + the conv's ReLU output — assembled
+                # INSIDE the fused call, which returns its trailing
+                # ``strip_info[i+1]`` columns as the pool-input halo
+                nxt = self._strip_layers[i + 1]
+                h_pool, _ = self._strip_info[i + 1]
+                x, pool_halo = fft_conv_pool_fused_halo(
+                    x, strip_states[i]["W"], strip_states[i]["b"],
+                    fft_shape=pl.fft_shape, k=pl.kernel_size,
+                    p=nxt.pool_size, halo_cols=h_pool, lead=halos[i],
+                    use_pallas=self.use_pallas,
+                    fprime_chunk=pl.fprime_chunk,
+                )
+                new_halos.append(pool_halo)
+                i += 2
+                continue
             x = resolve_primitive(pl).apply(
                 pl, x, strip_states[i], use_pallas=self.use_pallas
             )
             if pl.kind == "conv" and i != last_conv:
                 x = jax.nn.relu(x)
+            i += 1
         if self.uses_mpf:
             x = recombine_fragments(x, list(self.compiled.mpf_pools), S)
         return x, Fm, tuple(new_halos)
@@ -877,6 +958,13 @@ class PlanExecutor:
                         parents.append(F.parent)
                     pattern.append((pos, F.idx))
         self._os_mad_segments += len(pattern)
+        if self.use_pallas:
+            # on the Pallas path every MAD+inverse segment runs through the
+            # fused os_segment kernel (one pallas_call: MAD, DC-bin bias,
+            # inverse, crop) — same count, so predictions stay exact
+            self._os_fused_segments += len(pattern)
+        if self.fuse_os:
+            self._fused_pair_calls += len(metas) * len(self._fused_pairs)
         if self.streaming:
             # the group is one x-plane (plane-capped chunks / per-plane
             # sub-groups): its segments all live in the staged slab
@@ -999,6 +1087,10 @@ class PlanExecutor:
                 per_seg.append((key, F))
             slots.append(per_seg)
             self._os_mad_segments += spec0.n_segments
+            if self.use_pallas:
+                self._os_fused_segments += spec0.n_segments
+            if self.fuse_os:
+                self._fused_pair_calls += len(self._fused_pairs)
             self._deep_fulls += 1
         for token, keys_m in miss_keys.items():
             # pad the miss count to a power of two so the distinct compiled
@@ -1122,6 +1214,7 @@ class PlanExecutor:
 
         self._os_misses = self._os_hits = self._os_mad_segments = 0
         self._deep_strips = self._deep_fulls = 0
+        self._fused_pair_calls = self._os_fused_segments = 0
         self._ledger.begin_run()  # peak scoped to this sweep
         t0 = time.perf_counter()
         # the sweep's device upload is real per-volume work the other
@@ -1166,6 +1259,12 @@ class PlanExecutor:
             "os_mad_segments": self._os_mad_segments,
             "deep_strip_patches": self._deep_strips,
             "deep_full_patches": self._deep_fulls,
+            # fused-epilogue accounting: conv+pool pairs the halo-emitting
+            # fused epilogue served (``fuse_os``; (strips+fulls) × eligible
+            # pairs), and segments run through the fused Pallas segment
+            # kernel (== os_mad_segments on the Pallas path, else 0)
+            "fused_pair_calls": self._fused_pair_calls,
+            "os_fused_segments": self._os_fused_segments,
             # distinct jit specializations dispatched so far (cumulative
             # over the executor's lifetime — serving watches this to see
             # shape-bucketing suppress per-request retraces)

@@ -1,0 +1,295 @@
+"""Fused overlap-save segment kernel + halo-emitting strip epilogue (ISSUE 9).
+
+Three acceptance properties:
+
+1. The fused segment kernel (``kernels.os_segment``, interpret mode on
+   CPU) matches its pure-jnp XLA oracle AND the unfused
+   ``os_apply_from_spectra`` / ``os_apply_tail_from_spectra`` /
+   ``overlap_save_conv`` chain across ragged tails, shifted output edges
+   (tail-only MAD with a lead crop), odd channel counts, and every
+   ``fprime_chunk`` in {None, 1, 3}.
+
+2. ``fuse_os`` is *invisible* off the Pallas path: the executor's fused
+   capture/strip walks produce BITWISE-identical output to the unfused
+   walks (the fused epilogue runs literally the same op sequence —
+   relu∘max == max∘relu), the ``fused_pair_calls`` counter equals the
+   sweep prediction exactly, and the boundary ``HaloPackage`` a sharded
+   worker exports is bit-for-bit the one the unfused engine exports.
+
+3. The tuner's cost-model shortlist is a subset of the full candidate
+   grid, ``fuse_os`` is only swept on top of ``fuse_pairs``, per-conv
+   ``fprime_chunk`` schedules expand to per-absolute-layer tuples, and a
+   schema-v2 ``TunedConfig`` (tuple schedule + ``fuse_os``) round-trips
+   through save/load while v1 files still load and future schemas are
+   ignored.
+"""
+
+import json
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import pytest
+
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet, primitives
+from repro.core.fft_conv import precompute_kernel_fft
+from repro.core.overlap_save import (
+    os_apply_from_spectra,
+    os_apply_tail_from_spectra,
+    os_input_spectra,
+    overlap_save_conv,
+    plan_overlap_save,
+    tail_segments,
+)
+from repro.kernels.os_segment import ops as seg_ops
+from repro.kernels.os_segment import ref as seg_ref
+from repro.serving import ShardedVolumeEngine, VolumeRequest
+from repro.tuning.autotune import (
+    build_candidate_grid,
+    expand_fprime_schedule,
+    shortlist_candidates,
+)
+from repro.tuning.store import TunedConfig, load_tuned_config, save_tuned_config
+from repro.volume.executor import PlanExecutor
+
+# Pallas-vs-XLA float tolerance (matmul-DFT vs jnp.fft accumulation
+# order); same budget as tests/test_kernels.py.
+TOL = dict(atol=1e-3, rtol=1e-4)
+
+# -- 1. fused segment kernel vs oracle vs unfused ---------------------------
+
+# (input extent, kernel, seg_core): ragged tail (tail_len < seg_core),
+# exact tail, and a longer grid whose tail window needs input zero-padding
+SPECS = {
+    "ragged": ((9, 6, 6), (3, 3, 3), 4),
+    "exact": ((10, 6, 6), (3, 3, 3), 4),
+    "padded": ((13, 5, 7), (3, 3, 3), 5),
+}
+CHUNKS = (None, 1, 3)
+
+
+def _problem(name, f=3, fp=5, S=2, seed=0):
+    """Spec + raw input + cached kernel spectra with ODD channel counts."""
+    n, k, seg_core = SPECS[name]
+    spec = plan_overlap_save(n, k, seg_core)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(S, f) + n).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(fp, f) + k).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.normal(size=(fp,)).astype(np.float32))
+    W = precompute_kernel_fft(w, spec.fft_shape)
+    return spec, x, w, b, W
+
+
+@pytest.mark.parametrize("fc", CHUNKS, ids=lambda c: f"chunk={c}")
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_fused_full_grid_matches_oracle_and_unfused(name, fc):
+    spec, x, w, b, W = _problem(name)
+    F = os_input_spectra(x, spec)
+    want = os_apply_from_spectra(F, W, b, spec, use_pallas=False)
+    oracle = seg_ref.os_segment_fused(F, W, b, spec)
+    got = seg_ops.os_segment_fused(F, W, b, spec, fprime_chunk=fc, use_pallas=True)
+    assert got.shape == want.shape == oracle.shape
+    # the oracle IS the unfused math (DC-bin bias == spatial bias)
+    np.testing.assert_allclose(oracle, want, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("fc", CHUNKS, ids=lambda c: f"chunk={c}")
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_fused_tail_shifted_edges(name, fc):
+    """Trailing-segment MAD with a lead crop — the strip path's form."""
+    spec, x, w, b, W = _problem(name, seed=1)
+    F = os_input_spectra(x, spec)
+    s = spec.seg_core
+    # out_cols sweep: one core (deep strip), a shifted edge (not
+    # core-aligned), and the full extent (degenerates to the full grid)
+    for out_cols in sorted({s, min(s + 1, spec.out[0]), spec.out[0]}):
+        q = tail_segments(spec, out_cols)
+        Ft = F[:, spec.n_segments - q :]
+        want = os_apply_tail_from_spectra(
+            Ft, W, b, spec, out_cols, use_pallas=False
+        )
+        got = seg_ops.os_segment_fused_tail(
+            Ft, W, b, spec, out_cols, fprime_chunk=fc, use_pallas=True
+        )
+        assert got.shape == want.shape == (x.shape[0], W.shape[0], out_cols) + spec.out[1:]
+        np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("fc", CHUNKS, ids=lambda c: f"chunk={c}")
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_fused_conv_in_kernel_fft(name, fc):
+    """Self-contained form: the miss-segment FFT runs inside the kernel."""
+    spec, x, w, b, W = _problem(name, seed=2)
+    want = overlap_save_conv(x, W, b, spec, use_pallas=False)
+    oracle = seg_ref.os_segment_conv(x, W, b, spec)
+    got = seg_ops.os_segment_conv(x, W, b, spec, fprime_chunk=fc, use_pallas=True)
+    np.testing.assert_allclose(oracle, want, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# -- 2. executor strip-path parity ------------------------------------------
+
+NET = ConvNetConfig(
+    "osfused-toy", 1,
+    (L("conv", 3, 4), L("pool", 2), L("conv", 3, 4), L("pool", 2), L("conv", 3, 2)),
+)
+MIX = [
+    "overlap_save" if i == 0 else ("fft_cached" if l.kind == "conv" else "mpf")
+    for i, l in enumerate(NET.layers)
+]
+FOV = NET.field_of_view()
+CORE = NET.total_pooling()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return convnet.init_params(jax.random.PRNGKey(0), NET)
+
+
+def _vol(seed, xc, extra=(0, 0, 0)):
+    rng = np.random.default_rng(seed)
+    shape = (
+        xc * CORE + extra[0] + FOV - 1,
+        CORE + extra[1] + FOV - 1,
+        CORE + extra[2] + FOV - 1,
+    )
+    return rng.normal(size=(1,) + shape).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "extra", [(0, 0, 0), (3, 1, 2)], ids=["interior", "ragged"]
+)
+def test_executor_fuse_os_bitwise_parity(params, extra):
+    """Fused capture/strip walks == unfused walks BITWISE, and the
+    fused-pair counter matches the sweep prediction exactly."""
+    vol = _vol(3, 4, extra)
+    ex_f = PlanExecutor(params, NET, prims=MIX, m=1, batch=3, tuned=None,
+                        fuse_os=True)
+    ex_u = PlanExecutor(params, NET, prims=MIX, m=1, batch=3, tuned=None)
+    assert ex_f.fuse_os and not ex_u.fuse_os
+    assert ex_f._fused_pairs == (2,)  # conv@2 (fft_cached) + pool@3 (mpf)
+    out_f = ex_f.run(vol)
+    out_u = ex_u.run(vol)
+    assert np.array_equal(np.asarray(out_f), np.asarray(out_u))
+    c = ex_f.predict_counts(vol.shape[1:])
+    stats = ex_f.last_stats
+    assert stats["fused_pair_calls"] == (
+        (c.strip_patches + c.full_patches) * len(ex_f._fused_pairs)
+    )
+    assert stats["fused_pair_calls"] > 0
+    # XLA path: the OS segment kernel never dispatched
+    if not ex_f.use_pallas:
+        assert stats["os_fused_segments"] == 0
+    assert ex_u.last_stats["fused_pair_calls"] == 0
+
+
+def _record_exports(eng):
+    """Wrap every worker's export_handoff to capture boundary packages."""
+    recs = []
+    for w in eng.workers:
+        orig = w.executor.export_handoff
+
+        def wrapped(token, x_lo, _orig=orig, _acc=recs):
+            pkg = _orig(token, x_lo)
+            _acc.append(pkg)
+            return pkg
+
+        w.executor.export_handoff = wrapped
+    return recs
+
+
+def test_sharded_halo_package_parity(params):
+    """N=2 sharded engine: fused-vs-unfused outputs bitwise equal AND the
+    exported boundary HaloPackage is bit-for-bit identical."""
+    vol = _vol(7, 5)
+    outs, pkgs = {}, {}
+    for fos in (False, True):
+        eng = ShardedVolumeEngine(
+            params, NET, n_workers=2, prims=MIX, m=1, batch=3, tuned=None,
+            fuse_os=fos,
+        )
+        recs = _record_exports(eng)
+        req = VolumeRequest(0, vol)
+        eng.submit(req)
+        eng.run_until_drained()
+        assert req.done
+        outs[fos] = np.asarray(req.out)
+        pkgs[fos] = recs
+    assert np.array_equal(outs[True], outs[False])
+    assert len(pkgs[True]) == len(pkgs[False]) >= 1
+    for a, b in zip(pkgs[True], pkgs[False]):
+        assert a.x_lo == b.x_lo
+        assert set(a.spectra) == set(b.spectra)
+        assert set(a.halos) == set(b.halos)
+        assert a.nbytes == b.nbytes
+        for key in a.spectra:
+            assert np.array_equal(a.spectra[key], b.spectra[key])
+        for key in a.halos:
+            assert len(a.halos[key]) == len(b.halos[key])
+            for ha, hb in zip(a.halos[key], b.halos[key]):
+                assert np.array_equal(ha, hb)
+
+
+# -- 3. tuner shortlist + schema v2 -----------------------------------------
+
+
+def test_candidate_grid_gates_fuse_os_on_fuse_pairs():
+    grid = build_candidate_grid(2, (1, 2), (None, 1), (False, True), (False, True))
+    assert not any(c.fuse_os and not c.fuse_pairs for c in grid)
+    assert any(c.fuse_os for c in grid)
+    # the gate halves the (fuse, fuse_os) plane: 3 combos, not 4
+    assert len(grid) == 2 * 2 * 2 * 3
+
+
+def test_shortlist_is_subset_of_grid():
+    grid = build_candidate_grid(2, (1, 2), (None, 2), (False, True), (False, True))
+    short, plans = shortlist_candidates(NET, MIX, grid, 4, quick=True)
+    assert 1 <= len(short) <= 4
+    assert set(short) <= set(grid)
+    for cand in short:
+        assert (cand.m, cand.batch) in plans
+
+
+def test_expand_fprime_schedule():
+    # per-CONV entries land at conv positions; pools (and past-end) None
+    assert expand_fprime_schedule(NET, (4, None, 2)) == (4, None, None, None, 2)
+    assert expand_fprime_schedule(NET, (4,)) == (4, None, None, None, None)
+    assert expand_fprime_schedule(NET, None) is None
+    assert expand_fprime_schedule(NET, 8) == 8
+    sched = expand_fprime_schedule(NET, (4, None, 2))
+    assert primitives.layer_fprime_chunk(sched, 0) == 4
+    assert primitives.layer_fprime_chunk(sched, 1) is None
+    assert primitives.layer_fprime_chunk(sched, 4) == 2
+    assert primitives.layer_fprime_chunk(sched, 99) is None
+    assert primitives.layer_fprime_chunk(8, 3) == 8
+
+
+def test_tuned_config_v2_roundtrip(tmp_path):
+    cfg = TunedConfig(
+        device_kind="cpu", net="osfused-toy", m=2, batch=3,
+        fprime_chunk=(4, None, None, None, 2), fuse_pairs=True, fuse_os=True,
+        measured_voxps=123.0,
+    )
+    save_tuned_config(cfg, root=tmp_path)
+    back = load_tuned_config("osfused-toy", "cpu", root=tmp_path)
+    assert back == cfg
+    assert back.provenance()["fuse_os"] is True
+
+
+def test_tuned_config_v1_and_future_schemas(tmp_path):
+    # v1 file: scalar fprime_chunk, no fuse_os key -> loads with defaults
+    p = tmp_path / "cpu__osfused-toy.json"
+    p.write_text(json.dumps({
+        "schema_version": 1, "device_kind": "cpu", "net": "osfused-toy",
+        "m": 1, "batch": 2, "fprime_chunk": 4, "fuse_pairs": False,
+    }))
+    v1 = load_tuned_config("osfused-toy", "cpu", root=tmp_path)
+    assert v1.fprime_chunk == 4 and v1.fuse_os is None
+    # a FUTURE schema is ignored, never misread
+    p.write_text(json.dumps({"schema_version": 99, "device_kind": "cpu",
+                             "net": "osfused-toy"}))
+    assert load_tuned_config("osfused-toy", "cpu", root=tmp_path) is None
