@@ -23,8 +23,22 @@ The ``fused_os`` row (ISSUE 9) is mandatory: it must report
 unfused walk) and its measured ``fused_pair_calls`` must equal the sweep
 prediction exactly.
 
+The ``anisotropic`` row (ISSUE 10) is mandatory: the planner's sweep-axis
+argmax on a thin-slab volume must pick a non-x axis and its measured
+throughput must STRICTLY beat the forced-x fallback, with the chosen
+sweep's reuse counters equal to the planner's prediction exactly.
+
+The long-horizon drift gate (ISSUE 10) complements the adjacent-baseline
+trend gate: over the WHOLE committed ``BENCH_NNN.json`` series (plus the
+checked file as the newest snapshot), a row whose measured vox/s decayed
+strictly monotonically across its last >= 3 snapshots AND lost more than
+``--drift-tolerance`` (default 20%) cumulatively over that tail fails the
+check — the slow-leak regression pattern where each adjacent step stays
+inside the 50% noise tolerance but the trajectory is clearly downhill.
+
 Usage: python scripts/check_bench_json.py BENCH_volume_throughput.json \
-           [--baseline BENCH_006.json | --baseline none] [--tolerance 0.5]
+           [--baseline BENCH_006.json | --baseline none] [--tolerance 0.5] \
+           [--drift-tolerance 0.2]
 """
 
 import argparse
@@ -91,7 +105,57 @@ def discover_baseline(path: str) -> str:
     return best
 
 
-def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
+def history_series(path: str):
+    """All committed ``BENCH_NNN.json`` next to ``path`` (excluding the
+    checked file itself), as ``[(n, rows_dict), ...]`` sorted by n."""
+    root = os.path.dirname(os.path.abspath(path)) or "."
+    out = []
+    for cand in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(cand))
+        if m is None:
+            continue
+        if os.path.exists(path) and os.path.samefile(cand, path):
+            continue
+        try:
+            with open(cand) as fh:
+                rows = json.load(fh).get("rows") or {}
+        except (OSError, ValueError):
+            continue
+        out.append((int(m.group(1)), rows))
+    return sorted(out)
+
+
+def drift_errors(path: str, rows: dict, drift_tolerance: float):
+    """The slow-leak gate: strictly monotone decay across >= 3 trailing
+    snapshots of a row's measured vox/s, with a cumulative decline beyond
+    ``drift_tolerance``, over the whole committed series + this run."""
+    snapshots = [r for _, r in history_series(path)] + [rows or {}]
+    errors = []
+    for name in sorted({k for snap in snapshots for k in snap}):
+        series = [
+            snap[name]["measured_voxps"]
+            for snap in snapshots
+            if name in snap and snap[name].get("measured_voxps")
+        ]
+        # longest strictly-decreasing tail
+        tail = 1
+        while tail < len(series) and series[-tail - 1] > series[-tail]:
+            tail += 1
+        if tail < 3:
+            continue
+        first, last = series[-tail], series[-1]
+        decline = (first - last) / first
+        if decline > drift_tolerance:
+            errors.append(
+                f"row {name!r}: measured_voxps decayed monotonically over "
+                f"its last {tail} snapshots ({first:,.0f} -> {last:,.0f}, "
+                f"-{decline:.0%} > drift tolerance {drift_tolerance:.0%})"
+            )
+    return errors
+
+
+def check(path: str, baseline: str = None, tolerance: float = 0.5,
+          drift_tolerance: float = 0.2) -> int:
     with open(path) as fh:
         payload = json.load(fh)
     errors = []
@@ -200,6 +264,52 @@ def check(path: str, baseline: str = None, tolerance: float = 0.5) -> int:
                 "row 'fused_os': fused_pair_calls is 0 — the fused "
                 "epilogue never dispatched"
             )
+    # the anisotropic axis-argmax row (ISSUE 10) is part of the contract:
+    # on a thin slab the planner-chosen sweep axis must strictly beat the
+    # forced-x fallback, and the chosen sweep's measured reuse counters
+    # must equal the planner's prediction exactly
+    aniso = (rows or {}).get("anisotropic")
+    if aniso is None:
+        errors.append("missing mandatory 'anisotropic' row")
+    else:
+        for key in ("sweep_axis", "forced_x_voxps", "allclose_forced_x",
+                    "planner_sweep", "os_seg_fft", "deep_strip_patches"):
+            if key not in aniso:
+                errors.append(f"row 'anisotropic': missing {key!r}")
+        if aniso.get("sweep_axis") == 0:
+            errors.append(
+                "row 'anisotropic': planner picked sweep_axis 0 on the "
+                "thin slab — the axis argmax is not engaging"
+            )
+        got = aniso.get("measured_voxps")
+        fx = aniso.get("forced_x_voxps")
+        if got is not None and fx is not None and not got > fx:
+            errors.append(
+                f"row 'anisotropic': chosen-axis {got:,.0f} vox/s does not "
+                f"strictly beat forced-x {fx:,.0f} vox/s"
+            )
+        if aniso.get("allclose_forced_x") is not True:
+            errors.append(
+                "row 'anisotropic': chosen-axis output diverged from the "
+                "forced-x sweep (allclose_forced_x is not true)"
+            )
+        ps = aniso.get("planner_sweep") or {}
+        for pkey, mkey in (("seg_fft", "os_seg_fft"),
+                           ("mad_segments", "os_mad_segments"),
+                           ("strip_patches", "deep_strip_patches"),
+                           ("full_patches", "deep_full_patches")):
+            want, meas = ps.get(pkey), aniso.get(mkey)
+            if want is not None and meas is not None and want != meas:
+                errors.append(
+                    f"row 'anisotropic': measured {mkey} {meas!r} != "
+                    f"predicted {want!r} (must match exactly)"
+                )
+        if not aniso.get("deep_strip_patches"):
+            errors.append(
+                "row 'anisotropic': deep_strip_patches is 0 — the chosen "
+                "axis ran no strip path, so there was nothing to win"
+            )
+    errors.extend(drift_errors(path, rows, drift_tolerance))
     sweep = payload.get("budget_sweep")
     if not sweep:
         errors.append("missing budget_sweep block")
@@ -252,6 +362,10 @@ if __name__ == "__main__":
                          "numbered one next to PATH, 'none' disables")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="max fractional measured_voxps drop vs baseline")
+    ap.add_argument("--drift-tolerance", type=float, default=0.2,
+                    help="max cumulative measured_voxps decline over a "
+                         "strictly-monotone >=3-snapshot tail of the "
+                         "committed BENCH_NNN.json series")
     args = ap.parse_args()
     baseline = args.baseline
     if baseline == "auto":
@@ -261,4 +375,5 @@ if __name__ == "__main__":
                   "trend gate skipped")
     elif baseline == "none":
         baseline = None
-    sys.exit(check(args.path, baseline=baseline, tolerance=args.tolerance))
+    sys.exit(check(args.path, baseline=baseline, tolerance=args.tolerance,
+                   drift_tolerance=args.drift_tolerance))

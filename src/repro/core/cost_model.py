@@ -95,11 +95,16 @@ class PlanGeometry:
     layer: int = -1
     new_x: int = 0
     seg_fft_per_patch: float = -1.0
-    # patches per x-plane of the sweep (n_y · n_z starts): sizes the
-    # sweep-resident caches — each (y, z) patch row keeps its own segment
-    # spectra and activation halos alive across plane steps.  0 = unknown
-    # (cost functions must then charge no sweep-cache bytes).
+    # patches per sweep plane (the two cross-axis start counts multiplied):
+    # sizes the sweep-resident caches — each cross-axis patch row keeps its
+    # own segment spectra and activation halos alive across plane steps.
+    # 0 = unknown (cost functions must then charge no sweep-cache bytes).
     plane_patches: int = 0
+    # volume axis the sweep advances on (tiler working axis 0).  Purely
+    # descriptive for cost functions — per-patch work is axis-symmetric
+    # (cubic patches/kernels) — but the sweep counters above were simulated
+    # on THIS axis, and the executor must run the same one to match them.
+    sweep_axis: int = 0
 
     @classmethod
     def local(cls) -> "PlanGeometry":

@@ -126,8 +126,12 @@ class Plan:
     # -- runtime metadata (volume tiler/executor contract) -------------------
     # fov:  sliding-window field of view of the net (1D extent, isotropic)
     # core: dense output voxels per axis each patch contributes (m · P)
+    # sweep_axis: VOLUME axis the executor's sweep advances on (the tiler's
+    #   working axis 0).  Chosen by the per-axis sweep-count argmax when the
+    #   search runs sweep-aware with ``sweep_axis="auto"``; 0 otherwise.
     fov: int = 0
     core: int = 0
+    sweep_axis: int = 0
     # -- sweep-aware pricing metadata ----------------------------------------
     # geometry: the PlanGeometry the layer costs were evaluated in (None:
     #   context-free local costing); sweep: the exact predicted sweep-level
@@ -205,15 +209,17 @@ def sweep_geometry(
     *,
     batch: int = 1,
     deep_reuse: bool = True,
+    sweep_axis: int = 0,
 ):
     """``(PlanGeometry, SweepCounts)`` for sweeping ``volume_shape``.
 
     Builds the exact tiling the executor will run (core-pinned layer-0
-    segment grid, x-major patch stream in chunks of ``batch``) and
-    simulates its caches, so the geometry carries the true sweep-average
-    segment-FFT count per patch and the interior/edge patch mix — the
-    context ``cost_model`` prices primitives in, and the predicted
-    counters the executor's ``last_stats`` must match exactly.
+    segment grid, sweep-major patch stream in chunks of ``batch``, the
+    sweep advancing on VOLUME axis ``sweep_axis``) and simulates its
+    caches, so the geometry carries the true sweep-average segment-FFT
+    count per patch and the interior/edge patch mix — the context
+    ``cost_model`` prices primitives in, and the predicted counters the
+    executor's ``last_stats`` must match exactly.
     """
     from ..volume.tiler import (  # lazy: keep core importable without volume
         HaloSpec,
@@ -229,7 +235,10 @@ def sweep_geometry(
     k0 = next(l.size for l in net.layers if l.kind == "conv")
     spec = plan_overlap_save((extent, extent, extent), (k0,) * 3, core)
     halo = HaloSpec(spec.seg_core, spec.seg_extent, spec.starts)
-    tiling = tile_volume(tuple(volume_shape), core=core, fov=fov, halo=halo)
+    tiling = tile_volume(
+        tuple(volume_shape), core=core, fov=fov, halo=halo,
+        sweep_axis=sweep_axis,
+    )
     counts = predict_sweep_counts(
         tiling, batch=batch, deep_reuse=deep_reuse,
         strip_segments=tail_segments(spec, core),
@@ -242,8 +251,33 @@ def sweep_geometry(
         seg_core=core, deep_reuse=deep_reuse,
         seg_fft_per_patch=counts.seg_fft / n,
         plane_patches=plane,
+        sweep_axis=sweep_axis,
     )
     return geom, counts
+
+
+def _axis_candidates(
+    volume_shape: Sequence[int], sweep_axis
+) -> Tuple[int, ...]:
+    """Candidate sweep axes for the per-axis argmax.
+
+    ``sweep_axis="auto"`` enumerates all three volume axes, deduplicated
+    by the WORKING-frame shape they induce (``tiler.sweep_perm``): two
+    axes whose permuted shapes coincide run the identical tiling and
+    cache simulation, so only the lowest-numbered one is simulated — a
+    cubic volume prices one candidate, a thin slab up to three.  An
+    integer pins the axis (no search).
+    """
+    if sweep_axis != "auto":
+        return (int(sweep_axis),)
+    seen = {}
+    for ax in range(3):
+        work = tuple(
+            volume_shape[a]
+            for a in ((ax,) + tuple(b for b in range(3) if b != ax))
+        )
+        seen.setdefault(work, ax)
+    return tuple(sorted(seen.values()))
 
 
 def _layer_geom(
@@ -355,6 +389,7 @@ def plan_stream_memory(
     batch: int = 1,
     deep_reuse: bool = True,
     streaming: bool = True,
+    sweep_axis: int = 0,
 ) -> MemoryFootprint:
     """Exact peak device working set for sweeping ``volume_shape``.
 
@@ -363,7 +398,9 @@ def plan_stream_memory(
     ``stream_unit_bytes`` — the prediction ``Plan.memory`` carries and
     the executor's measured ``peak_device_bytes`` must land within 10%
     of.  ``streaming=False`` models the dense-materialized path (whole
-    padded volume device-resident).
+    padded volume device-resident).  ``sweep_axis`` selects the volume
+    axis the slab window advances on; the tiling's working-frame shape
+    makes the slab/eviction formulas axis-generic automatically.
     """
     from ..volume.tiler import (  # lazy: keep core importable without volume
         HaloSpec,
@@ -380,7 +417,10 @@ def plan_stream_memory(
     k0 = next(l.size for l in net.layers if l.kind == "conv")
     spec = plan_overlap_save((extent, extent, extent), (k0,) * 3, core)
     halo = HaloSpec(spec.seg_core, spec.seg_extent, spec.starts)
-    tiling = tile_volume(tuple(volume_shape), core=core, fov=fov, halo=halo)
+    tiling = tile_volume(
+        tuple(volume_shape), core=core, fov=fov, halo=halo,
+        sweep_axis=sweep_axis,
+    )
     padded = [x + p for x, p in zip(tiling.vol_shape, tiling.pad)]
     f0 = units["in_channels"]
     slab_bytes = f0 * spec.span * padded[1] * padded[2] * F32
@@ -612,6 +652,7 @@ def plan_single(
     deep_reuse: bool = True,
     ram_budget: Optional[float] = None,
     infeasible: Optional[List[InfeasiblePoint]] = None,
+    sweep_axis="auto",
 ) -> Optional[Plan]:
     """Best single-worker plan (the paper's CPU-only/GPU-only search).
 
@@ -622,6 +663,13 @@ def plan_single(
     and the winning plan records the predicted sweep counters the
     executor must reproduce.  Without it the search is context-free, as
     before.
+
+    ``sweep_axis`` extends the sweep-aware search across volume axes:
+    ``"auto"`` (the default) re-runs the count simulation per candidate
+    axis (``_axis_candidates`` — deduped by induced working shape) and
+    keeps the throughput argmax, recorded on ``Plan.sweep_axis``; on
+    anisotropic volumes the best axis maximizes interior strip patches
+    per plane.  An integer pins the axis.
 
     ``ram_budget`` solves the paper's constrained optimization: each
     candidate's device working set (per-layer ``LayerCost.memory``, plus
@@ -636,60 +684,65 @@ def plan_single(
     best: Optional[Plan] = None
     fov = net.field_of_view()
     first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    # the cache simulation only matters if the walk CAN choose the
+    # reuse-capable mix; don't pay it when overlap_save is excluded
+    sweep_aware = (
+        volume_shape is not None and use_mpf and "overlap_save" in conv_prims
+    )
+    axes = _axis_candidates(volume_shape, sweep_axis) if sweep_aware else (0,)
     for S in batches:
         for m in range(1, max_m + 1):
             n_in = _n_in_for_m(net, m, use_mpf)
-            geom = counts = None
-            # the cache simulation only matters if the walk CAN choose the
-            # reuse-capable mix; don't pay it when overlap_save is excluded
-            if (
-                volume_shape is not None
-                and use_mpf
-                and "overlap_save" in conv_prims
-            ):
-                if min(volume_shape) < fov:
-                    continue  # no valid output for this volume at all
-                geom, counts = sweep_geometry(
-                    net, m, volume_shape, batch=S, deep_reuse=deep_reuse
+            if sweep_aware and min(volume_shape) < fov:
+                continue  # no valid output for this volume at all
+            for ax in axes:
+                geom = counts = None
+                if sweep_aware:
+                    geom, counts = sweep_geometry(
+                        net, m, volume_shape, batch=S, deep_reuse=deep_reuse,
+                        sweep_axis=ax,
+                    )
+                choices = _walk(
+                    net, S, n_in, use_mpf, hw, mem,
+                    chips=chips, conv_prims=conv_prims,
+                    stream_collectives=stream_collectives, geom=geom,
+                    ram_budget=ram_budget, m=m, strategy=strategy_name,
+                    infeasible=infeasible,
                 )
-            choices = _walk(
-                net, S, n_in, use_mpf, hw, mem,
-                chips=chips, conv_prims=conv_prims,
-                stream_collectives=stream_collectives, geom=geom,
-                ram_budget=ram_budget, m=m, strategy=strategy_name,
-                infeasible=infeasible,
-            )
-            if choices is None:
-                continue
-            os_mix = choices[first_conv].prim == "overlap_save"
-            total = sum(c.time_s for c in choices)
-            vox = _out_voxels(net, S, m, use_mpf, n_in)
-            peak = max(c.cost.peak_bytes for c in choices)
-            if os_mix and volume_shape is not None and ram_budget is not None:
-                # the exact streaming-schedule peak for THIS volume
-                memory = plan_stream_memory(
-                    net, tuple(c.prim for c in choices), m, volume_shape,
-                    batch=S, deep_reuse=deep_reuse,
+                if choices is None:
+                    continue
+                os_mix = choices[first_conv].prim == "overlap_save"
+                total = sum(c.time_s for c in choices)
+                vox = _out_voxels(net, S, m, use_mpf, n_in)
+                peak = max(c.cost.peak_bytes for c in choices)
+                if os_mix and volume_shape is not None and ram_budget is not None:
+                    # the exact streaming-schedule peak for THIS volume
+                    memory = plan_stream_memory(
+                        net, tuple(c.prim for c in choices), m, volume_shape,
+                        batch=S, deep_reuse=deep_reuse, sweep_axis=ax,
+                    )
+                else:
+                    memory = _plan_memory_analytic(choices)
+                if ram_budget is not None and memory.device_bytes > ram_budget:
+                    if infeasible is not None:
+                        infeasible.append(InfeasiblePoint(
+                            strategy_name, choices[first_conv].prim, m, S, -1,
+                            "exceeds ram_budget", memory.device_bytes, ram_budget,
+                        ))
+                    continue
+                plan = Plan(
+                    net.name, strategy_name, chips, S, n_in, m,
+                    tuple(choices), total, vox, peak,
+                    fov=fov, core=m * net.total_pooling(),
+                    sweep_axis=ax if os_mix else 0,
+                    geometry=geom if os_mix else None,
+                    sweep=counts if os_mix else None,
+                    memory=memory, ram_budget=ram_budget,
                 )
-            else:
-                memory = _plan_memory_analytic(choices)
-            if ram_budget is not None and memory.device_bytes > ram_budget:
-                if infeasible is not None:
-                    infeasible.append(InfeasiblePoint(
-                        strategy_name, choices[first_conv].prim, m, S, -1,
-                        "exceeds ram_budget", memory.device_bytes, ram_budget,
-                    ))
-                continue
-            plan = Plan(
-                net.name, strategy_name, chips, S, n_in, m,
-                tuple(choices), total, vox, peak,
-                fov=fov, core=m * net.total_pooling(),
-                geometry=geom if os_mix else None,
-                sweep=counts if os_mix else None,
-                memory=memory, ram_budget=ram_budget,
-            )
-            if best is None or plan.throughput > best.throughput:
-                best = plan
+                if best is None or plan.throughput > best.throughput:
+                    best = plan
+                if not sweep_aware:
+                    break  # axis cannot matter without a geometry
     return best
 
 
@@ -707,6 +760,7 @@ def plan_fixed(
     deep_reuse: bool = True,
     ram_budget: Optional[float] = None,
     infeasible: Optional[List[InfeasiblePoint]] = None,
+    sweep_axis="auto",
 ) -> Optional[Plan]:
     """Price a FIXED per-layer primitive assignment (no search).
 
@@ -719,10 +773,13 @@ def plan_fixed(
     searched plan.  ``volume_shape`` prices the assignment in the sweep's
     ``PlanGeometry`` (exact cache-simulated amortization; only active for
     the reuse-capable mix — first conv ``overlap_save``, MPF pools) and
-    records the predicted counters on ``Plan.sweep``.  Raises ValueError
-    on divisibility violations; returns None when some layer's peak
-    exceeds the memory budget (default: one chip's HBM), the same
-    feasibility rule every search applies.
+    records the predicted counters on ``Plan.sweep``; ``sweep_axis``
+    (``"auto"`` = per-axis argmax over ``_axis_candidates``, or a pinned
+    int) selects the volume axis the sweep advances on, recorded on
+    ``Plan.sweep_axis``.  Raises ValueError on divisibility violations;
+    returns None when some layer's peak exceeds the memory budget
+    (default: one chip's HBM), the same feasibility rule every search
+    applies.
     """
     mem = hw.hbm_bytes if mem_bytes is None else mem_bytes
     from .primitives import plan_input_size  # lazy: primitives imports us
@@ -731,86 +788,96 @@ def plan_fixed(
     if len(prims) != len(net.layers):
         raise ValueError(f"{len(prims)} prims for {len(net.layers)} layers")
     first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
-    geom = counts = None
-    if (
+    sweep_aware = (
         volume_shape is not None
         and prims[first_conv] == "overlap_save"
         and "mpf" in prims
-    ):
-        geom, counts = sweep_geometry(
-            net, m, volume_shape, batch=batch, deep_reuse=deep_reuse
-        )
-    n_in = plan_input_size(net, prims, m)
-    choices: List[LayerChoice] = []
-    S_cur, f_cur, n_cur = batch, net.in_channels, n_in
-    P_mpf = 1
-    for i, layer in enumerate(net.layers):
-        n3 = (n_cur,) * 3
-        g = _layer_geom(geom, i, P_mpf)
-        if layer.kind == "conv":
-            fp = layer.out_channels
-            c = conv_cost(prims[i], S_cur, f_cur, fp, n3, layer.size, g)
-            n_next = n_cur - layer.size + 1
-            choices.append(
-                LayerChoice(i, "conv", prims[i], (S_cur, f_cur, n3),
-                            (S_cur, fp, (n_next,) * 3), c, c.time(hw, chips))
-            )
-            f_cur, n_cur = fp, n_next
-        elif prims[i] == "mpf":
-            if (n_cur + 1) % layer.size:
-                raise ValueError(f"layer {i}: MPF needs (n+1)%p==0, n={n_cur}")
-            c = mpf_cost(S_cur, f_cur, n3, layer.size, g)
-            n_next, S_next = n_cur // layer.size, S_cur * layer.size**3
-            choices.append(
-                LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3),
-                            (S_next, f_cur, (n_next,) * 3), c, c.time(hw, chips))
-            )
-            S_cur, n_cur = S_next, n_next
-            P_mpf *= layer.size
-        else:
-            if prims[i] != "pool":
-                raise ValueError(
-                    f"layer {i}: unknown pool primitive {prims[i]!r} "
-                    "(expected 'mpf' or 'pool')"
-                )
-            if n_cur % layer.size:
-                raise ValueError(f"layer {i}: plain pool needs n%p==0, n={n_cur}")
-            c = pool_cost(S_cur, f_cur, n3, layer.size)
-            choices.append(
-                LayerChoice(i, "pool", "pool", (S_cur, f_cur, n3),
-                            (S_cur, f_cur, (n_cur // layer.size,) * 3), c,
-                            c.time(hw, chips))
-            )
-            n_cur //= layer.size
-    total = sum(c.time_s for c in choices)
-    vox = batch * float(m * P_mpf) ** 3
-    peak = max(c.cost.peak_bytes for c in choices)
-    if peak > mem:
-        return None
-    if geom is not None and volume_shape is not None:
-        # reuse-capable mix priced against a concrete volume: the memory
-        # model is the streaming schedule's exact simulated peak (the
-        # executor honors a carried ram_budget by streaming)
-        memory = plan_stream_memory(
-            net, prims, m, volume_shape, batch=batch, deep_reuse=deep_reuse,
-            streaming=ram_budget is not None,
-        )
-    else:
-        memory = _plan_memory_analytic(choices)
-    if ram_budget is not None and memory.device_bytes > ram_budget:
-        if infeasible is not None:
-            infeasible.append(InfeasiblePoint(
-                strategy_name, prims[first_conv], m, batch, -1,
-                "exceeds ram_budget", memory.device_bytes, ram_budget,
-            ))
-        return None
-    return Plan(
-        net.name, strategy_name, chips, batch, n_in, m,
-        tuple(choices), total, vox, peak,
-        fov=net.field_of_view(), core=m * net.total_pooling(),
-        geometry=geom, sweep=counts,
-        memory=memory, ram_budget=ram_budget,
     )
+    axes = _axis_candidates(volume_shape, sweep_axis) if sweep_aware else (0,)
+    n_in = plan_input_size(net, prims, m)
+    best: Optional[Plan] = None
+    for ax in axes:
+        geom = counts = None
+        if sweep_aware:
+            geom, counts = sweep_geometry(
+                net, m, volume_shape, batch=batch, deep_reuse=deep_reuse,
+                sweep_axis=ax,
+            )
+        choices: List[LayerChoice] = []
+        S_cur, f_cur, n_cur = batch, net.in_channels, n_in
+        P_mpf = 1
+        for i, layer in enumerate(net.layers):
+            n3 = (n_cur,) * 3
+            g = _layer_geom(geom, i, P_mpf)
+            if layer.kind == "conv":
+                fp = layer.out_channels
+                c = conv_cost(prims[i], S_cur, f_cur, fp, n3, layer.size, g)
+                n_next = n_cur - layer.size + 1
+                choices.append(
+                    LayerChoice(i, "conv", prims[i], (S_cur, f_cur, n3),
+                                (S_cur, fp, (n_next,) * 3), c, c.time(hw, chips))
+                )
+                f_cur, n_cur = fp, n_next
+            elif prims[i] == "mpf":
+                if (n_cur + 1) % layer.size:
+                    raise ValueError(f"layer {i}: MPF needs (n+1)%p==0, n={n_cur}")
+                c = mpf_cost(S_cur, f_cur, n3, layer.size, g)
+                n_next, S_next = n_cur // layer.size, S_cur * layer.size**3
+                choices.append(
+                    LayerChoice(i, "pool", "mpf", (S_cur, f_cur, n3),
+                                (S_next, f_cur, (n_next,) * 3), c, c.time(hw, chips))
+                )
+                S_cur, n_cur = S_next, n_next
+                P_mpf *= layer.size
+            else:
+                if prims[i] != "pool":
+                    raise ValueError(
+                        f"layer {i}: unknown pool primitive {prims[i]!r} "
+                        "(expected 'mpf' or 'pool')"
+                    )
+                if n_cur % layer.size:
+                    raise ValueError(f"layer {i}: plain pool needs n%p==0, n={n_cur}")
+                c = pool_cost(S_cur, f_cur, n3, layer.size)
+                choices.append(
+                    LayerChoice(i, "pool", "pool", (S_cur, f_cur, n3),
+                                (S_cur, f_cur, (n_cur // layer.size,) * 3), c,
+                                c.time(hw, chips))
+                )
+                n_cur //= layer.size
+        total = sum(c.time_s for c in choices)
+        vox = batch * float(m * P_mpf) ** 3
+        peak = max(c.cost.peak_bytes for c in choices)
+        if peak > mem:
+            continue
+        if geom is not None and volume_shape is not None:
+            # reuse-capable mix priced against a concrete volume: the memory
+            # model is the streaming schedule's exact simulated peak (the
+            # executor honors a carried ram_budget by streaming)
+            memory = plan_stream_memory(
+                net, prims, m, volume_shape, batch=batch,
+                deep_reuse=deep_reuse, streaming=ram_budget is not None,
+                sweep_axis=ax,
+            )
+        else:
+            memory = _plan_memory_analytic(choices)
+        if ram_budget is not None and memory.device_bytes > ram_budget:
+            if infeasible is not None:
+                infeasible.append(InfeasiblePoint(
+                    strategy_name, prims[first_conv], m, batch, -1,
+                    "exceeds ram_budget", memory.device_bytes, ram_budget,
+                ))
+            continue
+        plan = Plan(
+            net.name, strategy_name, chips, batch, n_in, m,
+            tuple(choices), total, vox, peak,
+            fov=net.field_of_view(), core=m * net.total_pooling(),
+            sweep_axis=ax if sweep_aware else 0,
+            geometry=geom, sweep=counts,
+            memory=memory, ram_budget=ram_budget,
+        )
+        if best is None or plan.throughput > best.throughput:
+            best = plan
+    return best
 
 
 def plan_streamed(
@@ -1029,10 +1096,13 @@ def plan_all_strategies(
     chips: int = 256,
     volume_shape: Optional[Sequence[int]] = None,
     ram_budget: Optional[float] = None,
+    sweep_axis="auto",
 ) -> dict:
     """All strategy searches; ``volume_shape`` makes the single-worker
     search sweep-aware (the multi-chip strategies execute through other
-    schedules and keep context-free costing).
+    schedules and keep context-free costing).  ``sweep_axis`` is passed
+    through to the sweep-aware ``single`` search (``"auto"`` = per-axis
+    argmax; an int pins the sweep axis).
 
     ``devices`` — a pair of ``HardwareSpec`` profiles, e.g.
     ``hw.PAPER_MACHINES`` — adds a ``"hetero"`` entry: the two-backend
@@ -1059,6 +1129,7 @@ def plan_all_strategies(
         "single": plan_single(
             net, hw, volume_shape=volume_shape,
             ram_budget=ram_budget, infeasible=infeasible,
+            sweep_axis=sweep_axis,
         ),
         "streamed": plan_streamed(net, hw, chips=chips),
         "pipeline2": plan_pipeline2(net, hw, chips_per_stage=chips // 2),

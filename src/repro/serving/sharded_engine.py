@@ -1,8 +1,9 @@
 """Sharded volume serving fleet: one sweep partitioned across N workers.
 
 The scale step past the single-device ``VolumeEngine``: each request's
-sweep is partitioned into contiguous runs of x-planes (``tiler.
-plane_shards``), one run per worker of an N-worker mesh.  A shard is
+sweep is partitioned into contiguous runs of sweep planes — working-frame
+axis 0, whatever volume axis the plan or request sweeps (``tiler.
+plane_shards``) — one run per worker of an N-worker mesh.  A shard is
 exactly a window of the single-device sweep schedule — same plane-capped
 chunks (``tiler.chunk_patches``), same strip/full path decisions — because
 the only cross-shard state, the executor's boundary caches, is shipped
@@ -76,7 +77,7 @@ from .volume_engine import VolumeRequest, finish_patch, init_plane_accounting
 
 @dataclass(eq=False)
 class _ShardTask:
-    """One worker's contiguous run of a request's x-planes."""
+    """One worker's contiguous run of a request's sweep planes."""
 
     req: VolumeRequest
     shard: int  # shard index within the request (stable, for stats)
@@ -143,6 +144,7 @@ class ShardedVolumeEngine:
         deep_reuse: bool = True,
         ram_budget: Optional[float] = None,
         streaming: Optional[bool] = True,
+        sweep_axis: Optional[int] = None,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -152,7 +154,7 @@ class ShardedVolumeEngine:
                 use_pallas=use_pallas, fuse_pairs=fuse_pairs,
                 fprime_chunk=fprime_chunk, fuse_os=fuse_os, tuned=tuned,
                 deep_reuse=deep_reuse, ram_budget=ram_budget,
-                streaming=streaming,
+                streaming=streaming, sweep_axis=sweep_axis,
             ))
             for w in range(n_workers)
         ]
@@ -207,6 +209,7 @@ class ShardedVolumeEngine:
     def _dispatch(self, req: VolumeRequest) -> None:
         """Prepare runtime state and fan the request's shards out."""
         base = self.workers[0].executor
+        axis = base.sweep_axis if req.sweep_axis is None else int(req.sweep_axis)
         vol = np.asarray(req.volume, np.float32)
         true_shape = vol.shape[1:]
         if self.bucket_shapes:
@@ -215,7 +218,7 @@ class ShardedVolumeEngine:
             padded = np.pad(vol, pad) if any(p for _, p in pad) else vol
         else:
             shape, padded = true_shape, vol
-        tiling = base.tiling_for(shape)
+        tiling = base.tiling_for(shape, sweep_axis=axis)
         req._tiling = tiling
         # the shared host volume: every worker's sweep scope reads it (the
         # streaming executor keeps it host-side and stages per-plane slabs);
@@ -295,7 +298,9 @@ class ShardedVolumeEngine:
         if not task.started:
             # input staging is per shard: the scope shares the request's
             # host volume; only this shard's slabs ever reach w's device
-            task.token = ex.begin_sweep(req._padded)
+            task.token = ex.begin_sweep(
+                req._padded, sweep_axis=tiling.sweep_axis
+            )
             if task.start_pkg is not None and not task.start_pkg.is_empty():
                 ex.import_handoff(task.token, task.start_pkg)
                 w.halo_bytes_in += task.start_pkg.nbytes

@@ -81,11 +81,18 @@ class VolumeRequest:
     priority: int = 0  # higher = served first (ages up while waiting)
     out: Optional[np.ndarray] = None  # (out_ch, X-FOV+1, ...) when done
     done: bool = False
-    # streaming completion: dense output x-rows [0, final_rows) are FINAL
-    # (every contributing patch done — no later patch can rewrite them).
-    # ``on_strip(lo, hi, strip)`` fires as each new strip finalizes, with
-    # ``strip`` a VIEW of ``out[:, lo:hi]`` — early partial results while
-    # the rest of the volume is still queued.
+    # sweep_axis: VOLUME axis this request's sweep advances on.  None uses
+    # the engine executor's default axis; an explicit non-default axis
+    # needs an overlap-save reuse plan (per-axis prepared states are built
+    # lazily and sweep scopes of different axes never share cache keys, so
+    # mixed-axis requests batch safely in one tick).
+    sweep_axis: Optional[int] = None
+    # streaming completion: dense output rows [0, final_rows) ALONG THE
+    # SWEEP AXIS are FINAL (every contributing patch done — no later patch
+    # can rewrite them).  ``on_strip(lo, hi, strip)`` fires as each new
+    # strip finalizes, with ``strip`` a VIEW of the out slab covering
+    # sweep-axis rows [lo, hi) — early partial results while the rest of
+    # the volume is still queued.
     final_rows: int = 0
     on_strip: Optional[Callable[[int, int, np.ndarray], None]] = None
     # internal runtime state
@@ -132,17 +139,20 @@ def advance_strips(req: VolumeRequest, plane_x0: int) -> None:
     that makes sharded out-of-order completion invisible to callers.
     """
     req._plane_remaining[plane_x0] -= 1
+    ax = 1 + req._tiling.sweep_axis  # volume axis the planes advance on
     while req._next_plane < len(req._plane_order):
         x0 = req._plane_order[req._next_plane]
         if req._plane_remaining[x0] > 0:
             return
         req._next_plane += 1
-        hi = min(final_rows_after_plane(req._tiling, x0), req.out.shape[1])
+        hi = min(final_rows_after_plane(req._tiling, x0), req.out.shape[ax])
         lo = req.final_rows
         if hi > lo:
             req.final_rows = hi
             if req.on_strip is not None:
-                req.on_strip(lo, hi, req.out[:, lo:hi])
+                sl = [slice(None)] * req.out.ndim
+                sl[ax] = slice(lo, hi)
+                req.on_strip(lo, hi, req.out[tuple(sl)])
 
 
 def finish_patch(req: VolumeRequest, plane_x0: int) -> bool:
@@ -210,6 +220,11 @@ class VolumeEngine:
 
     def submit(self, req: VolumeRequest) -> None:
         ex = self.executor
+        axis = ex.sweep_axis if req.sweep_axis is None else int(req.sweep_axis)
+        if axis != ex.sweep_axis and not ex._os_reuse:
+            raise ValueError(
+                "per-request sweep_axis needs an overlap-save reuse plan"
+            )
         vol = np.asarray(req.volume, np.float32)
         true_shape = vol.shape[1:]
         if self.bucket_shapes:
@@ -218,7 +233,7 @@ class VolumeEngine:
             padded = np.pad(vol, pad) if any(p for _, p in pad) else vol
         else:
             shape, padded = true_shape, vol
-        tiling = ex.tiling_for(shape)
+        tiling = ex.tiling_for(shape, sweep_axis=axis)
         req._tiling = tiling
         req._padded = pad_volume(padded, tiling)
         req._patches = deque(range(tiling.n_patches))
@@ -232,7 +247,9 @@ class VolumeEngine:
         # last write finalizes every output row no later plane can touch
         init_plane_accounting(req, tiling)
         if self.device_budget is not None and ex._os_reuse:
-            req._sweep_bytes_est = ex.sweep_bytes_estimate(shape)
+            req._sweep_bytes_est = ex.sweep_bytes_estimate(
+                shape, sweep_axis=axis
+            )
         # the output buffer has the TRUE dense shape; patches over the
         # bucket padding write only their in-range columns (write_core
         # crops), so bucketing never leaks padded voxels into the result
@@ -344,7 +361,9 @@ class VolumeEngine:
             # the same keys and is served from the cache it just filled.
             for req, _ in items:
                 if req._sweep is None:
-                    req._sweep = ex.begin_sweep(req._padded)
+                    req._sweep = ex.begin_sweep(
+                        req._padded, sweep_axis=req._tiling.sweep_axis
+                    )
                     # the sweep owns a device-resident copy now and this
                     # mode never extracts host-side patches: the host
                     # padded copy is dead — free it early

@@ -131,8 +131,34 @@ from .tiler import (
     extract_patch,
     pad_volume,
     predict_sweep_counts,
+    sweep_perm,
     tile_volume,
 )
+
+
+def _permute_conv_params(params, net: ConvNetConfig, perm: Tuple[int, int, int]):
+    """Permute conv kernels into the working frame of a sweep axis.
+
+    The sweep machinery runs in the tiler's working frame (sweep axis =
+    spatial axis 0).  Valid correlation commutes with a joint permutation
+    of data and kernel spatial axes: if ``x_work = transpose(x, perm)``
+    then ``conv(x, w)`` permutes to ``conv(x_work, transpose(w, perm))``
+    — so permuting every conv weight by the SAME spatial permutation as
+    the volume makes the whole compiled stack axis-generic with no kernel
+    changes (pools, bias, ReLU, and MPF recombination are isotropic).
+    Identity perm returns ``params`` unchanged (same objects).
+    """
+    if perm == (0, 1, 2):
+        return params
+    axes = (0, 1, 2 + perm[0], 2 + perm[1], 2 + perm[2])
+    out = []
+    for p, layer in zip(params, net.layers):
+        if layer.kind == "conv" and p is not None:
+            w, b = p
+            out.append((jnp.transpose(w, axes), b))
+        else:
+            out.append(p)
+    return out
 
 
 class _PendingMiss(NamedTuple):
@@ -226,8 +252,19 @@ class PlanExecutor:
         deep_reuse: bool = True,
         ram_budget: Optional[float] = None,
         streaming: Optional[bool] = None,
+        sweep_axis: Optional[int] = None,
     ):
-        self.params = params
+        # default sweep axis: explicit arg > the plan's costed choice > x.
+        # All geometry below lives in that axis's working frame; the conv
+        # weights are permuted to match (see _permute_conv_params), so the
+        # compiled stack keeps its axis-0 machinery unchanged.
+        if sweep_axis is None:
+            sweep_axis = getattr(plan, "sweep_axis", 0) if plan is not None else 0
+        self.sweep_axis = int(sweep_axis)
+        self._orig_params = params
+        self.params = _permute_conv_params(
+            params, net, sweep_perm(self.sweep_axis)
+        )
         self.net = net
         self.plan = plan
         # per-hardware tuned config (repro.tuning): ``"auto"`` loads the
@@ -298,12 +335,13 @@ class PlanExecutor:
         # gets its segment grid pinned to the patch core so x-adjacent
         # patches share segment spectra (cross-patch input-FFT reuse).
         self.compiled: CompiledPlan = compile_plan(
-            params, net, prims=self.prims, n_in=self.n_in,
+            self.params, net, prims=self.prims, n_in=self.n_in,
             use_pallas=self.use_pallas, fuse_pairs=fuse_pairs,
             fprime_chunk=fprime_chunk, plan=plan,
             overlap_seg=self.core if self.prims[0] == "overlap_save" else None,
         )
         self.fuse_pairs = self.compiled.fuse_pairs
+        self._fprime_chunk = fprime_chunk
 
         recombine = self.uses_mpf
 
@@ -391,6 +429,18 @@ class PlanExecutor:
             )
         else:
             self._q_strip = None
+        # per-axis prepared states for mixed-axis serving: every sweep
+        # scope records its axis (``_sweep_axes``); scopes on the default
+        # axis use the primary compiled/strip states, other axes get their
+        # own state pytrees lazily (``_states_for_axis``) — metadata and
+        # jitted step programs are shared, since cubic patches/kernels make
+        # every working frame shape-identical.
+        self._sweep_axes: Dict[int, int] = {}
+        self._axis_states: Dict[int, Tuple[Any, Any]] = {
+            self.sweep_axis: (
+                self.compiled.states, getattr(self, "_strip_states", None)
+            )
+        }
         # device-working-set ledger: prepared states (weights, cached kernel
         # spectra at full AND strip shapes) are resident for the executor's
         # lifetime; sweeps add slabs/caches on top.
@@ -417,9 +467,12 @@ class PlanExecutor:
         """
         return plan_input_size(self.net, self.prims, self.m)
 
-    def tiling_for(self, vol_shape: Sequence[int]) -> VolumeTiling:
+    def tiling_for(
+        self, vol_shape: Sequence[int], *, sweep_axis: Optional[int] = None
+    ) -> VolumeTiling:
         return tile_volume(
-            vol_shape, core=self.core, fov=self.fov, halo=self.halo
+            vol_shape, core=self.core, fov=self.fov, halo=self.halo,
+            sweep_axis=self.sweep_axis if sweep_axis is None else int(sweep_axis),
         )
 
     def bucket_shape(self, vol_shape: Sequence[int]) -> Tuple[int, int, int]:
@@ -447,33 +500,74 @@ class PlanExecutor:
         )
 
     def predict_counts(
-        self, vol_shape: Sequence[int], *, batch: Optional[int] = None
+        self, vol_shape: Sequence[int], *, batch: Optional[int] = None,
+        sweep_axis: Optional[int] = None,
     ) -> SweepCounts:
         """Planner-side prediction of this executor's sweep counters.
 
         Simulates the sweep caches over the exact tiling ``run`` would
-        use; the returned counts equal the measured ``last_stats``
-        counters 1:1 (the sweep-aware planning acceptance property).
+        use (same ``sweep_axis``, default the executor's); the returned
+        counts equal the measured ``last_stats`` counters 1:1 (the
+        sweep-aware planning acceptance property, for every axis).
         """
         if not self._os_reuse:
             raise ValueError("predict_counts needs an overlap-save reuse plan")
-        tiling = self.tiling_for(vol_shape)
+        tiling = self.tiling_for(vol_shape, sweep_axis=sweep_axis)
         return predict_sweep_counts(
             tiling, batch=batch or self.batch,
             deep_reuse=self.deep_reuse, strip_segments=self._q_strip,
         )
 
-    def _build_strip_plan(self):
+    def _states_for_axis(self, axis: int):
+        """Prepared state pytrees ``(states, strip_states)`` for one axis.
+
+        Metadata (segment specs, FFT shapes, pool modes) is axis-
+        independent — patches and kernels are cubic, so every working
+        frame is shape-identical and all axes share the same jitted step
+        functions (and their compiled programs).  Only the numeric state
+        buffers differ: weights and cached kernel spectra permuted into
+        that axis's working frame.  Non-default axes are built lazily and
+        ledger-accounted like the primary states.
+        """
+        got = self._axis_states.get(axis)
+        if got is None:
+            p_ax = _permute_conv_params(
+                self._orig_params, self.net, sweep_perm(axis)
+            )
+            compiled = compile_plan(
+                p_ax, self.net, prims=self.prims, n_in=self.n_in,
+                use_pallas=self.use_pallas, fuse_pairs=self.fuse_pairs,
+                fprime_chunk=self._fprime_chunk, plan=self.plan,
+                overlap_seg=(
+                    self.core if self.prims[0] == "overlap_save" else None
+                ),
+            )
+            strip_states = None
+            if self.deep_reuse:
+                layers, _ = self._build_strip_plan(p_ax)
+                strip_states = [
+                    pl.state if pl is not None else None for pl in layers
+                ]
+            got = (compiled.states, strip_states)
+            self._axis_states[axis] = got
+            self._ledger.alloc(_tree_nbytes(got[0], strip_states or []))
+        return got
+
+    def _build_strip_plan(self, params=None):
         """One-time setup of the interior-patch strip walk (layers >= 1).
 
         For each layer below the input, bind its primitive to the strip
-        extent an interior patch runs: ``new_x + size - 1`` x-columns (the
-        newly computed columns plus the cached activation halo) at the
-        full-walk y/z extents.  Returns ``(layers, info)`` where
-        ``layers[i]`` is the strip ``PreparedLayer`` (None at 0 — layer 0
-        runs through the segment-spectra tail) and ``info[i] = (halo
-        columns, fragment batch multiplier at this layer's input)``.
+        extent an interior patch runs: ``new_x + size - 1`` sweep-axis
+        columns (the newly computed columns plus the cached activation
+        halo) at the full-walk cross extents.  Returns ``(layers, info)``
+        where ``layers[i]`` is the strip ``PreparedLayer`` (None at 0 —
+        layer 0 runs through the segment-spectra tail) and ``info[i] =
+        (halo columns, fragment batch multiplier at this layer's input)``.
+        ``params`` defaults to the executor's working-frame params; pass
+        another axis's permuted params to build that axis's strip states.
         """
+        if params is None:
+            params = self.params
         n = self.n_in  # full-walk spatial extent entering each layer
         P_cur, frag = 1, 1
         layers: List[Optional[PreparedLayer]] = [None] * len(self.net.layers)
@@ -485,7 +579,7 @@ class PlanExecutor:
                 w_in = new_x + h
                 assert w_in <= n, (i, w_in, n)
                 if layer.kind == "conv":
-                    w, b = self.params[i]
+                    w, b = params[i]
                     layers[i] = conv_primitive(self.prims[i]).setup(
                         w, b, (w_in, n, n), index=i
                     )
@@ -508,16 +602,23 @@ class PlanExecutor:
 
     # -- overlap-save sweep cache -------------------------------------------
 
-    def begin_sweep(self, padded: np.ndarray) -> int:
+    def begin_sweep(
+        self, padded: np.ndarray, *, sweep_axis: Optional[int] = None
+    ) -> int:
         """Open a fresh spectra-reuse scope (one volume sweep / request).
 
         Scoping the cache to a sweep is what makes reuse safe: segment keys
-        are absolute coordinates *within one padded volume*, so spectra
-        must never leak across requests.  The volume is extended along x so
+        are absolute coordinates *within one padded volume swept on one
+        axis*, so spectra must never leak across requests — and distinct
+        sweep axes are simply distinct scopes, which is what lets one
+        serving tick batch mixed-axis requests with no key collisions.
+        ``padded`` must already be in ``sweep_axis``'s working frame
+        (``tiler.pad_volume`` of a matching tiling); the default is the
+        executor's axis.  The volume is extended along working axis 0 so
         the aligned grid's tail segments stay in bounds (the extra voxels
         are zeros; exact, because the outputs they influence are cropped),
         then either uploaded to the device once (dense mode) or kept in
-        HOST RAM (streaming mode) — the streaming sweep stages one x-slab
+        HOST RAM (streaming mode) — the streaming sweep stages one slab
         per plane on demand (``_slab``), so peak device bytes scale with
         the slab, not the volume.
         """
@@ -527,6 +628,9 @@ class PlanExecutor:
         self._sweep_counter += 1
         token = self._sweep_counter
         self._sweeps[token] = {}
+        self._sweep_axes[token] = (
+            self.sweep_axis if sweep_axis is None else int(sweep_axis)
+        )
         if self.streaming:
             host = np.asarray(padded, np.float32)
             if short:
@@ -542,6 +646,7 @@ class PlanExecutor:
         return self._sweep_counter
 
     def end_sweep(self, token: Optional[int]) -> None:
+        self._sweep_axes.pop(token, None)
         vol = self._sweep_vols.pop(token, None)
         if vol is not None:
             self._ledger.free(vol.nbytes)
@@ -931,6 +1036,11 @@ class PlanExecutor:
         """
         spec0 = self.compiled.layers[0].os_spec
         cache = self._sweeps[token]
+        # the sweep scope's axis picks the state pytrees (working-frame
+        # weights + kernel spectra); the jitted step programs are shared
+        states, strip_states = self._states_for_axis(
+            self._sweep_axes.get(token, self.sweep_axis)
+        )
         n_seg = spec0.n_segments
         q = self._q_strip if strip else n_seg
         misses: List[Tuple[int, int, int]] = []
@@ -991,7 +1101,7 @@ class PlanExecutor:
                  vol.shape, len(parents))
             )
             out, F_m, halos = self._jit_os_strip_step(
-                self.compiled.states, self._strip_states, vol,
+                states, strip_states, vol,
                 starts, tuple(parents), halos_in, pattern=tuple(pattern),
             )
             self._deep_strips += len(metas)
@@ -1001,7 +1111,7 @@ class PlanExecutor:
                  vol.shape, len(parents))
             )
             out, F_m, halos = self._jit_os_step(
-                self.compiled.states, vol,
+                states, vol,
                 starts, tuple(parents), pattern=tuple(pattern),
             )
             self._deep_fulls += len(metas)
@@ -1126,21 +1236,36 @@ class PlanExecutor:
             self._store_spectra(
                 token, self._sweeps[token], keys_m, F_all_miss[:M]
             )
-        # pass 2: materialize rows; ONE stack builds the batch.
-        flat = []
-        for (token, _, _), per_seg in zip(meta, slots):
-            cache = self._sweeps[token]
-            for key, F in per_seg:
-                if isinstance(F, _PendingMiss):
-                    F = cache[key]  # _store_spectra filed the real ref
-                flat.append(F.parent[F.idx])
-        F_all = jnp.stack(flat).reshape(
-            (len(slots), spec0.n_segments) + flat[0].shape
-        )  # (S, n_seg, f, ña, ñb, ñc)
-        self._record_trace(("oswalk", F_all.shape))
-        out, _ = self._jit_os_walk(self.compiled.states, F_all)
-        self._ledger.transient(F_all.nbytes + out.nbytes)
-        return np.asarray(out)
+        # pass 2: materialize rows and walk.  Requests sweeping different
+        # axes need different state pytrees (working-frame weights), so the
+        # tick sub-batches per axis — one stacked walk per axis group,
+        # outputs reassembled in meta order.  Single-axis ticks (the common
+        # case) keep the one-stack walk.
+        by_axis: Dict[int, List[int]] = {}
+        for i, (token, _, _) in enumerate(meta):
+            axis = self._sweep_axes.get(token, self.sweep_axis)
+            by_axis.setdefault(axis, []).append(i)
+        outs: List[Optional[np.ndarray]] = [None] * len(slots)
+        for axis in sorted(by_axis):
+            rows = by_axis[axis]
+            flat = []
+            for i in rows:
+                cache = self._sweeps[meta[i][0]]
+                for key, F in slots[i]:
+                    if isinstance(F, _PendingMiss):
+                        F = cache[key]  # _store_spectra filed the real ref
+                    flat.append(F.parent[F.idx])
+            F_all = jnp.stack(flat).reshape(
+                (len(rows), spec0.n_segments) + flat[0].shape
+            )  # (S_axis, n_seg, f, ña, ñb, ñc)
+            self._record_trace(("oswalk", F_all.shape))
+            states, _ = self._states_for_axis(axis)
+            out, _ = self._jit_os_walk(states, F_all)
+            self._ledger.transient(F_all.nbytes + out.nbytes)
+            out = np.asarray(out)
+            for j, i in enumerate(rows):
+                outs[i] = out[j]
+        return np.stack(outs)
 
     # -- compiled patch-batch kernels ---------------------------------------
 
@@ -1205,12 +1330,28 @@ class PlanExecutor:
 
     # -- volume sweep --------------------------------------------------------
 
-    def run(self, vol: np.ndarray) -> np.ndarray:
-        """Sweep (f, X, Y, Z) -> dense (out_ch, X-FOV+1, Y-FOV+1, Z-FOV+1)."""
+    def run(
+        self, vol: np.ndarray, *, sweep_axis: Optional[int] = None
+    ) -> np.ndarray:
+        """Sweep (f, X, Y, Z) -> dense (out_ch, X-FOV+1, Y-FOV+1, Z-FOV+1).
+
+        Output is always in the VOLUME frame, whatever the sweep axis.
+        ``sweep_axis`` overrides the executor's default for this run
+        (overlap-save reuse plans only — the split-strategy and non-reuse
+        paths run on the default axis's compiled states).
+        """
         vol = np.asarray(vol, np.float32)
-        tiling = self.tiling_for(vol.shape[1:])
-        padded = pad_volume(vol, tiling)
-        out = np.empty((self.out_channels,) + tiling.out_shape, np.float32)
+        axis = self.sweep_axis if sweep_axis is None else int(sweep_axis)
+        if axis != self.sweep_axis and not (self._os_reuse and self.theta < 0):
+            raise ValueError(
+                "per-run sweep_axis override needs an overlap-save reuse plan"
+            )
+        tiling = self.tiling_for(vol.shape[1:], sweep_axis=axis)
+        padded = pad_volume(vol, tiling)  # working frame (sweep axis first)
+        out = np.empty(
+            (self.out_channels,) + tiling.to_volume_frame(tiling.out_shape),
+            np.float32,
+        )
 
         self._os_misses = self._os_hits = self._os_mad_segments = 0
         self._deep_strips = self._deep_fulls = 0
@@ -1221,7 +1362,7 @@ class PlanExecutor:
         # execution modes pay per batch (patch extraction + transfer), so
         # it belongs inside the timed region for fair measured vox/s
         sweep = (
-            self.begin_sweep(padded)
+            self.begin_sweep(padded, sweep_axis=axis)
             if self._os_reuse and self.theta < 0 else None
         )
         try:
@@ -1274,7 +1415,7 @@ class PlanExecutor:
             # accounting, reproduced by predict_memory / Plan.memory)
             "peak_device_bytes": self._ledger.peak,
             "predicted_peak_device_bytes": (
-                self.predict_memory(vol.shape[1:]).device_bytes
+                self.predict_memory(vol.shape[1:], sweep_axis=axis).device_bytes
                 if self._os_reuse and self.theta < 0
                 else float("nan")
             ),
@@ -1288,54 +1429,71 @@ class PlanExecutor:
 
     # -- memory model --------------------------------------------------------
 
-    def predict_memory(self, vol_shape: Sequence[int]):
+    def predict_memory(
+        self, vol_shape: Sequence[int], *, sweep_axis: Optional[int] = None
+    ):
         """Predicted peak device working set for sweeping ``vol_shape``.
 
         The planner-side simulation (``planner.plan_stream_memory``) run
-        for THIS executor's mode (streaming or dense): the returned
+        for THIS executor's mode (streaming or dense) and the given sweep
+        axis (default the executor's): the returned
         ``MemoryFootprint.device_bytes`` equals what ``run`` will record
         in ``last_stats["peak_device_bytes"]`` up to the analytic-vs-
         measured state rounding (pinned within 10% by the test suite).
-        Memoized per shape — the simulation is deterministic, and ``run``
-        consults it every sweep for the predicted-peak stat.
+        Memoized per (shape, axis) — the simulation is deterministic, and
+        ``run`` consults it every sweep for the predicted-peak stat.
         """
         if not self._os_reuse:
             raise ValueError("predict_memory needs an overlap-save reuse plan")
-        key = tuple(int(x) for x in vol_shape)
+        axis = self.sweep_axis if sweep_axis is None else int(sweep_axis)
+        key = tuple(int(x) for x in vol_shape) + (axis,)
         hit = self._predict_memory_cache.get(key)
         if hit is not None:
             return hit
         from ..core.planner import plan_stream_memory
 
         mem = plan_stream_memory(
-            self.net, self.prims, self.m, key,
+            self.net, self.prims, self.m, key[:3],
             batch=self.batch, deep_reuse=self.deep_reuse,
-            streaming=self.streaming,
+            streaming=self.streaming, sweep_axis=axis,
         )
         self._predict_memory_cache[key] = mem
         return mem
 
-    def sweep_bytes_estimate(self, vol_shape: Sequence[int]) -> float:
+    def sweep_bytes_estimate(
+        self, vol_shape: Sequence[int], *, sweep_axis: Optional[int] = None
+    ) -> float:
         """Device bytes OPENING a sweep over ``vol_shape`` would add.
 
         The serving engine's admission estimate: predicted peak minus the
         always-resident prepared states (already counted in the ledger).
         """
-        mem = self.predict_memory(vol_shape)
+        mem = self.predict_memory(vol_shape, sweep_axis=sweep_axis)
         return mem.device_bytes - mem.spectra_bytes
 
     def write_core(self, out, tiling, spec, y) -> None:
-        """Crop a patch's dense core (out_ch, core³) into the output."""
-        x, yy, z = spec.start
+        """Crop a patch's dense core (out_ch, core³) into the output.
+
+        ``spec``/``y`` are in the tiling's working frame; ``out`` is the
+        VOLUME-frame dense output (possibly the true un-bucketed crop).
+        Each working axis clips against the matching volume axis's extent
+        and, for non-identity frames, the cropped core transposes back —
+        the only place sweep output re-enters volume coordinates.
+        """
         c = tiling.core
-        sl = np.s_[
-            x : min(x + c, out.shape[1]),
-            yy : min(yy + c, out.shape[2]),
-            z : min(z + c, out.shape[3]),
-        ]
-        out[:, sl[0], sl[1], sl[2]] = y[
-            :, : sl[0].stop - x, : sl[1].stop - yy, : sl[2].stop - z
-        ]
+        perm, inv = tiling.perm, tiling.inv_perm
+        sls = []
+        for i in range(3):
+            s = spec.start[i]
+            sls.append(slice(s, min(s + c, out.shape[1 + perm[i]])))
+        y = y[:, : sls[0].stop - sls[0].start,
+              : sls[1].stop - sls[1].start, : sls[2].stop - sls[2].start]
+        if perm == (0, 1, 2):
+            out[:, sls[0], sls[1], sls[2]] = y
+        else:
+            out[(slice(None),) + tuple(sls[inv[a]] for a in range(3))] = (
+                np.transpose(y, (0,) + tuple(1 + inv[a] for a in range(3)))
+            )
 
     def _run_batched(self, padded, tiling, out, sweep=None):
         S = self.batch

@@ -29,6 +29,19 @@ makes the same grid serve MPF plans (extent = n_in) and plain-pool
 baseline plans (extent = n_in + P - 1, swept at P³ offsets by the
 executor).
 
+Working frame (axis-generic sweeps): the sweep may advance along any
+volume axis.  ``tile_volume(..., sweep_axis=a)`` permutes the volume
+extents so the sweep axis becomes **working axis 0** and stores ALL
+geometry — ``vol_shape``, ``out_shape``, ``pad``, patch starts, segment
+keys — in that working frame.  Every consumer of a tiling (executor
+caches, chunk scheduling, plane shards, the sweep simulations below)
+keeps its existing axis-0 indexing and is therefore axis-generic for
+free; only the two volume-frame boundaries translate:
+``pad_volume`` permutes input volumes *into* the working frame, and the
+executor's ``write_core`` permutes output cores back *out* of it
+(``VolumeTiling.perm``/``inv_perm``).  ``sweep_axis=0`` is the identity
+frame — bit-for-bit the pre-existing x-sweep behaviour.
+
 Overlap-save mode: ``tile_volume(..., halo=HaloSpec(...))`` additionally
 describes the layer-0 overlap-save segment grid each patch carries — the
 patch *core* plus the halo segmentation shared with its x-neighbours.
@@ -68,15 +81,27 @@ class PatchSpec:
     start: Tuple[int, int, int]
 
 
+def sweep_perm(sweep_axis: int) -> Tuple[int, int, int]:
+    """Working→volume axis map: working axis i is volume axis perm[i].
+
+    The sweep axis leads; the other two axes follow in ascending volume
+    order.  ``sweep_axis=0`` is the identity ``(0, 1, 2)``.
+    """
+    if sweep_axis not in (0, 1, 2):
+        raise ValueError(f"sweep_axis must be 0, 1 or 2, got {sweep_axis!r}")
+    return (sweep_axis,) + tuple(b for b in range(3) if b != sweep_axis)
+
+
 @dataclass(frozen=True)
 class HaloSpec:
-    """Layer-0 overlap-save segmentation a patch shares with x-neighbours.
+    """Layer-0 overlap-save segmentation a patch shares with sweep-neighbours.
 
-    ``rel_starts`` are segment starts along axis 0 relative to the patch
-    start (mirroring ``core.overlap_save.OverlapSaveSpec.starts``); each
-    segment spans ``seg_extent`` input voxels and the full patch extent on
-    the y/z axes.  When ``seg_core`` divides the tiling ``core``, the
-    aligned segments of x-adjacent patches land on identical absolute
+    ``rel_starts`` are segment starts along working axis 0 (the sweep
+    axis) relative to the patch start (mirroring
+    ``core.overlap_save.OverlapSaveSpec.starts``); each segment spans
+    ``seg_extent`` input voxels and the full patch extent on the two
+    cross axes.  When ``seg_core`` divides the tiling ``core``, the
+    aligned segments of sweep-adjacent patches land on identical absolute
     coordinates — the shared halo the executor's spectra cache exploits.
     """
 
@@ -87,29 +112,57 @@ class HaloSpec:
 
 @dataclass(frozen=True)
 class VolumeTiling:
-    """The full patch grid plus the geometry needed to reassemble output."""
+    """The full patch grid plus the geometry needed to reassemble output.
 
-    vol_shape: Tuple[int, int, int]  # true input extents (X, Y, Z)
+    All spatial tuples (``vol_shape``/``out_shape``/``pad``/patch starts)
+    live in the WORKING frame: working axis 0 is the sweep axis
+    (``sweep_axis`` names the volume axis it came from; ``perm``/
+    ``inv_perm`` translate between the frames).
+    """
+
+    vol_shape: Tuple[int, int, int]  # true input extents, working frame
     out_shape: Tuple[int, int, int]  # dense output extents (X-FOV+1, ...)
-    pad: Tuple[int, int, int]  # zero padding appended per axis
+    pad: Tuple[int, int, int]  # zero padding appended per working axis
     extent: int  # input voxels per patch per axis
     core: int  # dense output voxels per patch per axis
     fov: int
     patches: Tuple[PatchSpec, ...]
     halo: Optional[HaloSpec] = None  # overlap-save mode (None: plain tiling)
+    sweep_axis: int = 0  # volume axis the sweep advances on
 
     @property
     def n_patches(self) -> int:
         return len(self.patches)
 
+    @property
+    def perm(self) -> Tuple[int, int, int]:
+        """Working→volume axis map (``sweep_perm(self.sweep_axis)``)."""
+        return sweep_perm(self.sweep_axis)
+
+    @property
+    def inv_perm(self) -> Tuple[int, int, int]:
+        """Volume→working axis map: volume axis a is working axis inv[a]."""
+        p = self.perm
+        inv = [0, 0, 0]
+        for i, a in enumerate(p):
+            inv[a] = i
+        return tuple(inv)
+
+    def to_volume_frame(
+        self, shape: Sequence[int]
+    ) -> Tuple[int, int, int]:
+        """Map a working-frame spatial triple back to volume-frame order."""
+        inv = self.inv_perm
+        return tuple(shape[inv[a]] for a in range(3))
+
     def segment_keys(self, spec: PatchSpec) -> Tuple[Tuple[int, int, int], ...]:
         """Absolute identities of a patch's layer-0 overlap-save segments.
 
-        Key = (absolute x start of the segment, patch y start, patch z
-        start): a segment is the input window
+        Key = (absolute working-axis-0 start of the segment, patch cross
+        starts): a segment is the working-frame input window
         ``[x, x+seg_extent) × [y, y+extent) × [z, z+extent)``, so equal keys
         mean equal input windows — and therefore equal spectra — across
-        patches of the same (padded) volume.
+        patches of the same (padded) volume swept on the same axis.
         """
         if self.halo is None:
             raise ValueError("tiling was not built in overlap-save mode")
@@ -136,23 +189,28 @@ def _axis_starts(size: int, core: int, fov: int, extent: int) -> List[int]:
 
 def tile_volume(
     vol_shape: Sequence[int], *, core: int, fov: int,
-    halo: Optional[HaloSpec] = None,
+    halo: Optional[HaloSpec] = None, sweep_axis: int = 0,
 ) -> VolumeTiling:
     """Tile an (X, Y, Z) volume for patches of dense-core ``core`` per axis.
 
     ``halo`` switches on overlap-save mode: the tiling then also hands the
     executor each patch's core plus the layer-0 segment grid shared with
-    its x-neighbours (see ``VolumeTiling.segment_keys``).
+    its sweep-neighbours (see ``VolumeTiling.segment_keys``).
+    ``sweep_axis`` picks the volume axis the sweep advances on; the
+    returned tiling stores every shape and patch start in the working
+    frame with that axis first (see the module docstring).
     """
     if len(vol_shape) != 3:
         raise ValueError(f"expected (X, Y, Z) spatial shape, got {vol_shape}")
     if core < 1 or fov < 1:
         raise ValueError(f"invalid geometry core={core} fov={fov}")
+    perm = sweep_perm(sweep_axis)
+    vol_shape = tuple(vol_shape[a] for a in perm)
     extent = core + fov - 1
     for ax, x in enumerate(vol_shape):
         if x < fov:
             raise ValueError(
-                f"axis {ax} extent {x} < FOV {fov}: no valid output exists"
+                f"axis {perm[ax]} extent {x} < FOV {fov}: no valid output exists"
             )
     pad = tuple(max(0, extent - x) for x in vol_shape)
     out_shape = tuple(x - (fov - 1) for x in vol_shape)
@@ -169,6 +227,7 @@ def tile_volume(
         fov=fov,
         patches=patches,
         halo=halo,
+        sweep_axis=sweep_axis,
     )
 
 
@@ -551,7 +610,8 @@ def predict_shard_handoff(
 
 
 def tile_for_net(
-    vol_shape: Sequence[int], net: ConvNetConfig, m: int
+    vol_shape: Sequence[int], net: ConvNetConfig, m: int,
+    *, sweep_axis: int = 0,
 ) -> VolumeTiling:
     """Tiling for fragment size ``m`` of ``net`` (checks MPF divisibility)."""
     n_in = net.valid_input_size(m)
@@ -560,11 +620,24 @@ def tile_for_net(
             f"n_in={n_in} violates the MPF divisibility constraints of {net.name}"
         )
     core = m * net.total_pooling()
-    return tile_volume(vol_shape, core=core, fov=net.field_of_view())
+    return tile_volume(
+        vol_shape, core=core, fov=net.field_of_view(), sweep_axis=sweep_axis
+    )
 
 
 def pad_volume(vol: np.ndarray, tiling: VolumeTiling) -> np.ndarray:
-    """Zero-pad (f, X, Y, Z) at each axis end per the tiling (no-op if full)."""
+    """Permute (f, X, Y, Z) into the tiling's working frame and zero-pad.
+
+    The returned array has the sweep axis as spatial axis 0 (identity for
+    ``sweep_axis=0``) and each working axis padded at its far end per the
+    tiling (no-op if full) — exactly the frame every tiling coordinate
+    (patch starts, segment keys, slab windows) addresses.
+    """
+    perm = tiling.perm
+    if perm != (0, 1, 2):
+        vol = np.ascontiguousarray(
+            np.transpose(vol, (0, 1 + perm[0], 1 + perm[1], 1 + perm[2]))
+        )
     if not any(tiling.pad):
         return vol
     widths = [(0, 0)] + [(0, p) for p in tiling.pad]

@@ -1,0 +1,310 @@
+"""Axis-generic sweeps: reuse and planning on any volume axis (ISSUE 10).
+
+The tentpole acceptance properties of making the sweep machinery
+axis-generic.  All sweep state — segment spectra, activation halos,
+strips, slabs, shard windows — lives in the tiler's WORKING frame (the
+permutation that brings the sweep axis to position 0), so for every
+``sweep_axis`` in {x, y, z}:
+
+* the dense-materialized executor equals the reference conv and the
+  host-staged streaming executor equals the dense path **bitwise**, and
+  ``predict_counts`` matches ``last_stats`` EXACTLY — across interior,
+  shifted-edge, and ragged tilings at batch 1 and 3;
+* an axis-a sweep is **bitwise** identical to an axis-0 sweep of the
+  pre-permuted volume (the working-frame identity: the whole pre-ISSUE-10
+  runtime is the sweep_axis=0 special case);
+* the planner prices the sweep-count simulation per candidate axis and
+  records the argmax on ``Plan.sweep_axis`` — on a thin slab the chosen
+  axis strictly beats the forced-x fallback;
+* mixed-axis requests batch safely in one ``VolumeEngine`` tick (sweep
+  scopes of different axes never share cache keys), and the sharded
+  fleet's ``HaloPackage`` parity holds for N ∈ {1, 2, 3} on a non-x axis
+  with measured halo bytes exactly equal to ``predict_shard_handoff``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ConvLayerSpec as L, ConvNetConfig
+from repro.core import convnet, planner
+from repro.core.hw import TPU_V5E
+from repro.serving import VolumeEngine, VolumeRequest
+from repro.serving.sharded_engine import ShardedVolumeEngine
+from repro.volume import PlanExecutor
+from repro.volume.tiler import sweep_perm
+
+NET = ConvNetConfig(
+    "sweep-toy", 1,
+    (L("conv", 3, 4), L("pool", 2), L("conv", 3, 4), L("pool", 2), L("conv", 3, 2)),
+)
+MIX = [
+    "overlap_save" if i == 0 else ("fft_cached" if l.kind == "conv" else "mpf")
+    for i, l in enumerate(NET.layers)
+]
+FOV = NET.field_of_view()
+CORE = NET.total_pooling()  # m = 1
+AXES = (0, 1, 2)
+
+# every axis has >= 2 planes so streaming/strips engage whatever axis
+# sweeps; the anisotropy differs per shape so the three working frames
+# are genuinely distinct tilings
+SHAPES = {
+    "interior": (4 * CORE + FOV - 1, 3 * CORE + FOV - 1, 2 * CORE + FOV - 1),
+    "shifted": (3 * CORE + 1 + FOV - 1, 2 * CORE + FOV - 1, 2 * CORE + FOV - 1),
+    "ragged": (3 * CORE + 2 + FOV - 1, 2 * CORE + 3 + FOV - 1, 2 * CORE + 1 + FOV - 1),
+}
+
+# x deliberately SHORT (single plane: zero interior strips on a forced-x
+# sweep) and y long — the anisotropic case where the axis argmax pays
+THIN_SLAB = (CORE + FOV - 1, 4 * CORE + 3 + FOV - 1, 2 * CORE + FOV - 1)
+
+COUNTER_KEYS = (
+    ("os_seg_fft", "seg_fft"),
+    ("os_seg_hits", "seg_hits"),
+    ("os_mad_segments", "mad_segments"),
+    ("deep_strip_patches", "strip_patches"),
+    ("deep_full_patches", "full_patches"),
+)
+
+
+def _dense(params, vol):
+    return np.asarray(
+        convnet.apply_dense_reference(params, NET, jnp.asarray(vol)[None])[0]
+    )
+
+
+def _assert_counters_exact(stats, pred):
+    for skey, pkey in COUNTER_KEYS:
+        assert stats[skey] == getattr(pred, pkey), (skey, stats[skey], pred)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return convnet.init_params(jax.random.PRNGKey(0), NET)
+
+
+# -- per-axis exactness: dense == reference, streamed == dense bitwise,
+#    predicted counters == measured counters ---------------------------------
+
+
+@pytest.mark.parametrize("axis", AXES)
+@pytest.mark.parametrize("batch", [1, 3])
+@pytest.mark.parametrize("shape", SHAPES.values(), ids=SHAPES.keys())
+def test_axis_parity_and_counter_exactness(params, rng, shape, batch, axis):
+    vol = rng.normal(size=(1,) + shape).astype(np.float32)
+    dense = PlanExecutor(
+        params, NET, prims=MIX, m=1, batch=batch, sweep_axis=axis
+    )
+    out_d = dense.run(vol)
+    np.testing.assert_allclose(out_d, _dense(params, vol), atol=1e-3)
+    pred = dense.predict_counts(shape)
+    _assert_counters_exact(dense.last_stats, pred)
+    # host-staged streaming on the same axis: bitwise-equal, and the
+    # axis-aware memory model stays exact (within the 10% analytic-state
+    # rounding the memory suite pins for axis 0)
+    stream = PlanExecutor(
+        params, NET, prims=MIX, m=1, batch=batch, streaming=True,
+        sweep_axis=axis,
+    )
+    assert stream.streaming
+    out_s = stream.run(vol)
+    assert np.array_equal(out_d, out_s)
+    _assert_counters_exact(stream.last_stats, pred)
+    measured = stream.last_stats["peak_device_bytes"]
+    predicted = stream.predict_memory(shape).device_bytes
+    assert abs(measured - predicted) / predicted <= 0.10
+    # scopes fully released on every axis
+    assert not stream._sweeps and not stream._halo_caches
+
+
+def test_working_frame_identity(params, rng):
+    """An axis-a sweep IS the axis-0 sweep of the jointly permuted problem
+    (volume AND conv weights brought into the working frame): outputs are
+    bitwise equal after permuting back.  This pins the design — one
+    working-frame code path (the pre-ISSUE-10 runtime, verbatim), no
+    per-axis kernels."""
+    from repro.volume.executor import _permute_conv_params
+
+    shape = SHAPES["ragged"]
+    vol = rng.normal(size=(1,) + shape).astype(np.float32)
+    for axis in (1, 2):
+        perm = sweep_perm(axis)
+        vol_w = np.ascontiguousarray(
+            np.transpose(vol, (0, 1 + perm[0], 1 + perm[1], 1 + perm[2]))
+        )
+        params_w = _permute_conv_params(params, NET, perm)
+        ref = PlanExecutor(params_w, NET, prims=MIX, m=1, batch=3).run(vol_w)
+        got = PlanExecutor(
+            params, NET, prims=MIX, m=1, batch=3, sweep_axis=axis
+        ).run(vol)
+        inv = [perm.index(a) for a in range(3)]
+        # same working frame -> identical op sequence -> identical bits
+        assert np.array_equal(
+            got, np.transpose(ref, (0, 1 + inv[0], 1 + inv[1], 1 + inv[2]))
+        )
+
+
+def test_per_run_axis_override(params, rng):
+    """One executor serves sweeps on any axis: the per-run override
+    compiles the off-axis states lazily and matches a natively-built
+    executor bitwise; non-reuse plans reject the override."""
+    shape = SHAPES["shifted"]
+    vol = rng.normal(size=(1,) + shape).astype(np.float32)
+    ex = PlanExecutor(params, NET, prims=MIX, m=1, batch=3)
+    ex.run(vol)
+    got = ex.run(vol, sweep_axis=2)
+    native = PlanExecutor(params, NET, prims=MIX, m=1, batch=3, sweep_axis=2)
+    assert np.array_equal(got, native.run(vol))
+    _assert_counters_exact(ex.last_stats, ex.predict_counts(shape, sweep_axis=2))
+    assert not ex._sweeps and not ex._sweep_axes
+    no_reuse = PlanExecutor(
+        params, NET, prims=["fft_cached" if l.kind == "conv" else "mpf"
+                            for l in NET.layers], m=1, batch=3,
+    )
+    with pytest.raises(ValueError, match="sweep_axis"):
+        no_reuse.run(vol, sweep_axis=1)
+
+
+# -- planner: per-axis pricing + argmax ---------------------------------------
+
+
+def test_planner_picks_best_axis_on_thin_slab(params, rng):
+    """The perf claim: on an anisotropic slab the argmax axis strictly
+    beats forced-x (which has zero interior strips here), and the chosen
+    plan's predicted counters still match the executor exactly."""
+    auto = planner.plan_fixed(
+        NET, TPU_V5E, MIX, m=1, batch=3, volume_shape=THIN_SLAB
+    )
+    forced = planner.plan_fixed(
+        NET, TPU_V5E, MIX, m=1, batch=3, volume_shape=THIN_SLAB, sweep_axis=0
+    )
+    assert auto.sweep_axis != 0
+    assert forced.sweep_axis == 0 and forced.sweep.strip_patches == 0
+    assert auto.sweep.strip_patches > 0
+    assert auto.throughput > forced.throughput
+    ex = PlanExecutor(params, NET, auto)  # inherits the plan's axis
+    assert ex.sweep_axis == auto.sweep_axis
+    vol = rng.normal(size=(1,) + THIN_SLAB).astype(np.float32)
+    out = ex.run(vol)
+    np.testing.assert_allclose(out, _dense(params, vol), atol=1e-3)
+    _assert_counters_exact(ex.last_stats, auto.sweep)
+
+
+def test_plan_single_search_is_axis_aware():
+    """``plan_single``'s sweep-aware search records the argmax axis and a
+    geometry simulated ON that axis; a cubic volume dedupes to one
+    candidate (axis 0) by working-frame symmetry."""
+    thin = planner.plan_single(
+        NET, TPU_V5E, batches=(2,), max_m=2, volume_shape=THIN_SLAB,
+        conv_prims=("overlap_save",),
+    )
+    assert thin.sweep_axis == thin.geometry.sweep_axis != 0
+    cube = planner.plan_single(
+        NET, TPU_V5E, batches=(2,), max_m=2,
+        volume_shape=(2 * CORE + FOV - 1,) * 3,
+        conv_prims=("overlap_save",),
+    )
+    assert cube.sweep_axis == 0
+    assert planner._axis_candidates((2 * CORE + FOV - 1,) * 3, "auto") == (0,)
+    assert planner._axis_candidates(THIN_SLAB, "auto") == (0, 1, 2)
+    assert planner._axis_candidates(THIN_SLAB, 2) == (2,)
+
+
+# -- serving: mixed-axis ticks, sharded parity off-axis -----------------------
+
+
+def _run_mixed_pair(params, vol_a, vol_b, batch):
+    """Serve (A axis-1, B axis-2) on one engine; return (outs, strips, engine)."""
+    eng = VolumeEngine(params, NET, prims=MIX, m=1, batch=batch)
+    strips = {1: [], 2: []}
+    reqs = [
+        VolumeRequest(
+            rid=ax, volume=vol, sweep_axis=ax,
+            on_strip=lambda lo, hi, s, ax=ax: strips[ax].append(s.copy()),
+        )
+        for ax, vol in ((1, vol_a), (2, vol_b))
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return [r.out.copy() for r in reqs], strips, eng
+
+
+def test_mixed_axis_requests_batch_safely(params, rng):
+    """Two queued requests sweeping different axes share ONE engine tick:
+    separate sweep scopes, no cache-key collisions, strips streamed along
+    each request's own sweep axis.
+
+    Request A is a single patch (one 1-row chunk) that drains mid-batch,
+    so B's first rows join A's tick — the tick genuinely batches two sweep
+    axes.  Mixed ticks run the spectra-stack walk fallback (a different op
+    sequence than solo single-token fused ticks), so the bitwise claims
+    are *determinism* (an identical mixed run reproduces exactly) and
+    *isolation* (A's output is bitwise independent of the other request's
+    DATA sharing its tick); correctness vs the dense path is allclose.
+    """
+    batch = 4
+    cube = (CORE + FOV - 1,) * 3
+    shape_b = (2 * CORE + 1 + FOV - 1, CORE + FOV - 1, 3 * CORE + 2 + FOV - 1)
+    vol_a = rng.normal(size=(1,) + cube).astype(np.float32)
+    vol_b = rng.normal(size=(1,) + shape_b).astype(np.float32)
+    vol_b2 = rng.normal(size=(1,) + shape_b).astype(np.float32)
+    out1, strips, eng = _run_mixed_pair(params, vol_a, vol_b, batch)
+    # correctness: both requests match the dense reference
+    for out, vol in zip(out1, (vol_a, vol_b)):
+        np.testing.assert_allclose(
+            out, _dense(params, vol), rtol=0, atol=2e-3
+        )
+    # strips concatenated along THIS request's sweep axis rebuild out
+    for ax, out in ((1, out1[0]), (2, out1[1])):
+        assert np.array_equal(np.concatenate(strips[ax], axis=1 + ax), out)
+    # the tick shared: fewer ticks than the two solo drains would need
+    # (A alone is 1 tick; B alone is 4 plane-capped ticks)
+    assert eng.ticks <= 4
+    ex = eng.executor
+    assert not ex._sweeps and not ex._sweep_axes  # all scopes closed
+    # determinism: an identical mixed run is bitwise-identical
+    out2, _, _ = _run_mixed_pair(params, vol_a, vol_b, batch)
+    for a, b in zip(out1, out2):
+        assert np.array_equal(a, b)
+    # isolation: swapping B's DATA (same shape/axis) cannot perturb a
+    # single bit of A's output — no cache-key collisions across scopes
+    out3, _, _ = _run_mixed_pair(params, vol_a, vol_b2, batch)
+    assert np.array_equal(out1[0], out3[0])
+    assert not np.array_equal(out1[1], out3[1])  # B really changed
+    # non-reuse engines reject off-axis requests loudly, not silently
+    no_reuse = VolumeEngine(
+        params, NET, prims=["fft_cached" if l.kind == "conv" else "mpf"
+                            for l in NET.layers], m=1, batch=2,
+    )
+    with pytest.raises(ValueError, match="sweep_axis"):
+        no_reuse.submit(VolumeRequest(rid=9, volume=vol_a, sweep_axis=1))
+
+
+@pytest.mark.parametrize("n_workers", [1, 2, 3])
+def test_sharded_halo_parity_on_nonx_axis(params, rng, n_workers):
+    """Sharded fleet on a y-axis sweep: bitwise equal to the single-device
+    engine on the same axis for N in {1,2,3}, measured halo bytes ==
+    ``predict_shard_handoff`` exactly, zero faults."""
+    shape = (2 * CORE + FOV - 1, 3 * CORE + 2 + FOV - 1, CORE + 1 + FOV - 1)
+    vol = rng.normal(size=(1,) + shape).astype(np.float32)
+    ref_eng = VolumeEngine(params, NET, prims=MIX, m=1, batch=3)
+    ref = VolumeRequest(rid=0, volume=vol, sweep_axis=1)
+    ref_eng.submit(ref)
+    ref_eng.run_until_drained()
+    fleet = ShardedVolumeEngine(
+        params, NET, prims=MIX, m=1, batch=3,
+        n_workers=n_workers, sweep_axis=1,
+    )
+    req = VolumeRequest(rid=0, volume=vol)
+    fleet.submit(req)
+    fleet.run_until_drained()
+    assert np.array_equal(req.out, ref.out)
+    st = fleet.last_stats
+    assert st["halo_bytes_in"] == st["predicted_halo_bytes_in"]
+    assert st["redispatches"] == 0 and st["duplicates_dropped"] == 0
+    if n_workers > 1:
+        assert st["halo_exchange_bytes"] > 0  # the boundary really handed off

@@ -329,8 +329,8 @@ def test_engine_device_budget_bounds_concurrent_sweeps(params, rng):
         live, peak_open = set(), [0]
         real_begin, real_end = ex.begin_sweep, ex.end_sweep
 
-        def begin(padded):
-            tok = real_begin(padded)
+        def begin(padded, **kw):
+            tok = real_begin(padded, **kw)
             live.add(tok)
             peak_open[0] = max(peak_open[0], len(live))
             return tok

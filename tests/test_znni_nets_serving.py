@@ -1,0 +1,95 @@
+"""End-to-end smoke of the paper's Table III nets through ``VolumeEngine``.
+
+Wires ``configs/znni_nets.py`` into the serving stack: every net (n337,
+n537, n726, n926) must *plan* — ``plan_fixed`` over the reuse-capable mix
+(overlap-save at the input conv, direct deeper convs, MPF pools) on a
+minimal one-patch volume — and *admit* a request into a ``VolumeEngine``
+built from that plan.  The full serve (drain + finite output of the right
+shape) runs unmarked for n337; the bigger nets' serves are ``slow`` —
+their FOVs (163/117/155) make even one patch minutes of compute.
+
+Direct convolution deeper in the net (rather than fft_cached) keeps the
+compile and memory footprint CI-sized: cached kernel spectra for 80-map
+layers at these FOVs are GBs, the direct path is MBs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.znni_nets import ZNNI_NETS, net_by_name
+from repro.core import convnet, planner
+from repro.core.hw import TPU_V5E
+from repro.serving import VolumeEngine, VolumeRequest
+
+NAMES = tuple(ZNNI_NETS)  # n337, n537, n726, n926
+
+
+def _mix(net):
+    first_conv = next(i for i, l in enumerate(net.layers) if l.kind == "conv")
+    return [
+        "overlap_save" if i == first_conv
+        else ("direct" if l.kind == "conv" else "mpf")
+        for i, l in enumerate(net.layers)
+    ]
+
+
+def _one_patch_shape(net):
+    """Smallest volume shape serving exactly one output patch at m=1."""
+    p = net.total_pooling()
+    return (p + net.field_of_view() - 1,) * 3
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_plan_and_admit(name):
+    """Every Table III net prices a fixed reuse mix and admits a request."""
+    net = net_by_name(name)
+    shape = _one_patch_shape(net)
+    plan = planner.plan_fixed(
+        net, TPU_V5E, _mix(net), m=1, batch=1, volume_shape=shape
+    )
+    assert plan is not None, f"{name} failed to plan"
+    assert plan.throughput > 0
+    assert plan.sweep is not None  # sweep-count simulation ran
+    params = convnet.init_params(jax.random.PRNGKey(0), net)
+    eng = VolumeEngine(
+        params, net, plan, batch=1, deep_reuse=False, bucket_shapes=False
+    )
+    vol = np.zeros((1,) + shape, np.float32)
+    req = VolumeRequest(rid=0, volume=vol)
+    eng.submit(req)
+    assert req._remaining == 1  # one-patch tiling admitted
+    assert req.out.shape == (net.layers[-1].out_channels,) + (net.total_pooling(),) * 3
+
+
+@pytest.mark.parametrize(
+    "name",
+    [
+        "n337",
+        pytest.param("n537", marks=pytest.mark.slow),
+        pytest.param("n726", marks=pytest.mark.slow),
+        pytest.param("n926", marks=pytest.mark.slow),
+    ],
+)
+def test_serve_one_volume(name, rng):
+    """The net serves a one-patch volume end to end: drained queue, finite
+    output of shape (out_maps, P, P, P)."""
+    net = net_by_name(name)
+    shape = _one_patch_shape(net)
+    plan = planner.plan_fixed(
+        net, TPU_V5E, _mix(net), m=1, batch=1, volume_shape=shape
+    )
+    params = convnet.init_params(jax.random.PRNGKey(1), net)
+    eng = VolumeEngine(
+        params, net, plan, batch=1, deep_reuse=False, bucket_shapes=False
+    )
+    vol = rng.normal(size=(1,) + shape).astype(np.float32) * 0.1
+    req = VolumeRequest(rid=0, volume=vol)
+    eng.submit(req)
+    done = eng.run_until_drained()
+    assert [r.rid for r in done] == [0]
+    p = net.total_pooling()
+    assert req.out.shape == (net.layers[-1].out_channels, p, p, p)
+    assert np.all(np.isfinite(req.out))
+    assert float(np.abs(req.out).max()) > 0
